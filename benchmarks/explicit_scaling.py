@@ -1,0 +1,60 @@
+"""Paper Fig. 4a + Eq. 6: explicit FTCS weak scaling.
+
+Measures CPU-JAX iteration time at several workloads per processor (W) and
+reports, per the paper's methodology:
+  * measured iterations/s on this host,
+  * the WSE model rate  R = F_c/(6.5·W + 78)   (Eq. 6),
+  * the OpenFOAM/Joule fits (Eqs. 4–5) at the matching cell count,
+  * the TPU-v5e 3-term roofline rate for the same brick.
+
+Weak-scaling *flatness* (the paper's headline property) is validated
+structurally: per-cell cost is measured at growing grid sizes and must stay
+within a small factor (no communication cliff exists inside one device; the
+sharded variant's halo volume is charged in the roofline model).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs.heat3d import HeatConfig, make_field
+from repro.core.explicit import ftcs_solve
+from repro.core.perfmodel import (ftcs_brick_cost, openfoam_explicit_rate,
+                                  roofline_time, wse_explicit_rate)
+
+STEPS = 10
+
+
+def run() -> None:
+    for nx, ny, nz in [(32, 32, 32), (48, 48, 48), (64, 64, 64),
+                       (102, 102, 102)]:
+        cfg = HeatConfig(nx=nx, ny=ny, nz=nz)
+        T0 = jnp.asarray(make_field(cfg))
+        us = time_fn(lambda T: ftcs_solve(T, cfg.omega, STEPS), T0) / STEPS
+        cells = cfg.cells
+        meas_rate = 1e6 / us
+        wse = wse_explicit_rate(cells)          # whole grid on one "tile"
+        # paper comparison at the closest benchmarked workload per core
+        of = openfoam_explicit_rate(15625, cells)
+        tpu = roofline_time(ftcs_brick_cost(nx // 4, ny // 4, nz))
+        emit(f"explicit_weak_{nx}x{ny}x{nz}", us,
+             f"cells={cells};meas_it_s={meas_rate:.1f};"
+             f"eq6_wse_it_s={wse:.1f};eq5_openfoam_it_s={of:.1f};"
+             f"tpu_roofline_it_s={tpu['rate']:.1f};"
+             f"tpu_bound={tpu['bound']}")
+
+    # per-cell cost flatness across sizes (weak-scaling surrogate)
+    base = None
+    for n in (32, 48, 64):
+        cfg = HeatConfig(nx=n, ny=n, nz=n)
+        T0 = jnp.asarray(make_field(cfg))
+        us = time_fn(lambda T: ftcs_solve(T, cfg.omega, STEPS), T0) / STEPS
+        per_cell = us / cfg.cells
+        base = base or per_cell
+        emit(f"explicit_percell_{n}", us,
+             f"ns_per_cell={1e3 * per_cell:.3f};flat_ratio={per_cell / base:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Paper Fig. 4b + Eq. 16 + §3.2.2: implicit CG benchmark.
+
+Per paper table row: measured CG inner-iteration time, the Eq. 16 WSE model,
+the OpenFOAM fits (Eqs. 13–15), and the explicit/implicit rate ratio the
+paper highlights (≈7.7× at full fabric, small W).  Also benchmarks the
+beyond-paper variants (pipelined CG, Chebyshev) at identical workloads.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.configs.heat3d import HeatConfig, make_field
+from repro.core.explicit import ftcs_solve
+from repro.core.implicit import btcs_solve
+from repro.core.perfmodel import (WSE_CLOCK_HZ, openfoam_implicit_rate,
+                                  wse_dot_time, wse_explicit_rate,
+                                  wse_implicit_rate)
+
+ITERS = 25
+
+
+def run() -> None:
+    cfg = HeatConfig(nx=48, ny=48, nz=48)
+    T0 = jnp.asarray(make_field(cfg))
+
+    for method in ("cg", "pipecg", "chebyshev"):
+        us = time_fn(
+            lambda T, m=method: btcs_solve(T, cfg.omega, 1, method=m,
+                                           tol=0.0, maxiter=ITERS)[0], T0)
+        per_iter = us / ITERS
+        emit(f"implicit_{method}_inner_iter", per_iter,
+             f"cells={cfg.cells};meas_inner_it_s={1e6 / per_iter:.1f}")
+
+    # Eq. 16 vs Eq. 6 — the paper's 7.7× explicit/implicit ratio at full
+    # fabric (X=750, Y=950) and small W
+    w_small = 50
+    r_exp = wse_explicit_rate(w_small)
+    r_imp = wse_implicit_rate(w_small, 750, 950)
+    emit("wse_model_explicit_over_implicit", 0.0,
+         f"W={w_small};ratio={r_exp / r_imp:.2f};paper_claims=7.7")
+
+    # Eq. 17 at the paper's maximum tested size: 3.25 us dot product
+    t_dot = wse_dot_time(1000, 750, 950)
+    emit("wse_model_dot_us", t_dot * 1e6,
+         f"paper_claims_us=3.25;model_us={t_dot * 1e6:.2f}")
+
+    # OpenFOAM implicit fits at the paper's three workloads (Eqs. 13–15)
+    for w, cells in [(13824, 5.8e6), (21952, 4.87e6), (27000, 1.57e8)]:
+        emit(f"openfoam_implicit_fit_W{w}", 0.0,
+             f"cells={cells:.2e};eq_it_s={openfoam_implicit_rate(w, cells):.1f}")
+
+    # measured explicit/implicit ratio on this host (same grid)
+    us_e = time_fn(lambda T: ftcs_solve(T, cfg.omega, ITERS), T0) / ITERS
+    us_i = time_fn(
+        lambda T: btcs_solve(T, cfg.omega, 1, method="cg", tol=0.0,
+                             maxiter=ITERS)[0], T0) / ITERS
+    emit("measured_explicit_over_implicit", 0.0,
+         f"ratio={us_i / us_e:.2f}")
+
+
+if __name__ == "__main__":
+    run()

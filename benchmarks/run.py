@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  * explicit_scaling    — Fig. 4a / Eq. 6 / Eqs. 4–5
+  * implicit_scaling    — Fig. 4b / Eq. 16 / Eqs. 13–15 / §3.2.2 ratio
+  * reduction           — Eq. 17 / §3.2.2 dot-product analysis
+  * distributed_model   — Table 1 / Table 2 / Eq. 12 / §5 headline speedups
+  * kernels_bench       — Fig. 3 fused-RPC comparison + Pallas kernels
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (distributed_model, explicit_scaling,
+                            implicit_scaling, kernels_bench, reduction)
+    print("name,us_per_call,derived")
+    mods = {
+        "explicit_scaling": explicit_scaling,
+        "implicit_scaling": implicit_scaling,
+        "reduction": reduction,
+        "distributed_model": distributed_model,
+        "kernels_bench": kernels_bench,
+    }
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    for name, mod in mods.items():
+        if only and only != name:
+            continue
+        print(f"# --- {name} ---")
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

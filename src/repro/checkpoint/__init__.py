@@ -1,0 +1,4 @@
+"""repro.checkpoint — npz-based save/restore with async write + resharding."""
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

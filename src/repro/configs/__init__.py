@@ -1,0 +1,45 @@
+"""Architecture registry: ``get_config(arch)`` / ``ARCHS``."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.configs.base import (LONG_CONTEXT_ARCHS, SHAPES, MoECfg,
+                                ModelConfig, ShapeCfg, SSMCfg, cells_for)
+
+_FACTORIES: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _FACTORIES[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ModelConfig:
+    _load_all()
+    return _FACTORIES[name]()
+
+
+def arch_names():
+    _load_all()
+    return sorted(_FACTORIES)
+
+
+def _load_all():
+    if _FACTORIES.get("_loaded"):
+        return
+    from repro.configs import (chameleon_34b, deepseek_v2_236b, glm4_9b,  # noqa
+                               minicpm3_4b, mixtral_8x7b, musicgen_medium,
+                               qwen3_0_6b, rwkv6_7b, starcoder2_3b,
+                               zamba2_2_7b)
+    _FACTORIES["_loaded"] = lambda: None
+
+
+ARCHS = ["glm4-9b", "minicpm3-4b", "qwen3-0.6b", "starcoder2-3b",
+         "musicgen-medium", "chameleon-34b", "mixtral-8x7b",
+         "deepseek-v2-236b", "rwkv6-7b", "zamba2-2.7b"]
+
+__all__ = ["ARCHS", "SHAPES", "LONG_CONTEXT_ARCHS", "MoECfg", "ModelConfig",
+           "ShapeCfg", "SSMCfg", "cells_for", "get_config", "arch_names",
+           "register"]

@@ -1,0 +1,23 @@
+"""repro.core — the paper's contribution: the WFA field-equation API in JAX.
+
+Public surface:
+
+* :class:`~repro.core.field.Field` + :class:`~repro.core.program.WFAInterface`
+  + :class:`~repro.core.program.ForLoop` — the NumPy-like frontend (Fig. 3);
+* :mod:`~repro.core.explicit` — FTCS solver (Eq. 2), sharded + overlapped +
+  wide-halo variants;
+* :mod:`~repro.core.implicit` — BTCS/CG family (Eq. 3): classic, pipelined,
+  Chebyshev;
+* :mod:`~repro.core.perfmodel` — the paper's Eqs. 4-6/12-17 and the TPU
+  three-term roofline.
+"""
+from repro.core.field import Field
+from repro.core.program import ForLoop, WFAInterface
+
+# paper-compatible aliases (Fig. 3 spells these WSE_*)
+WSE_Array = Field
+WSE_For_Loop = ForLoop
+WSE_Interface = WFAInterface
+
+__all__ = ["Field", "ForLoop", "WFAInterface",
+           "WSE_Array", "WSE_For_Loop", "WSE_Interface"]

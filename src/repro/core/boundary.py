@@ -1,0 +1,62 @@
+"""Boundary handling — the "Moat" of the WFA.
+
+The WFA surrounds Worker tiles with Moat tiles that pin boundary cells and
+feed edge data so tensor ops complete "without stalls or hangs".  In the JAX
+formulation boundary cells live inside the global array; updates write only
+interior cells (the mask below), so Dirichlet values persist by construction
+— exactly Eq. 2's ``T_C^{n+1} = T_C^n = γ  ∀ C ∈ bc``.
+
+Masks are built lazily per (shape, module) and cached; in distributed mode
+each brick derives its *local* mask from its mesh coordinates (only bricks on
+the domain edge own Moat cells).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+
+@functools.lru_cache(maxsize=None)
+def _interior_mask_np(nx: int, ny: int) -> np.ndarray:
+    m = np.zeros((nx, ny, 1), dtype=bool)
+    m[1:-1, 1:-1, :] = True
+    return m
+
+
+def interior_mask(shape_xy, xp):
+    """(X, Y, 1) bool mask: True on cells whose x/y are interior.
+
+    Z interiority is expressed by the update's target z-slice itself, so the
+    mask only handles the X/Y Moat.
+    """
+    nx, ny = shape_xy
+    m = _interior_mask_np(nx, ny)
+    if xp is np:
+        return m
+    return xp.asarray(m)
+
+
+@functools.lru_cache(maxsize=None)
+def _local_interior_mask_np(bx: int, by: int, at_x_lo: bool, at_x_hi: bool,
+                            at_y_lo: bool, at_y_hi: bool) -> np.ndarray:
+    m = np.ones((bx, by, 1), dtype=bool)
+    if at_x_lo:
+        m[0, :, :] = False
+    if at_x_hi:
+        m[-1, :, :] = False
+    if at_y_lo:
+        m[:, 0, :] = False
+    if at_y_hi:
+        m[:, -1, :] = False
+    return m
+
+
+def local_interior_mask(brick_xy, coords, mesh_xy, xp):
+    """Per-brick Moat mask from mesh coordinates (distributed mode)."""
+    bx, by = brick_xy
+    cx, cy = coords
+    mx, my = mesh_xy
+    m = _local_interior_mask_np(bx, by, cx == 0, cx == mx - 1,
+                                cy == 0, cy == my - 1)
+    return m if xp is np else xp.asarray(m)

@@ -1,0 +1,188 @@
+"""Explicit FTCS heat-equation solver (paper Eq. 2) — functional API.
+
+Three tiers, all computing the same update:
+
+* :func:`ftcs_step` / :func:`ftcs_solve` — single-device reference (the
+  shape the WFA "general-purpose implementation" lowers to);
+* :func:`make_sharded_ftcs` — brick-decomposed ``shard_map`` solver with
+  halo exchange; ``overlap=True`` splits interior/edge compute so XLA can
+  hide the ppermute behind the interior stencil (the WFA's background-thread
+  send/recv overlap); ``halo_depth=k`` enables communication-avoiding wide
+  halos (k local steps per exchange) — a beyond-paper optimization;
+* ``use_kernel=True`` routes the per-brick update through the fused Pallas
+  stencil kernel (the paper's single-RPC custom kernel, Fig. 3 right).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.halo import halo_pad, local_moat_mask
+
+
+# ---------------------------------------------------------------------------
+# single-device reference
+# ---------------------------------------------------------------------------
+
+def interior_mask3d(shape, xp=jnp):
+    nx, ny, nz = shape
+    m = np.zeros(shape, dtype=bool)
+    m[1:-1, 1:-1, 1:-1] = True
+    return m if xp is np else xp.asarray(m)
+
+
+def neighbor_sum_padded(P):
+    """6-neighbour sum from a halo-padded (bx+2, by+2, Z) brick → (bx,by,Z)."""
+    c = P[1:-1, 1:-1, :]
+    s = (P[:-2, 1:-1, :] + P[2:, 1:-1, :] + P[1:-1, :-2, :] + P[1:-1, 2:, :])
+    zp = jnp.concatenate([c[:, :, 1:], c[:, :, -1:]], axis=2)
+    zm = jnp.concatenate([c[:, :, :1], c[:, :, :-1]], axis=2)
+    return s + zp + zm
+
+
+def ftcs_step(T, w: float, mask=None):
+    """One FTCS step on the full (X, Y, Z) grid; boundaries stay fixed."""
+    if mask is None:
+        mask = interior_mask3d(T.shape)
+    P = jnp.pad(T, ((1, 1), (1, 1), (0, 0)))  # zero halo; masked cells unaffected
+    new = (1.0 - 6.0 * w) * T + w * neighbor_sum_padded(P)
+    return jnp.where(mask, new, T)
+
+
+@partial(jax.jit, static_argnames=("steps", "w"))
+def ftcs_solve(T0, w: float, steps: int):
+    mask = interior_mask3d(T0.shape)
+    return jax.lax.fori_loop(
+        0, steps, lambda i, T: ftcs_step(T, w, mask), T0)
+
+
+# ---------------------------------------------------------------------------
+# distributed bricks
+# ---------------------------------------------------------------------------
+
+def _fix_z_boundary(new, T):
+    return jnp.concatenate([T[:, :, :1], new[:, :, 1:-1], T[:, :, -1:]], axis=2)
+
+
+def ftcs_brick_step(T, w, mask, ax_x, ax_y, mx, my):
+    """Plain halo-exchange step on one brick (paper-faithful schedule)."""
+    P = halo_pad(T, 1, ax_x, ax_y, mx, my)
+    new = (1.0 - 6.0 * w) * T + w * neighbor_sum_padded(P)
+    return _fix_z_boundary(jnp.where(mask, new, T), T)
+
+
+def ftcs_brick_step_overlapped(T, w, mask, ax_x, ax_y, mx, my):
+    """Interior/edge split: ppermute overlaps with the interior stencil.
+
+    The interior block (cells ≥1 from the brick edge) only reads local data,
+    so XLA schedules it concurrently with the halo collective — the TPU
+    analogue of the WFA launching send/recv background threads and summing
+    local top/bottom first.
+    """
+    P = halo_pad(T, 1, ax_x, ax_y, mx, my)          # collective-start
+    # interior stencil — no halo dependency
+    c = T[1:-1, 1:-1, :]
+    s_in = (T[:-2, 1:-1, :] + T[2:, 1:-1, :]
+            + T[1:-1, :-2, :] + T[1:-1, 2:, :])
+    zp = jnp.concatenate([c[:, :, 1:], c[:, :, -1:]], axis=2)
+    zm = jnp.concatenate([c[:, :, :1], c[:, :, :-1]], axis=2)
+    s_in = s_in + zp + zm
+    # edge strips — read the received halo (collective-done)
+    full = neighbor_sum_padded(P)
+    s = jnp.concatenate([
+        full[:1, :, :],
+        jnp.concatenate([full[1:-1, :1, :], s_in, full[1:-1, -1:, :]], axis=1),
+        full[-1:, :, :],
+    ], axis=0)
+    new = (1.0 - 6.0 * w) * T + w * s
+    return _fix_z_boundary(jnp.where(mask, new, T), T)
+
+
+def _padded_moat_mask(bx, by, h, ax_x, ax_y, mx, my):
+    """Interior mask over a depth-h padded brick (global coords, traced)."""
+    cx = jax.lax.axis_index(ax_x)
+    cy = jax.lax.axis_index(ax_y)
+    px, py = bx + 2 * h, by + 2 * h
+    gx = cx * bx - h + jax.lax.broadcasted_iota(jnp.int32, (px, py, 1), 0)
+    gy = cy * by - h + jax.lax.broadcasted_iota(jnp.int32, (px, py, 1), 1)
+    nx, ny = mx * bx, my * by
+    return (gx > 0) & (gx < nx - 1) & (gy > 0) & (gy < ny - 1)
+
+
+def ftcs_brick_step_wide(T, w, k: int, ax_x, ax_y, mx, my):
+    """Communication-avoiding: one depth-k exchange, k local steps.
+
+    After local step j, padded cells at distance ≥ j from the padded edge are
+    exact; the central brick (distance k) is exact after k steps.  Domain-
+    boundary cells are pinned by the padded moat mask, so out-of-domain halo
+    junk never propagates inward (it is only adjacent to pinned cells).
+    """
+    bx, by, _ = T.shape
+    P = halo_pad(T, k, ax_x, ax_y, mx, my)
+    mask = _padded_moat_mask(bx, by, k, ax_x, ax_y, mx, my)
+
+    def one(j, P):
+        PP = jnp.pad(P, ((1, 1), (1, 1), (0, 0)))
+        new = (1.0 - 6.0 * w) * P + w * neighbor_sum_padded(PP)
+        return _fix_z_boundary(jnp.where(mask, new, P), P)
+
+    P = jax.lax.fori_loop(0, k, one, P)
+    return P[k:-k, k:-k, :]
+
+
+def make_sharded_ftcs(mesh, shape, w: float, *, overlap: bool = False,
+                      halo_depth: int = 1, use_kernel=False,
+                      steps_per_call: int = 1):
+    """Build a jitted, brick-decomposed FTCS stepper over ``mesh``.
+
+    Returns ``(step_fn, sharding)``; ``step_fn(T_global)`` advances
+    ``steps_per_call`` (× ``halo_depth``) time steps.  ``use_kernel``:
+    True → fused Pallas stencil on the padded brick; ``"planes"`` → the
+    fully-fused kernel taking raw halo planes (no pad-concat, in-kernel
+    moat — the optimized §Perf variant).
+    """
+    ax_x, ax_y = mesh.axis_names[-2], mesh.axis_names[-1]
+    mx, my = mesh.shape[ax_x], mesh.shape[ax_y]
+    nx, ny, nz = shape
+    assert nx % mx == 0 and ny % my == 0, (shape, mesh.shape)
+    bx, by = nx // mx, ny // my
+    spec = jax.sharding.PartitionSpec(ax_x, ax_y, None)
+    sharding = jax.sharding.NamedSharding(mesh, spec)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+    from repro.core.halo import _ppermute_shift
+
+    def local(T):
+        mask = local_moat_mask(bx, by, ax_x, ax_y, mx, my)
+
+        def body(i, T):
+            if halo_depth > 1:
+                return ftcs_brick_step_wide(T, w, halo_depth, ax_x, ax_y, mx, my)
+            if use_kernel == "planes":
+                xlo = _ppermute_shift(T[-1:, :, :], ax_x, mx, +1)
+                xhi = _ppermute_shift(T[:1, :, :], ax_x, mx, -1)
+                ylo = _ppermute_shift(T[:, -1:, :], ax_y, my, +1)
+                yhi = _ppermute_shift(T[:, :1, :], ax_y, my, -1)
+                coords = jnp.stack(
+                    [jax.lax.axis_index(ax_x),
+                     jax.lax.axis_index(ax_y)]).astype(jnp.int32)[None, :]
+                return kops.stencil7_planes(T, xlo, xhi, ylo, yhi, coords,
+                                            1.0 - 6.0 * w, w, nx, ny)
+            if use_kernel:
+                P = halo_pad(T, 1, ax_x, ax_y, mx, my)
+                new = kops.stencil7(P, 1.0 - 6.0 * w, w)
+                return _fix_z_boundary(jnp.where(mask, new, T), T)
+            if overlap:
+                return ftcs_brick_step_overlapped(T, w, mask, ax_x, ax_y, mx, my)
+            return ftcs_brick_step(T, w, mask, ax_x, ax_y, mx, my)
+
+        return jax.lax.fori_loop(0, steps_per_call, body, T)
+
+    step = jax.jit(jax.shard_map(local, mesh=mesh, in_specs=(spec,),
+                                 out_specs=spec, check_vma=False))
+    return step, sharding

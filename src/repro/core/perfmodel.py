@@ -1,0 +1,132 @@
+"""Analytic performance models — the paper's equations + TPU analogues.
+
+Paper equations implemented verbatim (units: iterations/s unless noted):
+
+* Eq. 4/5:   OpenFOAM explicit weak scaling on Joule 2.0
+* Eq. 6:     WSE explicit roofline    R_i = F_c / (6.5 W + 78)
+* Eq. 11/12: GPU bound  t_min = 8W / w_m ;  R_max = w_m / (8W)
+* Eq. 13-15: OpenFOAM implicit weak scaling
+* Eq. 16:    WSE CG roofline          R_i = F_c / (10.5 W + 2(X+Y) + 337)
+* Eq. 17:    WSE dot product          t = (W + X + Y + 66) / F_c
+
+TPU adaptation: the WSE counts cycles because compute, memory and fabric all
+run at one cycle per element; a TPU chip does not, so the analogue is the
+three-term roofline  t = max(t_compute, t_memory) + t_collective  (collective
+unoverlapped, matching Eq. 7's max(comp, comm) + t_b structure), evaluated
+from per-step FLOPs / bytes / collective-bytes.  Constants are TPU v5e.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+# -- hardware constants ------------------------------------------------------
+
+WSE_CLOCK_HZ = 850e6          # CS-2 nominal fabric clock (used for Eq. 6/16)
+
+TPU_V5E_BF16_FLOPS = 197e12   # peak bf16 FLOP/s per chip
+TPU_V5E_FP32_FLOPS = 98.5e12  # fp32 ≈ half bf16 on v5e MXU
+TPU_V5E_HBM_BW = 819e9        # B/s per chip
+TPU_V5E_ICI_BW = 50e9         # B/s per link (~, per brief)
+TPU_V5E_ICI_LAT = 1e-6        # s per hop (order of magnitude)
+
+
+# -- paper equations ---------------------------------------------------------
+
+def wse_explicit_rate(W: float, fc: float = WSE_CLOCK_HZ) -> float:
+    """Eq. 6 — perfect weak scaling: no dependence on processor count."""
+    return fc / (6.5 * W + 78.0)
+
+
+def wse_implicit_rate(W: float, X: int, Y: int,
+                      fc: float = WSE_CLOCK_HZ) -> float:
+    """Eq. 16 — CG iteration rate; 2(X+Y) is the dual-reduction latency."""
+    return fc / (10.5 * W + 2.0 * (X + Y) + 337.0)
+
+
+def wse_dot_time(W: float, X: int, Y: int, fc: float = WSE_CLOCK_HZ) -> float:
+    """Eq. 17 — one dot product (reduce-to-center + broadcast), seconds."""
+    return (W + X + Y + 66.0) / fc
+
+
+def openfoam_explicit_rate(W: int, n_cells: float) -> float:
+    """Eqs. 4–5 — measured Joule 2.0 fits at the two benchmarked workloads."""
+    if W == 4096:
+        return 1.36e4 - 2.55e-4 * n_cells
+    if W == 15625:
+        return 4.20e3 - 1.37e-5 * n_cells
+    raise ValueError(f"no fit for W={W}")
+
+
+def openfoam_implicit_rate(W: int, n_cells: float) -> float:
+    """Eqs. 13–15."""
+    fits = {13824: (3.98e3, 2.75e-5), 21952: (2.45e3, 8.63e-6),
+            27000: (2.05e3, 5.66e-6)}
+    if W not in fits:
+        raise ValueError(f"no fit for W={W}")
+    a, b = fits[W]
+    return a - b * n_cells
+
+
+def gpu_max_rate(W: float, mem_bw: float) -> float:
+    """Eq. 12 — optimistic single-field bound: R = w_m / (8W) (fp32, D_k=0)."""
+    return mem_bw / (8.0 * W)
+
+
+# -- TPU three-term roofline for the field solver ----------------------------
+
+@dataclasses.dataclass
+class StepCost:
+    flops: float              # per chip per iteration
+    hbm_bytes: float          # per chip per iteration
+    collective_bytes: float   # per chip per iteration (ICI)
+    hops: int = 1             # ICI hops on the critical path
+
+
+def ftcs_brick_cost(bx: int, by: int, nz: int, dtype_bytes: int = 4,
+                    halo_depth: int = 1) -> StepCost:
+    """Per-chip cost of one FTCS step on a (bx, by, nz) brick.
+
+    8 flops/cell (5 adds for the 6-neighbour sum + fmac + fmul, matching the
+    paper's 8-flop count), 2 reads + 1 write per cell through HBM (stencil
+    kernel re-uses neighbours in VMEM), 4 halo planes of ``halo_depth``.
+    """
+    w = bx * by * nz
+    halo = 2 * (bx + by) * nz * halo_depth * dtype_bytes
+    return StepCost(flops=8.0 * w,
+                    hbm_bytes=2.0 * w * dtype_bytes,
+                    collective_bytes=halo,
+                    hops=1)
+
+
+def cg_brick_cost(bx: int, by: int, nz: int, mesh_x: int, mesh_y: int,
+                  dtype_bytes: int = 4, fused_reductions: bool = False
+                  ) -> StepCost:
+    """Per-chip cost of one classic-CG iteration (SpMV + 2 axpy + 2 dots)."""
+    w = bx * by * nz
+    halo = 2 * (bx + by) * nz * dtype_bytes
+    n_red = 1 if fused_reductions else 2
+    # all-reduce of a scalar: latency-dominated; charge diameter hops
+    hops = n_red * 2 * (mesh_x + mesh_y)
+    return StepCost(flops=15.0 * w,                    # paper: 15 vs 8 flops
+                    hbm_bytes=10.0 * w * dtype_bytes,  # 5 vectors r/p/x/Ap/b
+                    collective_bytes=halo + n_red * 8,
+                    hops=hops)
+
+
+def roofline_time(c: StepCost, *, flops_peak: float = TPU_V5E_FP32_FLOPS,
+                  hbm_bw: float = TPU_V5E_HBM_BW,
+                  ici_bw: float = TPU_V5E_ICI_BW,
+                  hop_lat: float = TPU_V5E_ICI_LAT,
+                  overlap_collective: bool = False) -> dict:
+    """max(compute, memory) + collective  (Eq. 7 structure on TPU terms)."""
+    t_comp = c.flops / flops_peak
+    t_mem = c.hbm_bytes / hbm_bw
+    t_coll = c.collective_bytes / ici_bw + c.hops * hop_lat
+    if overlap_collective:
+        total = max(t_comp, t_mem, t_coll)
+    else:
+        total = max(t_comp, t_mem) + t_coll
+    return {"t_compute": t_comp, "t_memory": t_mem, "t_collective": t_coll,
+            "t_total": total, "rate": 1.0 / total,
+            "bound": max(("compute", t_comp), ("memory", t_mem),
+                         ("collective", t_coll), key=lambda kv: kv[1])[0]}

@@ -1,0 +1,204 @@
+"""Program capture and compilation — the analogue of the WFA's RPC bytecode.
+
+The WFA compiles the user's Python into a bytecode sequence that a Control
+Tile broadcasts as RPCs to Worker/Moat tiles.  On TPU the analogous artifact
+is an XLA SPMD executable: we trace the recorded update ops into one step
+function, wrap the time loop in ``lax.fori_loop`` and ``jax.jit`` the result.
+Three backends mirror the WFA's workflow:
+
+* ``numpy``   — the WFA "validation capability" (runs the ops eagerly in NumPy)
+* ``jit``     — single-device compiled execution
+* ``shard_map`` — distributed bricks with halo exchange (see core/halo.py)
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stencil as st
+from repro.core.boundary import interior_mask
+
+_STATE = threading.local()
+
+
+def current_program() -> Optional["Program"]:
+    return getattr(_STATE, "program", None)
+
+
+@dataclasses.dataclass
+class UpdateOp:
+    """One recorded field update: ``field[target_z, 0, 0] = expr``."""
+
+    field_name: str
+    target_z: slice
+    expr: st.StencilExpr
+    loop: Optional["ForLoop"]
+
+
+class ForLoop:
+    """``with ForLoop('time_loop', n):`` — the WFA's ``WSE_For_Loop``."""
+
+    def __init__(self, name: str, n: int):
+        self.name = name
+        self.n = int(n)
+
+    def __enter__(self):
+        p = current_program()
+        if p is None:
+            raise RuntimeError("ForLoop must be used inside a WFAInterface")
+        p._loop_stack.append(self)
+        return self
+
+    def __exit__(self, *exc):
+        current_program()._loop_stack.pop()
+        return False
+
+
+class Program:
+    def __init__(self):
+        self.fields: Dict[str, "Field"] = {}
+        self.ops: List[UpdateOp] = []
+        self._loop_stack: List[ForLoop] = []
+
+    def register_field(self, field) -> None:
+        if field.name in self.fields:
+            raise ValueError(f"duplicate field name {field.name!r}")
+        self.fields[field.name] = field
+
+    def record_update(self, field, target_z: slice, expr: st.StencilExpr):
+        # validate: every term's z slice must match the target length
+        n = field.shape[2]
+        tlen = len(range(*target_z.indices(n)))
+        for t in expr.terms():
+            f = self.fields[t.field_name]
+            zlen = len(range(*t.zslice_obj().indices(f.shape[2])))
+            if zlen != tlen:
+                raise ValueError(
+                    f"term {t.field_name}[{t.zslice}] length {zlen} != "
+                    f"target length {tlen}"
+                )
+        loop = self._loop_stack[-1] if self._loop_stack else None
+        self.ops.append(UpdateOp(field.name, target_z, expr, loop))
+
+
+class WFAInterface:
+    """The user-facing entry point (the WFA's ``WSE_Interface``).
+
+    ``with WFAInterface() as wse:`` activates a program; Fields created and
+    updated inside the context are recorded; ``wse.make(answer=...)``
+    compiles and runs, returning the final value of ``answer``.
+
+    It can also be used without the context-manager form, matching the
+    paper's flat-script style: instantiation activates the program and
+    ``make`` deactivates it.
+    """
+
+    def __init__(self):
+        if current_program() is not None:
+            raise RuntimeError("another WFAInterface program is active")
+        self.program = Program()
+        _STATE.program = self.program
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        if current_program() is self.program:
+            _STATE.program = None
+        return False
+
+    # -- execution ---------------------------------------------------------
+    def make(self, answer, backend: str = "jit", mesh=None):
+        """Compile and run the recorded program; returns ``answer``'s data.
+
+        (the WFA's ``make_WSE``; ``backend='numpy'`` is its validation mode.)
+        """
+        try:
+            env = {n: f.init_data for n, f in self.program.fields.items()}
+            if backend == "numpy":
+                out = _run_numpy(self.program, env)
+            elif backend == "jit":
+                out = _run_jax(self.program, env)
+            elif backend == "shard_map":
+                from repro.core.halo import run_sharded
+                out = run_sharded(self.program, env, mesh=mesh)
+            else:
+                raise ValueError(f"unknown backend {backend!r}")
+        finally:
+            if current_program() is self.program:
+                _STATE.program = None
+        return np.asarray(out[answer.name])
+
+    # paper-compatible alias
+    make_WSE = make
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+def _group_ops(program: Program):
+    """Group consecutive ops that share a loop: [(loop_or_None, [ops])]."""
+    groups = []
+    for op in program.ops:
+        if groups and groups[-1][0] is op.loop:
+            groups[-1][1].append(op)
+        else:
+            groups.append((op.loop, [op]))
+    return groups
+
+
+def _apply_op(op: UpdateOp, env, xp, roll):
+    val = st.evaluate(op.expr, env, op.target_z, xp, roll)
+    field = env[op.field_name]
+    nx, ny, _ = field.shape
+    mask = interior_mask((nx, ny), xp)  # (X, Y, 1): Moat cells stay fixed
+    if xp is np:
+        new = field.copy()
+        new[:, :, op.target_z] = xp.where(
+            mask, val, field[:, :, op.target_z])
+        return new
+    new_z = xp.where(mask, val, field[:, :, op.target_z])
+    start = op.target_z.indices(field.shape[2])[0]
+    return jax.lax.dynamic_update_slice(field, new_z, (0, 0, start))
+
+
+def _run_numpy(program: Program, env):
+    env = {k: v.copy() for k, v in env.items()}
+    roll = lambda a, s, ax: np.roll(a, s, axis=ax)
+    for loop, ops in _group_ops(program):
+        n = loop.n if loop is not None else 1
+        for _ in range(n):
+            for op in ops:
+                env[op.field_name] = _apply_op(op, env, np, roll)
+    return env
+
+
+def _run_jax(program: Program, env):
+    env = {k: jnp.asarray(v) for k, v in env.items()}
+    roll = lambda a, s, ax: jnp.roll(a, s, axis=ax)
+
+    def body(ops):
+        def f(e):
+            e = dict(e)
+            for op in ops:
+                e[op.field_name] = _apply_op(op, e, jnp, roll)
+            return e
+        return f
+
+    @jax.jit
+    def run(env):
+        for loop, ops in _group_ops(program):
+            step = body(ops)
+            if loop is None:
+                env = step(env)
+            else:
+                env = jax.lax.fori_loop(0, loop.n, lambda i, e: step(e), env)
+        return env
+
+    return jax.device_get(run(env))

@@ -1,0 +1,4 @@
+"""repro.data — deterministic token pipeline with packing + host sharding."""
+from repro.data.pipeline import TokenDataset, pack_documents, shard_batch
+
+__all__ = ["TokenDataset", "pack_documents", "shard_batch"]

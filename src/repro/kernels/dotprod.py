@@ -1,0 +1,47 @@
+"""Fused dual dot-product — one pass for CG's two reductions.
+
+Pipelined CG needs (r·r, w·r) at the same point; computing them separately
+sweeps r twice through HBM.  This kernel streams the operand tiles once and
+emits both partials per block — the memory-side half of the optimization
+whose network-side half is the single fused ``psum`` (see
+``core.implicit.make_sharded_implicit``).  Eq. 17 prices each WSE reduction
+at (W + X + Y + 66) cycles; fusing halves both the W sweep and the (X+Y)
+tree traffic.
+
+Operands arrive as (rows, cols) 2-D tiles (the wrapper in ops.py reshapes
+bricks); blocks are (rb, 128)-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.stencil7 import _pick_block
+
+
+def _dual_dot_body(a_ref, b_ref, c_ref, d_ref, out_ref):
+    a, b, c, d = a_ref[...], b_ref[...], c_ref[...], d_ref[...]
+    out_ref[0, 0] = jnp.sum(a * b, dtype=jnp.float32)
+    out_ref[0, 1] = jnp.sum(c * d, dtype=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dual_dot_2d(a, b, c, d, block=(256, 128), interpret: bool = False):
+    """a,b,c,d: (rows, cols) → (nblocks, 2) partials; sum(axis=0) = dots."""
+    rows, cols = a.shape
+    rb = _pick_block(rows, block[0])
+    cb = _pick_block(cols, block[1])
+    grid = (rows // rb, cols // cb)
+    spec = pl.BlockSpec((rb, cb), lambda i, j: (i, j))
+    out = pl.pallas_call(
+        _dual_dot_body,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=pl.BlockSpec((1, 2), lambda i, j: (i * grid[1] + j, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0] * grid[1], 2), jnp.float32),
+        interpret=interpret,
+    )(a, b, c, d)
+    return out

@@ -1,0 +1,67 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On a TPU backend the kernels compile via Mosaic; on CPU (this container, and
+any unit-test environment) they execute under ``interpret=True`` so the same
+call sites work everywhere.  Set ``REPRO_FORCE_INTERPRET=0`` to override.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dotprod as _dotprod
+from repro.kernels import spmv as _spmv
+from repro.kernels import stencil7 as _stencil7
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_FORCE_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def stencil7(P, c_diag: float, c_off: float, block=(8, 128)):
+    """(bx+2, by+2, Z) halo-padded brick → fused affine 7-point stencil."""
+    return _stencil7.affine_stencil(P, float(c_diag), float(c_off),
+                                    block=block, interpret=_interpret())
+
+
+def stencil7_planes(T, xlo, xhi, ylo, yhi, coords, c_diag, c_off,
+                    nx: int, ny: int, block=(8, 128)):
+    """Fully-fused FTCS step (unpadded brick + halo planes + in-kernel moat).
+
+    The optimized explicit path: no pad-concat, no masking pass — see
+    EXPERIMENTS.md §Perf (heat explicit iterations).
+    """
+    return _stencil7.stencil_planes(T, xlo, xhi, ylo, yhi, coords,
+                                    float(c_diag), float(c_off), nx, ny,
+                                    block=block, interpret=_interpret())
+
+
+def spmv_hex(P, c_diag: float, c_off: float, block=(8, 128)):
+    """SpMV only (discards the fused dot) — used by the CG operator."""
+    av, _ = _spmv.spmv_dot(P, float(c_diag), float(c_off), block=block,
+                           interpret=_interpret())
+    return av
+
+
+def spmv_hex_dot(P, c_diag: float, c_off: float, block=(8, 128)):
+    """Fused SpMV + brick-local p·Ap.  Returns (Ap, scalar)."""
+    av, partials = _spmv.spmv_dot(P, float(c_diag), float(c_off), block=block,
+                                  interpret=_interpret())
+    return av, jnp.sum(partials, dtype=jnp.float32)
+
+
+def dual_dot(a, b, c, d, block=(256, 128)):
+    """Brick-local fused dual dot: returns jnp.stack([a·b, c·d])."""
+    def to2d(x):
+        n = x.size
+        cols = 128 if n % 128 == 0 else 1
+        return x.reshape(n // cols, cols)
+
+    out = _dotprod.dual_dot_2d(to2d(a), to2d(b), to2d(c), to2d(d),
+                               block=block, interpret=_interpret())
+    return jnp.sum(out, axis=0, dtype=jnp.float32)

@@ -1,0 +1,66 @@
+"""Fused BTCS SpMV + partial dot — the CG inner-loop hot path.
+
+Classic CG needs ``Ap`` and then the scalar ``p·Ap``.  Doing them separately
+costs an extra full HBM sweep of two vectors — on the WSE the FMAC runs while
+data streams; the TPU analogue is to fuse: each grid block computes its
+``Ap`` tile *and* accumulates the tile's ``p·Ap`` partial in VMEM, writing a
+per-block scalar.  The host-side wrapper sums the (gx·gy,) partials (a few
+hundred floats) and the mesh-level ``psum`` finishes the reduction — exactly
+the paper's reduce-to-center tree with the tile-local sum fused into the
+compute pass (Fig. 2c).
+
+Layout matches :mod:`repro.kernels.stencil7`: overlapping halo windows via
+``pl.Element``; partials land in a (gx, gy) fp32 output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.stencil7 import _pick_block
+
+
+def _spmv_dot_body(c_diag: float, c_off: float, p_ref, o_ref, dot_ref):
+    x = p_ref[...]
+    c = x[1:-1, 1:-1, :]
+    s = (x[:-2, 1:-1, :] + x[2:, 1:-1, :]
+         + x[1:-1, :-2, :] + x[1:-1, 2:, :])
+    zp = jnp.concatenate([c[:, :, 1:], c[:, :, -1:]], axis=2)
+    zm = jnp.concatenate([c[:, :, :1], c[:, :, :-1]], axis=2)
+    av = c_diag * c + c_off * (s + zp + zm)
+    o_ref[...] = av
+    dot_ref[0, 0] = jnp.sum(c * av, dtype=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("c_diag", "c_off", "block",
+                                             "interpret"))
+def spmv_dot(P, c_diag: float, c_off: float, block=(8, 128),
+             interpret: bool = False):
+    """P: (bx+2, by+2, Z) halo-padded p-brick → (Ap, p·Ap partials).
+
+    Returns ``(Ap (bx,by,Z), partials (gx,gy) fp32)``; ``partials.sum()`` is
+    the brick-local p·Ap.
+    """
+    bx, by, nz = P.shape[0] - 2, P.shape[1] - 2, P.shape[2]
+    bxb = _pick_block(bx, block[0])
+    byb = _pick_block(by, block[1])
+    grid = (bx // bxb, by // byb)
+    return pl.pallas_call(
+        functools.partial(_spmv_dot_body, c_diag, c_off),
+        grid=grid,
+        in_specs=[pl.BlockSpec(
+            (pl.Element(bxb + 2), pl.Element(byb + 2), nz),
+            lambda i, j: (i * bxb, j * byb, 0))],
+        out_specs=[
+            pl.BlockSpec((bxb, byb, nz), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bx, by, nz), P.dtype),
+            jax.ShapeDtypeStruct(grid, jnp.float32),
+        ],
+        interpret=interpret,
+    )(P)

@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# (reduced-scale override for CI/tests; must still precede the jax import)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (GSPMD partitions the step),
+  * it fits (memory_analysis), and
+  * what it costs (cost_analysis + collective schedule → §Roofline).
+
+Usage:
+    python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+    python -m repro.launch.dryrun --all --multi-pod --out dryrun.jsonl
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, cells_for, get_config          # noqa: E402
+from repro.configs.base import SHAPES                           # noqa: E402
+from repro.launch import roofline                               # noqa: E402
+from repro.launch.mesh import make_production_mesh              # noqa: E402
+from repro.launch.specs import cell_specs                       # noqa: E402
+from repro.parallel.sharding import use_sharding                # noqa: E402
+
+
+def _mem_fields(compiled):
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:                                # pragma: no cover
+        return {"memory_analysis_error": str(e)}
+    for name in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(ma, name, None)
+        if v is not None:
+            out[name] = int(v)
+    out["total_bytes_per_device"] = (
+        out.get("argument_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0))
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             mesh=None, overrides=None, cfg=None, verbose: bool = True,
+             calibrate: bool = True):
+    """Lower + compile one cell; returns the §Dry-run/§Roofline record.
+
+    The full compile proves the sharding and yields memory_analysis; the
+    roofline terms come from the calibrated flat variants (``calibrate``),
+    since cost_analysis counts scan bodies once.
+    """
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    spec = cell_specs(arch, shape_name, mesh, overrides, cfg=cfg)
+    jitted = jax.jit(spec["fn"],
+                     in_shardings=spec["in_shardings"],
+                     out_shardings=spec["out_shardings"],
+                     donate_argnums=spec["donate_argnums"])
+    t0 = time.time()
+    with use_sharding(spec["rules"]):
+        lowered = jitted.lower(*spec["args"])
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    rec = {"arch": arch, "shape": shape_name, "mesh": str(mesh.shape),
+           "chips": chips, "lower_s": round(t_lower, 1),
+           "compile_s": round(t_compile, 1)}
+    rec.update(_mem_fields(compiled))
+    raw = roofline.analyze(compiled)
+    rec["raw_flops_per_chip"] = raw["flops_per_chip"]
+    rec["raw_collective_bytes_per_chip"] = raw["collective_bytes_per_chip"]
+
+    if calibrate:
+        rec.update(roofline.calibrated_terms(
+            arch, shape_name, mesh, overrides, cfg=spec["cfg"]))
+    else:
+        raw.pop("collective_breakdown", None)
+        rec.update(raw)
+
+    counts = roofline.count_params(spec["cfg"])
+    rec["n_params"] = counts["total"]
+    rec["n_active"] = counts["active"]
+    mf = roofline.model_flops(spec["cfg"], spec["shape"], counts["total"],
+                              counts["active"])
+    rec["model_flops_per_chip"] = mf / chips
+    if rec.get("flops_per_chip"):
+        rec["useful_flop_ratio"] = mf / chips / rec["flops_per_chip"]
+    if verbose:
+        print(json.dumps(rec))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in cells_for(arch):
+                cells.append((arch, shape))
+    else:
+        assert args.arch, "--arch or --all"
+        shapes = [args.shape] if args.shape else cells_for(args.arch)
+        cells = [(args.arch, s) for s in shapes]
+
+    n = len(jax.devices())
+    need = 512 if args.multi_pod else 256
+    if n >= need:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        # reduced-scale CI mesh with the production axis names/ratios
+        from repro.launch.mesh import make_mesh2d
+        if args.multi_pod:
+            per_pod = n // 2
+            model = max(1, int(per_pod ** 0.5))
+            while per_pod % model:
+                model -= 1
+            mesh = make_mesh2d(per_pod // model, model, pod=2)
+        else:
+            model = max(1, int(n ** 0.5))
+            while n % model:
+                model -= 1
+            mesh = make_mesh2d(n // model, model)
+    done = set()
+    if args.skip_existing and args.out and os.path.exists(args.out):
+        for line in open(args.out):
+            try:
+                r = json.loads(line)
+                if "error" not in r:
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+            except Exception:
+                pass
+
+    out_f = open(args.out, "a") if args.out else None
+    ok = True
+    for arch, shape in cells:
+        if (arch, shape, str(mesh.shape)) in done:
+            print(f"skip {arch} {shape} (already recorded)")
+            continue
+        try:
+            rec = run_cell(arch, shape, mesh=mesh,
+                           calibrate=not args.no_calibrate)
+        except Exception as e:
+            ok = False
+            rec = {"arch": arch, "shape": shape, "mesh": str(mesh.shape),
+                   "error": repr(e)}
+            print(json.dumps(rec))
+            traceback.print_exc()
+        if out_f:
+            out_f.write(json.dumps(rec) + "\n")
+            out_f.flush()
+    if out_f:
+        out_f.close()
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""The paper's own workload (heat3d) as a production-mesh dry-run cell.
+
+Lowers the brick-decomposed FTCS / CG steps at the 16×16 (and 2×16×16) mesh
+for a ~2.1e9-cell grid (the paper weak-scales to 2.85e9) and extracts the
+same three roofline terms as the LM cells.  Per-variant records drive the
+paper-side §Perf hillclimb:
+
+    explicit: baseline | overlap | wide-halo k | pallas kernel
+    implicit: cg (2 psums/iter) | pipecg (1 fused psum) | chebyshev (0)
+
+Note on loop accounting: ``fori_loop``/``while_loop`` bodies are counted
+once by cost_analysis, which is exactly one time step (explicit) or one
+inner iteration (implicit) — the paper's own metric.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.heat3d import HeatConfig
+from repro.core.explicit import make_sharded_ftcs
+from repro.core.implicit import make_sharded_implicit, make_sharded_iteration
+from repro.launch import roofline
+
+PROD_GRID = HeatConfig(nx=2048, ny=2048, nz=512)   # 2.1e9 cells, fp32
+
+
+def _lower_and_analyze(step, sharding, shape, mesh, exchange_every=1):
+    """Roofline record for one compiled heat step.
+
+    ``exchange_every=k`` (wide halos): the halo exchange sits outside the
+    k-step inner loop, so ONLY the collective terms are divided by k
+    (loop bodies are already counted once = one time step of compute).
+    Adds the latency floor term (scalar psums are diameter-bound, Eq. 16).
+    """
+    sds = jax.ShapeDtypeStruct(shape, jnp.float32, sharding=sharding)
+    return _analyze_compiled(step.lower(sds).compile(), mesh,
+                             exchange_every=exchange_every)
+
+
+def _analyze_compiled(compiled, mesh, exchange_every=1):
+    # fp32 peak on v5e ≈ half bf16 (the paper runs single precision)
+    rec = roofline.analyze(compiled, peak_flops=roofline.PEAK_BF16 / 2)
+    mx, my = list(mesh.shape.values())[-2:]
+    coll = rec.pop("collective_breakdown")
+    rec["collective_bytes_per_chip"] /= exchange_every
+    rec["t_collective"] /= exchange_every
+    rec["t_latency"] = roofline.collective_latency(coll, mx, my) \
+        / exchange_every
+    rec["n_collectives"] = coll["count"]
+    rec["t_total"] = (max(rec["t_compute"], rec["t_memory"])
+                      + rec["t_collective"] + rec["t_latency"])
+    terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+             "collective": rec["t_collective"] + rec["t_latency"]}
+    rec["bound"] = max(terms, key=terms.get)
+    ma = compiled.memory_analysis()
+    rec["total_bytes_per_device"] = (
+        getattr(ma, "argument_size_in_bytes", 0)
+        - getattr(ma, "alias_size_in_bytes", 0)
+        + getattr(ma, "output_size_in_bytes", 0)
+        + getattr(ma, "temp_size_in_bytes", 0))
+    return rec
+
+
+def run_heat_cells(mesh, cfg: HeatConfig = PROD_GRID, variants=None):
+    """Returns {variant: roofline record} for the heat workload on mesh."""
+    shape = (cfg.nx, cfg.ny, cfg.nz)
+    out = {}
+    ex_variants = {
+        "explicit_baseline": dict(),
+        "explicit_overlap": dict(overlap=True),
+        "explicit_wide_halo4": dict(halo_depth=4),
+        "explicit_kernel": dict(use_kernel=True),
+        "explicit_kernel_planes": dict(use_kernel="planes"),
+    }
+    if variants:
+        ex_variants = {k: v for k, v in ex_variants.items() if k in variants}
+    for name, kw in ex_variants.items():
+        step, sharding = make_sharded_ftcs(mesh, shape, cfg.omega,
+                                           steps_per_call=1, **kw)
+        out[name] = _lower_and_analyze(
+            step, sharding, shape, mesh,
+            exchange_every=kw.get("halo_depth", 1))
+
+    im_variants = ["cg", "pipecg", "chebyshev"]
+    if variants:
+        im_variants = [m for m in im_variants
+                       if f"implicit_{m}" in variants]
+    for method in im_variants:
+        for kernel in ([False, True] if method == "cg" else [False]):
+            step, state_sds = make_sharded_iteration(
+                mesh, shape, cfg.omega, method=method, use_kernel=kernel)
+            name = f"implicit_{method}" + ("_kernel" if kernel else "")
+            out[name] = _analyze_compiled(step.lower(state_sds).compile(),
+                                          mesh)
+    return out
+
+
+def main():
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    recs = run_heat_cells(mesh)
+    out_f = open(args.out, "a") if args.out else None
+    for name, rec in recs.items():
+        rec = dict(rec, variant=name, mesh=str(dict(mesh.shape)),
+                   grid=f"{PROD_GRID.nx}x{PROD_GRID.ny}x{PROD_GRID.nz}")
+        print(json.dumps(rec))
+        if out_f:
+            out_f.write(json.dumps(rec) + "\n")
+    if out_f:
+        out_f.close()
+
+
+if __name__ == "__main__":
+    main()

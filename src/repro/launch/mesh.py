@@ -1,0 +1,30 @@
+"""Production mesh builders (functions, never module-level constants —
+importing this module must not touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh.
+
+    Single pod: 16×16 = 256 chips, axes (data, model).
+    Multi-pod: 2×16×16 = 512 chips, axes (pod, data, model) — the `pod`
+    axis carries pure data parallelism over the cross-pod (DCN-class) links.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh2d(data: int, model: int, *, pod: int = 0):
+    """Arbitrary-size mesh with the production axis names (tests use 2×2)."""
+    if pod:
+        return jax.make_mesh(
+            (pod, data, model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,291 @@
+"""Roofline extraction from a compiled dry-run artifact.
+
+Three terms per (arch × shape × mesh), all per-chip per-step:
+
+    compute    = HLO_FLOPs / peak_FLOP/s
+    memory     = HLO_bytes / HBM_bw
+    collective = Σ collective_result_bytes / ICI_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the partitioned,
+per-device module).  Collective bytes are NOT in cost_analysis: we parse the
+post-SPMD HLO text and sum the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE) gives the useful-compute ratio,
+catching remat recompute and padding waste.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+import jax
+import numpy as np
+
+# -- hardware constants (TPU v5e, per brief) --------------------------------
+PEAK_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_DEF_RE = re.compile(r"^\s*(%[\w.\-]+) = ((?:\([^)]*\)|[^ ]+)) "
+                     r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+
+# ops whose line is bookkeeping, not a kernel launch
+_SKIP_OPS = ("parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "while", "conditional", "call", "after-all",
+             "iota", "broadcast")
+
+
+def fused_bytes_estimate(hlo_text: str) -> float:
+    """HBM-byte estimate under kernel-granularity accounting.
+
+    XLA groups arithmetic into ``fusion`` computations; a fusion's HBM
+    traffic is its operands + its result (that is the definition of
+    fusion).  We therefore charge operand+result bytes for every op in
+    every *non-fusion* computation (ENTRY, while bodies, conditional
+    branches) and skip fusion-internal lines; scalar reducer regions are
+    skipped by the scalar filter naturally (bytes ≈ 0).
+    """
+    total = 0.0
+    in_fusion_body = False
+    sizes: Dict[str, int] = {}
+    depth = 0
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        mc = _COMP_RE.match(line)
+        if mc and depth == 0:
+            name = mc.group(2)
+            in_fusion_body = "fused_computation" in name
+            sizes = {}
+            depth = 1
+            continue
+        if line.startswith("}"):
+            depth = max(0, depth - 1)
+            continue
+        if depth == 0 or in_fusion_body:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        nbytes = _shape_bytes(type_str)
+        sizes[name] = nbytes
+        base = opcode.replace("-start", "").replace("-done", "")
+        if base in _SKIP_OPS:
+            continue
+        total += nbytes                                       # write
+        rest = line[line.index(opcode + "("):]
+        head = rest.split(")", 1)[0]
+        for ref in _OPERAND_RE.findall(head):
+            total += sizes.get(ref, 0)                        # reads
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind result bytes + op counts of every collective in a
+    partitioned HLO (counts drive the latency term: scalar all-reduces are
+    diameter-latency-bound, the paper's 2(X+Y) story)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out.update({k + "_n": 0 for k in _COLLECTIVES})
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(-start|-done)?\(", line)
+        if not m:
+            continue
+        if m.group(3) == "-done":      # avoid double counting async pairs
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+        out[m.group(2) + "_n"] += 1
+        out["count"] += 1
+    return out
+
+
+def collective_latency(coll: Dict[str, int], mesh_x: int, mesh_y: int,
+                       hop_lat: float = 1e-6) -> float:
+    """Latency floor of the collective schedule on an (X, Y) ICI torus:
+    permutes are single-hop; reductions traverse ~the mesh diameter both
+    ways (the Eq. 16/17 ``2(X+Y)`` analogue)."""
+    diam = 2 * (mesh_x + mesh_y)
+    lat = coll.get("collective-permute_n", 0) * hop_lat
+    for kind in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all"):
+        lat += coll.get(kind + "_n", 0) * diam * hop_lat
+    return lat
+
+
+def analyze(compiled, *, steps_per_call: int = 1,
+            peak_flops: float = PEAK_BF16) -> Dict:
+    """Roofline terms from one compiled executable (per chip, per step)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):        # one dict per partition on some backends
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) / steps_per_call
+    mem_bytes = float(cost.get("bytes accessed", 0.0)) / steps_per_call
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+    coll_total = sum(v for k, v in coll.items() if k != "count")
+    coll_total /= steps_per_call
+    fused = fused_bytes_estimate(hlo) / steps_per_call
+
+    t_comp = flops / peak_flops
+    t_mem = mem_bytes / HBM_BW             # brief-defined: HLO bytes accessed
+    t_mem_fused = fused / HBM_BW           # kernel-granularity estimate
+    t_coll = coll_total / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bound = max(terms, key=terms.get)
+    return {
+        "flops_per_chip": flops,
+        "hbm_bytes_per_chip": mem_bytes,
+        "hbm_fused_bytes_per_chip": fused,
+        "collective_bytes_per_chip": coll_total,
+        "collective_breakdown": coll,
+        "t_compute": t_comp, "t_memory": t_mem,
+        "t_memory_fused": t_mem_fused,
+        "t_collective": t_coll,
+        "t_total": max(t_comp, t_mem) + t_coll,
+        "bound": bound,
+    }
+
+
+# ---------------------------------------------------------------------------
+# calibrated per-step costs
+#
+# XLA's cost_analysis counts while-loop bodies ONCE regardless of trip count
+# (verified empirically), so a scan-over-layers step under-reports FLOPs by
+# ~L×.  Calibration: compile small FLAT variants (python-loop layers, 1 vs 2
+# layers per segment kind) on the SAME mesh — the SPMD per-device program is
+# layer-count-independent, so the per-layer body cost B_k extrapolates
+# exactly:
+#
+#     metric(full) = f(all counts = 1) + Σ_kind (T_k − m_k) · B_k
+#
+# Microbatching needs no calibration dimension: the global token count is
+# fixed, per-microbatch costs are linear in batch rows, so total step cost is
+# microbatch-count-invariant; calibration variants run mb=1 (flat).
+# ---------------------------------------------------------------------------
+
+_METRICS = ("flops_per_chip", "hbm_bytes_per_chip",
+            "hbm_fused_bytes_per_chip", "collective_bytes_per_chip")
+
+
+def _variant_cfg(cfg, seg_counts, mb):
+    import dataclasses
+    segments = tuple((k, seg_counts.get(k, 1)) for k, _ in cfg.segments)
+    return dataclasses.replace(
+        cfg, segments=segments, n_layers=sum(c for _, c in segments),
+        num_microbatches=mb, scan_layers=False)
+
+
+def _compile_metrics(arch, shape_name, mesh, cfg, overrides):
+    from repro.launch.specs import cell_specs
+    from repro.parallel.sharding import use_sharding
+    import jax as _jax
+    spec = cell_specs(arch, shape_name, mesh, overrides, cfg=cfg)
+    jitted = _jax.jit(spec["fn"], in_shardings=spec["in_shardings"],
+                      out_shardings=spec["out_shardings"],
+                      donate_argnums=spec["donate_argnums"])
+    with use_sharding(spec["rules"]):
+        compiled = jitted.lower(*spec["args"]).compile()
+    return analyze(compiled)
+
+
+def calibrated_terms(arch, shape_name, mesh, overrides=None, cfg=None):
+    """Extrapolated per-chip (flops, bytes, collective) for the full cell."""
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    kinds = []
+    m_k: Dict[str, int] = {}
+    t_k: Dict[str, int] = {}
+    for kind, count in cfg.segments:
+        if kind not in m_k:
+            kinds.append(kind)
+            m_k[kind] = 0
+            t_k[kind] = 0
+        m_k[kind] += 1
+        t_k[kind] += count
+
+    f_a = _compile_metrics(arch, shape_name, mesh,
+                           _variant_cfg(cfg, {}, 1), overrides)
+    b_k = {}
+    for kind in kinds:
+        f_b = _compile_metrics(arch, shape_name, mesh,
+                               _variant_cfg(cfg, {kind: 2}, 1), overrides)
+        b_k[kind] = {m: max(0.0, (f_b[m] - f_a[m]) / m_k[kind])
+                     for m in _METRICS}
+
+    out = {}
+    for m in _METRICS:
+        out[m] = f_a[m] + sum((t_k[k] - m_k[k]) * b_k[k][m] for k in kinds)
+
+    t_comp = out["flops_per_chip"] / PEAK_BF16
+    t_mem = out["hbm_bytes_per_chip"] / HBM_BW
+    t_mem_fused = out["hbm_fused_bytes_per_chip"] / HBM_BW
+    t_coll = out["collective_bytes_per_chip"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    out.update({"t_compute": t_comp, "t_memory": t_mem,
+                "t_memory_fused": t_mem_fused, "t_collective": t_coll,
+                "t_total": max(t_comp, t_mem) + t_coll,
+                "bound": max(terms, key=terms.get)})
+    return out
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int) -> float:
+    """6·N·D (train) / 2·N·D (prefill) / 2·N_active·B (decode), GLOBAL."""
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * d
+    return 2.0 * n_active * shape.global_batch      # decode: one token
+
+
+def count_params(cfg) -> Dict[str, int]:
+    """Total + active (MoE-discounted) parameter counts from eval_shape."""
+    from repro.models import model as M
+    shapes = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    total = 0
+    routed = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        names = [getattr(p, "key", "") for p in path]
+        if any(str(n_) in ("w_gate", "w_up", "w_down") for n_ in names):
+            routed += n
+    active = total - routed
+    if cfg.moe:
+        active += routed * cfg.moe.top_k // cfg.moe.n_experts
+    return {"total": total, "active": active}

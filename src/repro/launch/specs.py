@@ -1,0 +1,150 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+No device allocation happens here: params/opt/cache shapes come from
+``jax.eval_shape`` over the real initializers, inputs are synthesized
+SDS, and shardings are derived from the logical-axis rules.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES, ShapeCfg
+from repro.launch import steps as steps_mod
+from repro.models import model as M
+from repro.parallel.params import (cache_specs_for, param_specs_for,
+                                   rules_for)
+
+
+def _sds(tree_shape):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree_shape)
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_spec(cfg, shape: ShapeCfg, rules):
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, s) if cfg.n_codebooks == 1 else (b, s, cfg.n_codebooks)
+    sds = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+           "labels": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    spec = rules.spec(("batch", "seq") + (None,) * (len(tok_shape) - 2),
+                      tok_shape)
+    return sds, {"tokens": spec, "labels": spec}
+
+
+def cell_specs(arch: str, shape_name: str, mesh,
+               overrides: dict | None = None,
+               cfg=None) -> Dict[str, Any]:
+    """Everything needed to jit + lower one dry-run cell.
+
+    Returns {fn, args (SDS), in_shardings, donate_argnums, rules, cfg}.
+    """
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    rules = rules_for(cfg, mesh, overrides)
+
+    params_shape = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    p_specs = param_specs_for(cfg, params_shape, rules)
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(
+            lambda: steps_mod.make_opt_state(params_shape))
+        # moments share the param specs + ZeRO data-axis extension
+        o_specs = _opt_specs(p_specs, opt_shape, mesh)
+        b_sds, b_specs = batch_spec(cfg, shape, rules)
+        fn = steps_mod.make_train_step(cfg)
+        return dict(
+            fn=fn,
+            args=(_sds(params_shape), _sds(opt_shape), b_sds),
+            in_shardings=(_named(mesh, p_specs), _named(mesh, o_specs),
+                          _named(mesh, b_specs)),
+            out_shardings=(_named(mesh, p_specs), _named(mesh, o_specs),
+                           None),
+            donate_argnums=(0, 1), rules=rules, cfg=cfg, shape=shape)
+
+    if shape.kind == "prefill":
+        b_sds, b_specs = batch_spec(cfg, shape, rules)
+        fn = steps_mod.make_prefill_step(cfg)
+        return dict(
+            fn=fn,
+            args=(_sds(params_shape), b_sds["tokens"]),
+            in_shardings=(_named(mesh, p_specs),
+                          NamedSharding(mesh, b_specs["tokens"])),
+            out_shardings=None,
+            donate_argnums=(), rules=rules, cfg=cfg, shape=shape)
+
+    # decode: one new token against a seq_len cache
+    b, s = shape.global_batch, shape.seq_len
+    cache_shape = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    c_specs = cache_specs_for(cfg, cache_shape, rules)
+    tok_shape = (b, 1) if cfg.n_codebooks == 1 else (b, 1, cfg.n_codebooks)
+    tok_sds = jax.ShapeDtypeStruct(tok_shape, jnp.int32)
+    tok_spec = rules.spec(
+        ("cache_batch",) + (None,) * (len(tok_shape) - 1), tok_shape)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = steps_mod.make_decode_step(cfg)
+    return dict(
+        fn=fn,
+        args=(_sds(params_shape), _sds(cache_shape), tok_sds, pos_sds),
+        in_shardings=(_named(mesh, p_specs), _named(mesh, c_specs),
+                      NamedSharding(mesh, tok_spec),
+                      NamedSharding(mesh, P())),
+        out_shardings=(None, _named(mesh, c_specs)),
+        donate_argnums=(1,), rules=rules, cfg=cfg, shape=shape)
+
+
+def _zero_extend(spec: P, shape, mesh) -> P:
+    """ZeRO-style optimizer-state sharding: additionally shard one free dim
+    of each moment over the data axes.  Moments are touched once per step
+    (the AdamW update is elementwise), so the extra layout costs nothing in
+    the step and divides optimizer memory by the DP degree — without it,
+    deepseek-v2 fp32 moments are 121 GB/chip (measured) and cannot deploy.
+    """
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not dp_axes:
+        return spec
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for p_ in parts:
+        for a in ((p_,) if isinstance(p_, str) else (p_ or ())):
+            used.add(a)
+    if any(a in used for a in dp_axes):
+        return spec
+    # largest free, divisible dim gets the data axes
+    cands = [(shape[i], i) for i, p_ in enumerate(parts)
+             if p_ is None and shape[i] % dp == 0]
+    if not cands:
+        return spec
+    _, i = max(cands)
+    parts[i] = dp_axes[0] if len(dp_axes) == 1 else dp_axes
+    return P(*parts)
+
+
+def _opt_specs(p_specs, opt_shape, mesh=None):
+    """Adam state specs: moments mirror params + ZeRO data-axis extension;
+    scalar step replicated."""
+    from repro.optim.adamw import AdamWState
+    if mesh is not None:
+        m_specs = jax.tree.map(
+            lambda s, l: _zero_extend(s, l.shape, mesh),
+            p_specs, opt_shape.m if isinstance(opt_shape, AdamWState)
+            else opt_shape["adam"].m,
+            is_leaf=lambda s: isinstance(s, P))
+    else:
+        m_specs = p_specs
+    if isinstance(opt_shape, AdamWState):
+        return AdamWState(P(), m_specs, m_specs)
+    return {"adam": AdamWState(P(), m_specs, m_specs),
+            "residual": m_specs}

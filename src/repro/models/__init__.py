@@ -1,0 +1,6 @@
+"""repro.models — LM substrate for the assigned architecture pool.
+
+Pure-JAX, dict-pytree parameters, scan-over-layers.  Entry points live in
+:mod:`repro.models.model`: ``init_params``, ``forward``, ``loss_fn``,
+``init_cache``, ``prefill``, ``decode_step``.
+"""

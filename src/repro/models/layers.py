@@ -1,0 +1,109 @@
+"""Shared layer primitives: norms, rotary embeddings, MLPs, embeddings.
+
+Parameters are plain dict pytrees; every layer is an (init, apply) pair of
+functions.  ``init`` takes an ``jax.random`` key and returns the param dict;
+``apply`` is functional.  Compute dtype and param dtype come from the config
+(bf16/bf16 for production rooflines, fp32 for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def head_rmsnorm(scale, x, eps: float = 1e-6):
+    """Per-head qk-norm (Qwen3 / Chameleon): x is (..., head_dim)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(rot_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32)
+                            / rot_dim))
+
+
+def apply_rope(x, pos, theta: float = 1e4, fraction: float = 1.0):
+    """Rotate the first ``fraction`` of head_dim; interleaved-pair convention.
+
+    x: (..., S, H, D) — the head axis is required (use H=1 for single-head
+    rope streams such as MLA's shared k_rope).  pos: (..., S) int32.
+    """
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    if rot == 0:
+        return x
+    rot -= rot % 2
+    freqs = rope_freqs(rot, theta)                       # (rot/2,)
+    angles = pos[..., None].astype(jnp.float32) * freqs  # (..., S, rot/2)
+    angles = angles[..., None, :]                        # broadcast over H
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def mlp_init(key, d: int, d_ff: int, dtype, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d, d_ff, dtype),
+         "down": dense_init(ks[1], d_ff, d, dtype)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def mlp_apply(params, x, act: str = "silu"):
+    f = _ACTS[act]
+    up = x @ params["up"]
+    if "gate" in params:
+        up = f(x @ params["gate"]) * up
+    else:
+        up = f(up)
+    return up @ params["down"]

@@ -1,0 +1,137 @@
+"""Multi-head Latent Attention (DeepSeek-V2 §2.1; also MiniCPM3).
+
+Queries and KV project through low-rank latents; the decode cache stores only
+the compressed latent ``c_kv`` (kv_lora_rank) plus the shared single-head
+rotary key — 576 floats/token for deepseek-v2 instead of 32k for full MHA.
+
+Two decode paths:
+
+* naive (baseline): re-expand K/V from every cached latent each step — the
+  faithful formulation, O(S·r·H·(dn+dv)) FLOPs per token;
+* absorbed (``cfg.mla_absorbed``): fold ``W_uk`` into the query and ``W_uv``
+  into the output projection so attention runs directly in latent space —
+  O(S·r) per head-step.  A beyond-paper serving optimization; see
+  EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import NEG_INF, chunked_attention
+from repro.models.layers import apply_rope, dense_init, rmsnorm, rmsnorm_init
+from repro.parallel import pshard
+
+
+def mla_init(key, cfg, dtype):
+    d, h = cfg.d_model, cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, rq, dtype),
+        "q_norm": rmsnorm_init(rq, dtype),
+        "wq_b": dense_init(ks[1], rq, h * (dn + dr), dtype),
+        "wkv_a": dense_init(ks[2], d, rkv + dr, dtype),
+        "kv_norm": rmsnorm_init(rkv, dtype),
+        "wkv_b": dense_init(ks[3], rkv, h * (dn + dv), dtype),
+        "wo": dense_init(ks[4], h * dv, d, dtype),
+    }
+
+
+def _latents(params, x, cfg, pos):
+    """x: (B,S,D) → q (B,S,H,dn+dr), c_kv (B,S,rkv), k_rope (B,S,1,dr)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rmsnorm(params["q_norm"], x @ params["wq_a"])
+    q = (cq @ params["wq_b"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    kv_a = x @ params["wkv_a"]
+    c_kv = rmsnorm(params["kv_norm"], kv_a[..., :cfg.kv_lora_rank])
+    k_rope = apply_rope(kv_a[..., None, cfg.kv_lora_rank:], pos,
+                        cfg.rope_theta)
+    return q, c_kv, k_rope
+
+
+def _expand_kv(params, c_kv, cfg):
+    """c_kv (..., rkv) → k_nope (..., H, dn), v (..., H, dv)."""
+    h, dn, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    kv = (c_kv @ params["wkv_b"]).reshape(*c_kv.shape[:-1], h, dn + dv)
+    return kv[..., :dn], kv[..., dn:]
+
+
+def mla_apply(params, x, cfg, pos):
+    """Full-sequence MLA (training / prefill)."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q, c_kv, k_rope = _latents(params, x, cfg, pos)
+    k_nope, v = _expand_kv(params, c_kv, cfg)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1)
+    q = pshard(q.reshape(b, s, h, 1, dn + dr), "batch", "seq", "heads",
+               None, None)
+    k = pshard(k, "batch", "seq", "heads", None)
+    out = chunked_attention(q, k, v, pos, pos, window=None,
+                            scale=(dn + dr) ** -0.5)
+    out = out.reshape(b, s, h * dv)
+    return out @ params["wo"]
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array      # (B, S_max, rkv)
+    k_rope: jax.Array    # (B, S_max, dr)
+
+
+def mla_decode(params, x, cache: MLACache, cfg, pos):
+    """One-token decode over the compressed cache."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    pos_arr = jnp.asarray(pos, jnp.int32)[None]
+    q, c_new, kr_new = _latents(params, x, cfg, pos_arr)
+
+    c_kv = jax.lax.dynamic_update_slice(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache.k_rope, kr_new[:, :, 0].astype(cache.k_rope.dtype), (0, pos, 0))
+    c_kv = pshard(c_kv, "cache_batch", "cache_seq", None)
+    k_rope = pshard(k_rope, "cache_batch", "cache_seq", None)
+
+    s_max = c_kv.shape[1]
+    scale = (dn + dr) ** -0.5
+    q_nope, q_rope = q[:, 0, :, :dn], q[:, 0, :, dn:]   # (B,H,dn),(B,H,dr)
+    idx = jnp.arange(s_max)
+    mask = (idx <= pos)[None, None, :]
+
+    if cfg.mla_absorbed:
+        # fold W_uk into q: scores in latent space, context stays latent.
+        wkv_b = params["wkv_b"].reshape(cfg.kv_lora_rank, h, dn + dv)
+        w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+        q_lat = jnp.einsum("bhd,rhd->bhr", q_nope, w_uk)          # (B,H,rkv)
+        s_ = (jnp.einsum("bhr,bsr->bhs", q_lat, c_kv,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhd,bsd->bhs", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+        p = jax.nn.softmax(jnp.where(mask, s_, NEG_INF), axis=-1)
+        ctx = jnp.einsum("bhs,bsr->bhr", p.astype(c_kv.dtype), c_kv,
+                         preferred_element_type=jnp.float32)      # (B,H,rkv)
+        out = jnp.einsum("bhr,rhv->bhv", ctx.astype(x.dtype), w_uv)
+    else:
+        k_nope, v = _expand_kv(params, c_kv, cfg)                 # (B,S,H,·)
+        s_ = (jnp.einsum("bhd,bshd->bhs", q_nope, k_nope,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhd,bsd->bhs", q_rope, k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+        p = jax.nn.softmax(jnp.where(mask, s_, NEG_INF), axis=-1)
+        out = jnp.einsum("bhs,bshv->bhv", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+
+    out = out.reshape(b, 1, h * dv)
+    return out @ params["wo"], MLACache(c_kv, k_rope)

@@ -1,0 +1,365 @@
+"""Model-level API: init, forward/loss, prefill, decode — scan-over-layers.
+
+Parameters::
+
+    {"embed": (V, D) | (K, V, D),
+     "segments": [per-segment stacked block params (leading dim = count)],
+     "shared": zamba2 shared block (unstacked) | absent,
+     "final_ln": rmsnorm,
+     "lm_head": (D, V) | (K, D, V) | absent (tied)}
+
+Each segment is scanned (`jax.lax.scan`) so HLO size and compile time are
+O(#segments), not O(#layers) — this is what makes 60-layer/160-expert
+dry-runs on a 512-fake-device CPU host tractable, and is the production
+choice anyway.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.layers import embed_init, rmsnorm, rmsnorm_init
+from repro.parallel import pshard
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def init_params(key, cfg) -> Dict[str, Any]:
+    dtype = _dtype(cfg.param_dtype)
+    k_embed, k_seg, k_shared, k_head = jax.random.split(key, 4)
+    params: Dict[str, Any] = {}
+    if cfg.n_codebooks > 1:
+        params["embed"] = jnp.stack([
+            embed_init(k, cfg.vocab_size, cfg.d_model, dtype)
+            for k in jax.random.split(k_embed, cfg.n_codebooks)])
+    else:
+        params["embed"] = embed_init(k_embed, cfg.vocab_size, cfg.d_model,
+                                     dtype)
+
+    segs = []
+    seg_keys = jax.random.split(k_seg, len(cfg.segments))
+    for (kind, count), sk in zip(cfg.segments, seg_keys):
+        layers = [tfm.block_init(k, kind, cfg, dtype)
+                  for k in jax.random.split(sk, count)]
+        segs.append(jax.tree.map(lambda *xs: jnp.stack(xs), *layers))
+    params["segments"] = segs
+
+    if any(kind == "mamba_shared" for kind, _ in cfg.segments):
+        params["shared"], _ = tfm.shared_block_init(k_shared, cfg, dtype)
+
+    params["final_ln"] = rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        if cfg.n_codebooks > 1:
+            params["lm_head"] = jnp.stack([
+                embed_init(k, cfg.d_model, cfg.vocab_size, dtype)
+                for k in jax.random.split(k_head, cfg.n_codebooks)])
+        else:
+            params["lm_head"] = embed_init(k_head, cfg.d_model,
+                                           cfg.vocab_size, dtype)
+    return params
+
+
+def _shared_ctx(params, cfg):
+    if "shared" not in params:
+        return None
+    _, acfg = tfm.shared_block_init(jax.random.PRNGKey(0), cfg, "float32")
+    return (params["shared"], acfg)
+
+
+def _embed(params, tokens, cfg):
+    if cfg.n_codebooks > 1:                      # (B, S, K) EnCodec frames
+        x = params["embed"][0][tokens[..., 0]]
+        for k in range(1, cfg.n_codebooks):
+            x = x + params["embed"][k][tokens[..., k]]
+        return x
+    return params["embed"][tokens]
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+def forward(params, tokens, cfg, *, last_only: bool = False):
+    """Causal forward.  tokens (B, S[, K]) → logits (B, S|1, V[, K])."""
+    cdt = _dtype(cfg.compute_dtype)
+    x = _embed(params, tokens, cfg).astype(cdt)
+    x = pshard(x, "batch", "seq", "embed")
+    x_embed = x
+    seq = x.shape[1]
+    pos = jnp.arange(seq, dtype=jnp.int32)
+    shared = _shared_ctx(params, cfg)
+    if shared is not None:
+        shared = (jax.tree.map(lambda a: a.astype(cdt), shared[0]), shared[1])
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for (kind, count), seg in zip(cfg.segments, params["segments"]):
+        def body(x, layer, kind=kind):
+            layer = jax.tree.map(lambda a: a.astype(cdt), layer)
+            x, aux = tfm.block_apply(kind, layer, x, cfg, pos,
+                                     shared=shared, x_embed=x_embed)
+            return x, aux
+        if cfg.scan_layers:
+            x, auxs = jax.lax.scan(_remat(body, cfg), x, seg)
+            aux_total = aux_total + auxs.sum()
+        else:                         # flat calibration mode
+            for i in range(count):
+                layer = jax.tree.map(lambda a: a[i], seg)
+                x, aux = _remat(body, cfg)(x, layer)
+                aux_total = aux_total + aux
+
+    x = rmsnorm(params["final_ln"], x)
+    if last_only:
+        x = x[:, -1:, :]
+    logits = _lm_head(params, x, cfg)
+    return logits, aux_total
+
+
+def _lm_head(params, x, cfg):
+    cdt = x.dtype
+    if cfg.n_codebooks > 1:
+        return jnp.einsum("bsd,kdv->bskv", x,
+                          params["lm_head"].astype(cdt))
+    if cfg.tie_embeddings:
+        return x @ params["embed"].astype(cdt).T
+    return x @ params["lm_head"].astype(cdt)
+
+
+def loss_fn(params, batch, cfg):
+    """batch: {tokens (B,S[,K]), labels (B,S[,K])} → (loss, metrics)."""
+    logits, aux = forward(params, batch["tokens"], cfg)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    if cfg.n_codebooks > 1:
+        logp = jax.nn.log_softmax(logits, axis=-1)       # (B,S,K,V)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)
+        ce = -ll.mean()
+    else:
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)
+        ce = -ll.mean()
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, s_max: int):
+    cdt = _dtype(cfg.compute_dtype)
+    caches = []
+    for kind, count in cfg.segments:
+        one = tfm.cache_init(kind, cfg, batch, s_max, cdt)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (count,) + a.shape), one))
+    return caches
+
+
+def decode_step(params, cache, tokens, pos, cfg):
+    """One token for the whole batch.  tokens (B, 1[, K]); pos scalar."""
+    cdt = _dtype(cfg.compute_dtype)
+    x = _embed(params, tokens, cfg).astype(cdt)
+    x_embed = x
+    shared = _shared_ctx(params, cfg)
+    if shared is not None:
+        shared = (jax.tree.map(lambda a: a.astype(cdt), shared[0]), shared[1])
+
+    new_cache = []
+    for (kind, count), seg, cch in zip(cfg.segments, params["segments"],
+                                       cache):
+        def body(x, layer_cache, kind=kind):
+            layer, lc = layer_cache
+            layer = jax.tree.map(lambda a: a.astype(cdt), layer)
+            x, lc = tfm.block_decode(kind, layer, x, lc, cfg, pos,
+                                     shared=shared, x_embed=x_embed)
+            return x, lc
+        if cfg.scan_layers:
+            x, cch2 = jax.lax.scan(body, x, (seg, cch))
+        else:                         # flat calibration mode
+            outs = []
+            for i in range(count):
+                layer = jax.tree.map(lambda a: a[i], seg)
+                lc = jax.tree.map(lambda a: a[i], cch)
+                x, lc2 = body(x, (layer, lc))
+                outs.append(lc2)
+            cch2 = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache.append(cch2)
+
+    x = rmsnorm(params["final_ln"], x)
+    logits = _lm_head(params, x, cfg)
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg, s_max: int):
+    """Run the prompt, return (last-token logits, filled cache).
+
+    Layer-by-layer (unscanned) python loop over segments with scanned
+    layers; attention/MLA caches are written at positions [0, S); recurrent
+    states carry their end-of-prompt value.
+    """
+    cdt = _dtype(cfg.compute_dtype)
+    b, s = tokens.shape[0], tokens.shape[1]
+    x = _embed(params, tokens, cfg).astype(cdt)
+    x_embed = x
+    pos = jnp.arange(s, dtype=jnp.int32)
+    shared = _shared_ctx(params, cfg)
+    if shared is not None:
+        shared = (jax.tree.map(lambda a: a.astype(cdt), shared[0]), shared[1])
+
+    caches = []
+    for (kind, count), seg in zip(cfg.segments, params["segments"]):
+        def body(x, layer, kind=kind):
+            layer = jax.tree.map(lambda a: a.astype(cdt), layer)
+            x, lc = _block_prefill(kind, layer, x, cfg, pos, s_max,
+                                   shared=shared, x_embed=x_embed)
+            return x, lc
+        x, lcs = jax.lax.scan(body, x, seg)
+        caches.append(lcs)
+
+    x = rmsnorm(params["final_ln"], x[:, -1:, :])
+    return _lm_head(params, x, cfg), caches
+
+
+def _block_prefill(kind, params, x, cfg, pos, s_max, shared=None,
+                   x_embed=None):
+    """block_apply + cache capture (see transformer.block_decode)."""
+    from repro.models import attention as attn_mod
+    from repro.models import mla as mla_mod
+    from repro.models import rwkv as rwkv_mod
+    from repro.models import ssm as ssm_mod
+    from repro.models.layers import mlp_apply
+
+    b, s, d = x.shape
+    cdt = x.dtype
+
+    def pad_cache(arr):
+        pad = [(0, 0)] * arr.ndim
+        pad[1] = (0, s_max - s)
+        return jnp.pad(arr, pad)
+
+    if kind in ("attn", "attn_moe"):
+        h = rmsnorm(params["ln1"], x)
+        q, k, v = attn_mod._project_qkv(params["attn"], h, cfg, pos)
+        out = attn_mod.chunked_attention(q, k, v, pos, pos,
+                                         window=cfg.sliding_window)
+        out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+        x = x + out @ params["attn"]["wo"]
+        h = rmsnorm(params["ln2"], x)
+        if kind.endswith("moe"):
+            from repro.models import moe as moe_mod
+            h, _ = moe_mod.moe_apply(params["moe"], h, cfg)
+        else:
+            h = mlp_apply(params["mlp"], h, act=cfg.mlp_act)
+        cache = attn_mod.KVCache(pad_cache(k), pad_cache(v))
+        return x + h, cache
+    if kind in ("mla", "mla_moe"):
+        h = rmsnorm(params["ln1"], x)
+        q, c_kv, k_rope = mla_mod._latents(params["attn"], h, cfg, pos)
+        k_nope, v = mla_mod._expand_kv(params["attn"], c_kv, cfg)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope, (b, s, cfg.n_heads, cfg.qk_rope_dim))], axis=-1)
+        out = attn_mod.chunked_attention(
+            q.reshape(b, s, cfg.n_heads, 1, -1), k, v, pos, pos, window=None,
+            scale=(cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5)
+        out = out.reshape(b, s, cfg.n_heads * cfg.v_head_dim)
+        x = x + out @ params["attn"]["wo"]
+        h = rmsnorm(params["ln2"], x)
+        if kind.endswith("moe"):
+            from repro.models import moe as moe_mod
+            h, _ = moe_mod.moe_apply(params["moe"], h, cfg)
+        else:
+            h = mlp_apply(params["mlp"], h, act=cfg.mlp_act)
+        cache = mla_mod.MLACache(pad_cache(c_kv), pad_cache(k_rope[:, :, 0]))
+        return x + h, cache
+    if kind == "rwkv":
+        h = rmsnorm(params["ln1"], x)
+        hh, tm_last = rwkv_mod.rwkv_time_mix(params["tm"], h, cfg)
+        # recompute final wkv state for the cache
+        S = _rwkv_final_state(params["tm"], h, cfg)
+        x = x + hh
+        h2 = rmsnorm(params["ln2"], x)
+        hh, cm_last = rwkv_mod.rwkv_channel_mix(params["cm"], h2)
+        cache = rwkv_mod.RWKVState(h[:, -1, :], h2[:, -1, :], S)
+        return x + hh, cache
+    if kind in ("mamba", "mamba_shared"):
+        h = rmsnorm(params["ln1"], x)
+        y, st = _ssm_prefill(params["ssm"], h, cfg)
+        x = x + y
+        if kind == "mamba_shared":
+            sp, acfg = shared
+            xc = jnp.concatenate([x, x_embed], axis=-1)
+            hc = rmsnorm(sp["ln1"], xc)
+            q, k, v = attn_mod._project_qkv(sp["attn"], hc, acfg, pos)
+            out = attn_mod.chunked_attention(q, k, v, pos, pos, window=None)
+            out = out.reshape(b, s, acfg.n_heads * acfg.head_dim)
+            xc = xc + out @ sp["attn"]["wo"]
+            hc = mlp_apply(sp["mlp"], rmsnorm(sp["ln2"], xc), act="silu")
+            x = x + (xc + hc) @ sp["out"]
+            return x, {"ssm": st,
+                       "shared_kv": attn_mod.KVCache(pad_cache(k),
+                                                     pad_cache(v))}
+        return x, st
+    raise ValueError(kind)
+
+
+def _rwkv_final_state(params, h, cfg):
+    """End-of-prompt WKV state via a cheap rescan (B,H,K,V)."""
+    from repro.models import rwkv as rwkv_mod
+    b, s, d = h.shape
+    xx = jnp.concatenate([jnp.zeros_like(h[:, :1]), h[:, :-1]], axis=1)
+    xr, xk, xv, xw, xg = rwkv_mod._ddlerp(params, h, xx)
+    k = (xk @ params["wk"]).astype(jnp.float32)
+    v = (xv @ params["wv"]).astype(jnp.float32)
+    logw = rwkv_mod._decay(params, xw)
+    hk = d // cfg.n_heads
+    kk = k.reshape(b, s, cfg.n_heads, hk)
+    vv = v.reshape(b, s, cfg.n_heads, hk)
+    lw = logw.reshape(b, s, cfg.n_heads, hk)
+    cl = jnp.cumsum(lw, axis=1)
+    tail = jnp.exp(cl[:, -1:, :, :] - cl)
+    return jnp.einsum("bshk,bshv->bhkv", kk * tail, vv)
+
+
+def _ssm_prefill(params, h, cfg):
+    """ssm_apply + end state (conv tail + final SSD state)."""
+    from repro.models import ssm as ssm_mod
+    s = cfg.ssm
+    proj = h @ params["in_proj"]
+    z, xbc, dt = ssm_mod._split_proj(proj, cfg)
+    xbc_c = ssm_mod._causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc_c[..., :s.d_inner]
+    B = xbc_c[..., s.d_inner:s.d_inner + s.d_state]
+    C = xbc_c[..., s.d_inner + s.d_state:]
+    dtf = jax.nn.softplus(dt.astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))
+    bsz, seq, _ = h.shape
+    xh = xs.reshape(bsz, seq, s.n_heads, s.headdim)
+    y = ssm_mod.ssd_chunked(xh, dtf, params["a_log"], B, C, chunk=s.chunk)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(y.dtype)
+    y = y.reshape(bsz, seq, s.d_inner).astype(h.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    # final state: rerun decay accumulation over the whole sequence
+    A = -jnp.exp(params["a_log"])
+    la = dtf * A
+    cl = jnp.cumsum(la, axis=1)                                 # (B,S,H)
+    tail = jnp.exp(cl[:, -1:, :] - cl)
+    xd = xh * dtf[..., None]
+    S = jnp.einsum("bsh,bsn,bshp->bhnp", tail, B,
+                   xd.astype(jnp.float32))
+    conv_tail = xbc[:, -(s.d_conv - 1):, :]
+    conv_tail = jnp.where(
+        jnp.arange(s.d_conv - 1)[None, :, None] >= (s.d_conv - 1) - seq,
+        conv_tail, 0.0) if seq < s.d_conv - 1 else conv_tail
+    return out, ssm_mod.SSMState(conv_tail, S)

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts: top-k router + capacity-bounded sorted dispatch.
+
+Covers mixtral (8 experts, top-2) and deepseek-v2 (2 shared + 160 routed,
+top-6).  Dispatch is the sort-based formulation: per data-parallel group,
+token→expert assignments are ranked inside each expert with an argsort +
+searchsorted pass, written into an (E, C, D) buffer (unique slots; dropped
+tokens add zeros), processed with one grouped einsum per projection and
+combined back with the gate weights.
+
+Sharding: the (G, E, C, D) dispatch buffer is group-sharded on entry and
+expert-sharded (`experts` logical axis) for the einsums — under GSPMD that
+boundary lowers to the canonical MoE all-to-all.  mixtral (E=8 < mesh model
+axis) instead keeps experts replicated and shards each expert's d_ff
+(`expert_mlp` → 'model'), selected per-config via sharding overrides.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _ACTS, dense_init, mlp_apply, mlp_init
+from repro.parallel import pshard
+
+
+def moe_init(key, cfg, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, m.n_experts, dtype, scale=0.02),
+        "w_gate": _experts_init(ks[1], m.n_experts, d, m.d_expert, dtype),
+        "w_up": _experts_init(ks[2], m.n_experts, d, m.d_expert, dtype),
+        "w_down": _experts_init(ks[3], m.n_experts, m.d_expert, d, dtype),
+    }
+    if m.n_shared:
+        p["shared"] = mlp_init(ks[4], d, m.n_shared * m.d_expert, dtype,
+                               gated=True)
+    return p
+
+
+def _experts_init(key, e, d_in, d_out, dtype):
+    import math
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (e, d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def _route(logits, k: int, norm_topk: bool):
+    """logits (T, E) → (weights (T,k), experts (T,k), probs (T,E))."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    if norm_topk:
+        topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    return topw, topi, probs
+
+
+def _dispatch_group(x, topw, topi, n_experts: int, capacity: int):
+    """One DP group.  x (T, D); topw/topi (T, k) → (buf (E,C,D), meta)."""
+    t, d = x.shape
+    k = topi.shape[-1]
+    n = t * k
+    eid = topi.reshape(n)
+    wgt = topw.reshape(n)
+    tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+
+    order = jnp.argsort(eid, stable=True)
+    s_eid, s_tok, s_wgt = eid[order], tok[order], wgt[order]
+    first = jnp.searchsorted(s_eid, s_eid, side="left")
+    rank = jnp.arange(n, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = rank < capacity
+    slot = s_eid * capacity + jnp.minimum(rank, capacity - 1)
+
+    vals = x[s_tok] * keep[:, None].astype(x.dtype)
+    buf = jnp.zeros((n_experts * capacity, d), x.dtype).at[slot].add(vals)
+    return buf.reshape(n_experts, capacity, d), (s_tok, s_wgt, slot, keep)
+
+
+def _combine_group(y_buf, meta, t: int, d: int):
+    s_tok, s_wgt, slot, keep = meta
+    y = y_buf.reshape(-1, y_buf.shape[-1])[slot]
+    y = y * (s_wgt * keep).astype(y.dtype)[:, None]
+    return jnp.zeros((t, d), y.dtype).at[s_tok].add(y)
+
+
+def moe_apply(params, x, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (out (B,S,D), aux load-balance loss (scalar))."""
+    m = cfg.moe
+    b, s, d = x.shape
+    logits = x @ params["router"]
+    topw, topi, probs = _route(logits.reshape(b * s, m.n_experts), m.top_k,
+                               m.norm_topk)
+
+    # route per-sequence group: keeps gather/scatter local under DP sharding
+    capacity = int(s * m.top_k / m.n_experts * m.capacity_factor) + 1
+    capacity = -(-capacity // 8) * 8                   # pad to sublane
+
+    def group(xg, wg, ig):
+        buf, meta = _dispatch_group(xg, wg, ig, m.n_experts, capacity)
+        return buf, meta
+
+    bufs, metas = jax.vmap(group)(
+        x, topw.reshape(b, s, m.top_k), topi.reshape(b, s, m.top_k))
+
+    bufs = pshard(bufs, "batch", "experts", None, "embed")
+    act = _ACTS[m.act]
+    h = act(jnp.einsum("becd,edf->becf", bufs, params["w_gate"])) \
+        * jnp.einsum("becd,edf->becf", bufs, params["w_up"])
+    y_buf = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    y_buf = pshard(y_buf, "batch", "experts", None, "embed")
+
+    out = jax.vmap(lambda yb, meta: _combine_group(yb, meta, s, d))(
+        y_buf, metas)
+    out = out.astype(x.dtype)
+
+    if m.n_shared:
+        out = out + mlp_apply(params["shared"], x, act=m.act)
+
+    # Switch-style load-balance aux loss
+    pe = probs.mean(axis=0)                                     # (E,)
+    onehot = jax.nn.one_hot(topi[:, 0], m.n_experts, dtype=jnp.float32)
+    fe = onehot.mean(axis=0)
+    aux = m.n_experts * jnp.sum(pe * fe)
+    return out, aux

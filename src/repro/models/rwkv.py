@@ -1,0 +1,205 @@
+"""RWKV6 "Finch" — attention-free time mixing with data-dependent decay.
+
+Implements the v6 time-mix (DDLerp token-shift, LoRA-conditioned per-channel
+decay ``w_t = exp(−exp(w0 + tanh(x·A)·B))``, bonus ``u``) and channel-mix.
+The WKV recurrence
+
+    S_t = diag(w_t)·S_{t−1} + k_t v_tᵀ ;   y_t = r_tᵀ·(S_{t−1} + diag(u)·k_t v_tᵀ)
+
+is evaluated in chunks (GLA-style): within a chunk it is a decay-weighted
+lower-triangular attention; across chunks a scan carries the (H, K, V) state.
+This is the structural cousin of the paper's time-marching field update —
+state advances locally, no reductions (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm_init
+from repro.parallel import pshard
+
+
+def rwkv_init(key, cfg, dtype):
+    d = cfg.d_model
+    lora = cfg.rwkv_lora
+    ks = jax.random.split(key, 12)
+    return {
+        # DDLerp token-shift: 5 streams (r, k, v, w, g)
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dtype),
+        "ts_a": dense_init(ks[1], d, 5 * lora, dtype, scale=0.01),
+        "ts_b": (jax.random.normal(ks[2], (5, lora, d), jnp.float32)
+                 * 0.01).astype(dtype),
+        # decay LoRA
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w_a": dense_init(ks[3], d, lora * 2, dtype, scale=0.01),
+        "w_b": (jax.random.normal(ks[4], (lora * 2, d), jnp.float32)
+                * 0.01).astype(dtype),
+        "u": jnp.zeros((d,), jnp.float32),
+        "wr": dense_init(ks[5], d, d, dtype),
+        "wk": dense_init(ks[6], d, d, dtype),
+        "wv": dense_init(ks[7], d, d, dtype),
+        "wg": dense_init(ks[8], d, d, dtype),
+        "wo": dense_init(ks[9], d, d, dtype),
+        "ln_x": rmsnorm_init(d, dtype),      # per-head group norm surrogate
+    }
+
+
+def rwkv_ffn_init(key, cfg, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "wk": dense_init(ks[0], d, f, dtype),
+        "wv": dense_init(ks[1], f, d, dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def _ddlerp(params, x, xx):
+    """Data-dependent interpolation between x and shifted xx → 5 streams."""
+    base = xx - x                                        # (B,S,D)
+    mix = x + base * params["mu"][:, None, None, :]      # (5,B,S,D)
+    lora = jnp.tanh(x @ params["ts_a"])                  # (B,S,5·L)
+    lora = lora.reshape(*x.shape[:-1], 5, -1)            # (B,S,5,L)
+    dyn = jnp.einsum("bsfl,fld->fbsd", lora, params["ts_b"])
+    return mix + dyn * base[None]
+
+
+def _decay(params, xw):
+    """Per-channel log-decay (≤0): log w = −exp(w0 + tanh(x·A)·B)."""
+    lo = jnp.tanh(xw @ params["w_a"]) @ params["w_b"]
+    return -jnp.exp(params["w0"] + lo.astype(jnp.float32))
+
+
+def wkv_chunked(r, k, v, logw, u, n_heads: int, chunk: int = 64):
+    """Chunked WKV6.  r,k,v (B,S,D); logw (B,S,D) ≤ 0; u (D,).
+
+    Heads split D into (H, K) with K = D // H; V = K.
+    Returns (B, S, D) and needs no state input (train path starts at zero).
+    """
+    b, s, d = r.shape
+    hk = d // n_heads
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nc = s // c
+
+    def hshape(x):
+        return x.reshape(b, nc, c, n_heads, hk)
+
+    rr, kk, vv = hshape(r.astype(jnp.float32)), hshape(k.astype(jnp.float32)), hshape(v.astype(jnp.float32))
+    lw = hshape(logw)
+    uu = u.reshape(n_heads, hk)
+
+    cl = jnp.cumsum(lw, axis=2)                          # (B,nc,c,H,K)
+    # A[i,j] = (r_i ⊙ exp(cl_{i-1}))·(k_j ⊙ exp(−cl_j)) for j < i
+    r_dec = rr * jnp.exp(cl - lw)                        # exp(cl_{i-1})
+    k_dec = kk * jnp.exp(-cl)
+    scores = jnp.einsum("bzihk,bzjhk->bzhij", r_dec, k_dec)
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)         # strictly lower
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bzihk,bzihk->bzhi", rr * uu[None, None, None], kk)
+    y_intra = (jnp.einsum("bzhij,bzjhv->bzihv", scores, vv)
+               + diag[..., None].swapaxes(2, 3) * vv)
+
+    # chunk-state: S_z = Σ_j diag(exp(cl_c − cl_j)) k_j ⊗ v_j
+    tail = jnp.exp(cl[:, :, -1:, :, :] - cl)             # (B,nc,c,H,K)
+    s_chunk = jnp.einsum("bzjhk,bzjhv->bzhkv", kk * tail, vv)
+    g_chunk = jnp.exp(cl[:, :, -1])                      # (B,nc,H,K)
+
+    def carry(S, inp):
+        s_z, g = inp                                     # (B,H,K,V), (B,H,K)
+        return S * g[..., None] + s_z, S
+
+    S0 = jnp.zeros((b, n_heads, hk, hk), jnp.float32)
+    _, S_prev = jax.lax.scan(carry, S0, (s_chunk.swapaxes(0, 1),
+                                         g_chunk.swapaxes(0, 1)))
+    S_prev = S_prev.swapaxes(0, 1)                       # (B,nc,H,K,V)
+    y_inter = jnp.einsum("bzihk,bzhkv->bzihv", r_dec, S_prev)
+    y = y_intra + y_inter
+    return y.reshape(b, s, d)
+
+
+class RWKVState(NamedTuple):
+    tm_shift: jax.Array   # (B, D) last token (time-mix)
+    cm_shift: jax.Array   # (B, D) last token (channel-mix)
+    wkv: jax.Array        # (B, H, K, V) fp32
+
+
+def rwkv_time_mix(params, x, cfg, shift_state=None):
+    """x (B,S,D) → (B,S,D); shift_state (B,D) carries the previous token."""
+    b, s, d = x.shape
+    if shift_state is None:
+        shift_state = jnp.zeros((b, d), x.dtype)
+    xx = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    xr, xk, xv, xw, xg = _ddlerp(params, x, xx)
+    # head-sharded projections: constrain so the WKV chunk math stays local
+    # per head (no activation all-gathers — §Perf rwkv iteration 1)
+    r = pshard(xr @ params["wr"], "batch", "seq", "heads")
+    k = pshard(xk @ params["wk"], "batch", "seq", "heads")
+    v = pshard(xv @ params["wv"], "batch", "seq", "heads")
+    g = jax.nn.silu(pshard(xg @ params["wg"], "batch", "seq", "heads"))
+    logw = pshard(_decay(params, xw), "batch", "seq", "heads")
+    y = wkv_chunked(r, k, v, logw, params["u"], cfg.n_heads, cfg.rwkv_chunk)
+    # per-head group norm ≈ rmsnorm over head dim
+    hk = d // cfg.n_heads
+    yh = y.reshape(b, s, cfg.n_heads, hk)
+    var = jnp.mean(yh * yh, axis=-1, keepdims=True)
+    yh = yh * jax.lax.rsqrt(var + 1e-6)
+    y = (yh.reshape(b, s, d) * params["ln_x"]["scale"].astype(jnp.float32))
+    return (y.astype(x.dtype) * g) @ params["wo"], x[:, -1, :]
+
+
+def rwkv_channel_mix(params, x, shift_state=None):
+    b, s, d = x.shape
+    if shift_state is None:
+        shift_state = jnp.zeros((b, d), x.dtype)
+    xx = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    xk = x + (xx - x) * params["mu_k"]
+    xr = x + (xx - x) * params["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    if x.shape[1] > 1:
+        # train/prefill: constrain so GSPMD contracts locally + all-reduces
+        # (0.5 GB) instead of all-gathering k (3.7 GB).  At decode (S=1) the
+        # same constraint flips GSPMD into gathering the 235 MB weight —
+        # measured regression — so it is sequence-length gated.
+        k = pshard(k, "batch", "seq", "mlp")
+        down = pshard(k @ params["wv"], "batch", "seq", "embed")
+    else:
+        down = k @ params["wv"]
+    return jax.nn.sigmoid(xr @ params["wr"]) * down, x[:, -1, :]
+
+
+def rwkv_time_mix_decode(params, x, state: RWKVState, cfg):
+    """One token.  x (B, 1, D)."""
+    b, _, d = x.shape
+    xx = state.tm_shift[:, None, :]
+    xr, xk, xv, xw, xg = _ddlerp(params, x, xx)
+    r = (xr @ params["wr"]).astype(jnp.float32)
+    k = (xk @ params["wk"]).astype(jnp.float32)
+    v = (xv @ params["wv"]).astype(jnp.float32)
+    g = jax.nn.silu(xg @ params["wg"])
+    w = jnp.exp(_decay(params, xw))                      # (B,1,D)
+    hk = d // cfg.n_heads
+    rh = r.reshape(b, cfg.n_heads, hk)
+    kh = k.reshape(b, cfg.n_heads, hk)
+    vh = v.reshape(b, cfg.n_heads, hk)
+    wh = w.reshape(b, cfg.n_heads, hk)
+    uh = params["u"].reshape(cfg.n_heads, hk)
+    kv = jnp.einsum("bhk,bhv->bhkv", kh, vh)
+    y = jnp.einsum("bhk,bhkv->bhv", rh, state.wkv + uh[None, ..., None] * kv)
+    S = state.wkv * wh[..., None] + kv
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6)
+    y = (y.reshape(b, 1, d) * params["ln_x"]["scale"].astype(jnp.float32))
+    out = (y.astype(x.dtype) * g) @ params["wo"]
+    return out, RWKVState(x[:, -1, :], state.cm_shift, S)
+
+
+def rwkv_channel_mix_decode(params, x, state: RWKVState):
+    y, last = rwkv_channel_mix(params, x, state.cm_shift)
+    return y, RWKVState(state.tm_shift, last, state.wkv)

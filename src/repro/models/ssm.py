@@ -1,0 +1,159 @@
+"""Mamba2 (SSD) block — the zamba2 backbone.
+
+Chunked state-space-duality formulation: within a chunk the recurrence is an
+attention-like masked einsum; across chunks a scan carries the (H, P, N)
+state.  Decode carries (conv_state, ssm_state) and advances in O(1).
+
+Shapes: d_inner = expand·d_model, H = d_inner / headdim heads, state N,
+single B/C group (n_groups=1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+
+def ssm_init(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner
+    h = s.n_heads
+    conv_dim = di + 2 * s.d_state
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z (di), x (di), B (N), C (N), dt (H)]
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * s.d_state + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def _split_proj(proj, cfg):
+    s = cfg.ssm
+    di, n, h = s.d_inner, s.d_state, s.n_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d; xbc (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, a_log, B, C, chunk: int = 128):
+    """SSD scan.  x (B,S,H,P), dt (B,S,H) (post-softplus), B/C (B,S,N).
+
+    Returns y (B,S,H,P).  a = exp(dt·A) with A = −exp(a_log).
+    """
+    bsz, seq, h, p = x.shape
+    n = B.shape[-1]
+    c = min(chunk, seq)
+    while seq % c:
+        c -= 1
+    nc = seq // c
+
+    A = -jnp.exp(a_log)                                  # (H,)
+    la = (dt * A).reshape(bsz, nc, c, h)                 # log decay / step
+    xd = (x * dt[..., None]).reshape(bsz, nc, c, h, p)   # dt-weighted input
+    Bc = B.reshape(bsz, nc, c, n)
+    Cc = C.reshape(bsz, nc, c, n)
+
+    cl = jnp.cumsum(la, axis=2)                          # (B,nc,c,H)
+    # intra-chunk: y[i] += Σ_{j≤i} (C_i·B_j)·exp(cl_i−cl_j)·xd_j
+    scores = jnp.einsum("bzin,bzjn->bzij", Cc, Bc)       # (B,nc,c,c)
+    decay = jnp.exp(cl[:, :, :, None, :] - cl[:, :, None, :, :])  # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    m = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    y_intra = jnp.einsum("bzij,bzijh,bzjhp->bzihp", scores, m, xd)
+
+    # chunk state: S_z = Σ_j exp(cl_c − cl_j)·B_j ⊗ xd_j   (B,nc,H,N,P)
+    tail = jnp.exp(cl[:, :, -1:, :] - cl)                # (B,nc,c,H)
+    s_chunk = jnp.einsum("bzjh,bzjn,bzjhp->bzhnp", tail, Bc, xd)
+    chunk_decay = jnp.exp(cl[:, :, -1, :])               # (B,nc,H)
+
+    def carry_fn(S, inp):
+        s_z, g = inp                                     # (B,H,N,P), (B,H)
+        S_new = S * g[..., None, None] + s_z
+        return S_new, S
+
+    S0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, S_prev = jax.lax.scan(
+        carry_fn, S0,
+        (s_chunk.swapaxes(0, 1).astype(jnp.float32),
+         chunk_decay.swapaxes(0, 1)))
+    S_prev = S_prev.swapaxes(0, 1)                       # (B,nc,H,N,P)
+
+    # inter-chunk: y[i] += exp(cl_i)·C_i·S_prev
+    y_inter = jnp.einsum("bzih,bzin,bzhnp->bzihp",
+                         jnp.exp(cl), Cc, S_prev.astype(x.dtype))
+    y = (y_intra + y_inter).reshape(bsz, seq, h, p)
+    return y
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, d_conv-1, conv_dim)
+    ssm: jax.Array    # (B, H, N, P) fp32
+
+
+def ssm_apply(params, x, cfg):
+    """Training / prefill path.  x: (B, S, D) → (B, S, D)."""
+    s = cfg.ssm
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :s.d_inner]
+    B = xbc[..., s.d_inner:s.d_inner + s.d_state]
+    C = xbc[..., s.d_inner + s.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    bsz, seq, _ = x.shape
+    xh = xs.reshape(bsz, seq, s.n_heads, s.headdim)
+    y = ssd_chunked(xh, dt, params["a_log"], B, C, chunk=s.chunk)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(y.dtype)
+    y = y.reshape(bsz, seq, s.d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"]
+
+
+def ssm_decode(params, x, state: SSMState, cfg, pos):
+    """One-token decode.  x: (B, 1, D)."""
+    s = cfg.ssm
+    proj = x @ params["in_proj"]
+    z, xbc, dt = _split_proj(proj[:, 0], cfg)            # (B, ·)
+    conv_hist = jnp.concatenate([state.conv, xbc[:, None, :]], axis=1)
+    w = params["conv_w"]
+    xbc_c = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", conv_hist, w) + params["conv_b"])
+    new_conv = conv_hist[:, 1:, :]
+
+    xs = xbc_c[..., :s.d_inner]
+    B = xbc_c[..., s.d_inner:s.d_inner + s.d_state]
+    C = xbc_c[..., s.d_inner + s.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["a_log"])
+    a = jnp.exp(dt * A)                                  # (B,H)
+    xh = xs.reshape(-1, s.n_heads, s.headdim)
+    xd = xh * dt[..., None]
+    S = (state.ssm * a[..., None, None]
+         + jnp.einsum("bn,bhp->bhnp", B, xd.astype(jnp.float32)))
+    y = jnp.einsum("bn,bhnp->bhp", C, S.astype(x.dtype))
+    y = y + params["d_skip"][None, :, None].astype(x.dtype) * xh
+    y = y.reshape(-1, 1, s.d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z[:, None, :]))
+    return y @ params["out_proj"], SSMState(new_conv, S)

@@ -1,0 +1,194 @@
+"""Block definitions + per-kind (init, apply, decode, cache) dispatch.
+
+Every block kind is pre-norm residual.  ``mamba_shared`` is the zamba2
+shared-attention step: a Mamba2 block followed by the globally-shared
+attention+MLP block applied to ``concat(x, x_embed)`` (params live once at
+model level and are passed in by closure).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp_apply, mlp_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def block_init(key, kind: str, cfg, dtype) -> Dict[str, Any]:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if kind in ("attn", "attn_moe"):
+        p = {"ln1": rmsnorm_init(d, dtype), "ln2": rmsnorm_init(d, dtype),
+             "attn": attn.attn_init(ks[0], cfg, dtype)}
+        if kind == "attn_moe":
+            p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, dtype,
+                                gated=cfg.gated_mlp)
+        return p
+    if kind in ("mla", "mla_moe"):
+        p = {"ln1": rmsnorm_init(d, dtype), "ln2": rmsnorm_init(d, dtype),
+             "attn": mla_mod.mla_init(ks[0], cfg, dtype)}
+        if kind == "mla_moe":
+            p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, dtype,
+                                gated=cfg.gated_mlp)
+        return p
+    if kind == "rwkv":
+        return {"ln1": rmsnorm_init(d, dtype), "ln2": rmsnorm_init(d, dtype),
+                "tm": rwkv_mod.rwkv_init(ks[0], cfg, dtype),
+                "cm": rwkv_mod.rwkv_ffn_init(ks[1], cfg, dtype)}
+    if kind in ("mamba", "mamba_shared"):
+        return {"ln1": rmsnorm_init(d, dtype),
+                "ssm": ssm_mod.ssm_init(ks[0], cfg, dtype)}
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def shared_block_init(key, cfg, dtype):
+    """zamba2 shared attention+MLP over concat(x, x_embed) (width 2D)."""
+    import dataclasses
+    d2 = 2 * cfg.d_model
+    acfg = dataclasses.replace(
+        cfg, d_model=d2, n_heads=cfg.shared_n_heads,
+        n_kv_heads=cfg.shared_n_heads, head_dim=d2 // cfg.shared_n_heads,
+        qk_norm=False, sliding_window=None, rope_fraction=1.0)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": rmsnorm_init(d2, dtype), "ln2": rmsnorm_init(d2, dtype),
+        "attn": attn.attn_init(ks[0], acfg, dtype),
+        "mlp": mlp_init(ks[1], d2, cfg.shared_d_ff, dtype, gated=True),
+        "out": (jax.random.normal(ks[2], (d2, cfg.d_model), jnp.float32)
+                / jnp.sqrt(d2)).astype(dtype),
+    }, acfg
+
+
+# ---------------------------------------------------------------------------
+# apply (training / prefill)
+# ---------------------------------------------------------------------------
+
+def block_apply(kind: str, params, x, cfg, pos, shared=None, x_embed=None):
+    """Returns (x, aux) where aux is the MoE load-balance loss (or 0)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn", "attn_moe", "mla", "mla_moe"):
+        h = rmsnorm(params["ln1"], x)
+        if kind.startswith("mla"):
+            h = mla_mod.mla_apply(params["attn"], h, cfg, pos)
+        else:
+            h = attn.attn_apply(params["attn"], h, cfg, pos)
+        x = x + h
+        h = rmsnorm(params["ln2"], x)
+        if kind.endswith("moe"):
+            h, aux = moe_mod.moe_apply(params["moe"], h, cfg)
+        else:
+            h = mlp_apply(params["mlp"], h, act=cfg.mlp_act)
+        return x + h, aux
+    if kind == "rwkv":
+        h, _ = rwkv_mod.rwkv_time_mix(params["tm"],
+                                      rmsnorm(params["ln1"], x), cfg)
+        x = x + h
+        h, _ = rwkv_mod.rwkv_channel_mix(params["cm"],
+                                         rmsnorm(params["ln2"], x))
+        return x + h, aux
+    if kind in ("mamba", "mamba_shared"):
+        x = x + ssm_mod.ssm_apply(params["ssm"],
+                                  rmsnorm(params["ln1"], x), cfg)
+        if kind == "mamba_shared":
+            sp, acfg = shared
+            xc = jnp.concatenate([x, x_embed], axis=-1)
+            h = rmsnorm(sp["ln1"], xc)
+            h = attn.attn_apply(sp["attn"], h, acfg, pos)
+            xc = xc + h
+            h = mlp_apply(sp["mlp"], rmsnorm(sp["ln2"], xc), act="silu")
+            x = x + (xc + h) @ sp["out"]
+        return x, aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# cache init + decode
+# ---------------------------------------------------------------------------
+
+def cache_init(kind: str, cfg, batch: int, s_max: int, dtype):
+    """Single-layer cache pytree (stacked by the caller's scan)."""
+    if kind in ("attn", "attn_moe"):
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        return attn.KVCache(
+            jnp.zeros((batch, s_max, kv, hd), dtype),
+            jnp.zeros((batch, s_max, kv, hd), dtype))
+    if kind in ("mla", "mla_moe"):
+        return mla_mod.MLACache(
+            jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+            jnp.zeros((batch, s_max, cfg.qk_rope_dim), dtype))
+    if kind == "rwkv":
+        d = cfg.d_model
+        hk = d // cfg.n_heads
+        return rwkv_mod.RWKVState(
+            jnp.zeros((batch, d), dtype), jnp.zeros((batch, d), dtype),
+            jnp.zeros((batch, cfg.n_heads, hk, hk), jnp.float32))
+    if kind in ("mamba", "mamba_shared"):
+        s = cfg.ssm
+        conv_dim = s.d_inner + 2 * s.d_state
+        st = ssm_mod.SSMState(
+            jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+            jnp.zeros((batch, s.n_heads, s.d_state, s.headdim), jnp.float32))
+        if kind == "mamba_shared":
+            d2 = 2 * cfg.d_model
+            hd2 = d2 // cfg.shared_n_heads
+            return {"ssm": st, "shared_kv": attn.KVCache(
+                jnp.zeros((batch, s_max, cfg.shared_n_heads, hd2), dtype),
+                jnp.zeros((batch, s_max, cfg.shared_n_heads, hd2), dtype))}
+        return st
+    raise ValueError(kind)
+
+
+def block_decode(kind: str, params, x, cache, cfg, pos, shared=None,
+                 x_embed=None):
+    """One-token step.  x: (B, 1, D) → (x, new_cache)."""
+    if kind in ("attn", "attn_moe", "mla", "mla_moe"):
+        h = rmsnorm(params["ln1"], x)
+        if kind.startswith("mla"):
+            h, cache = mla_mod.mla_decode(params["attn"], h, cache, cfg, pos)
+        else:
+            h, cache = attn.attn_decode(params["attn"], h, cache, cfg, pos)
+        x = x + h
+        h = rmsnorm(params["ln2"], x)
+        if kind.endswith("moe"):
+            h, _ = moe_mod.moe_apply(params["moe"], h, cfg)
+        else:
+            h = mlp_apply(params["mlp"], h, act=cfg.mlp_act)
+        return x + h, cache
+    if kind == "rwkv":
+        h, cache = rwkv_mod.rwkv_time_mix_decode(
+            params["tm"], rmsnorm(params["ln1"], x), cache, cfg)
+        x = x + h
+        h, cache = rwkv_mod.rwkv_channel_mix_decode(
+            params["cm"], rmsnorm(params["ln2"], x), cache)
+        return x + h, cache
+    if kind in ("mamba", "mamba_shared"):
+        st = cache["ssm"] if kind == "mamba_shared" else cache
+        h, st = ssm_mod.ssm_decode(params["ssm"],
+                                   rmsnorm(params["ln1"], x), st, cfg, pos)
+        x = x + h
+        if kind == "mamba_shared":
+            sp, acfg = shared
+            xc = jnp.concatenate([x, x_embed], axis=-1)
+            h = rmsnorm(sp["ln1"], xc)
+            h, kv = attn.attn_decode(sp["attn"], h, cache["shared_kv"],
+                                     acfg, pos)
+            xc = xc + h
+            h = mlp_apply(sp["mlp"], rmsnorm(sp["ln2"], xc), act="silu")
+            x = x + (xc + h) @ sp["out"]
+            return x, {"ssm": st, "shared_kv": kv}
+        return x, st
+    raise ValueError(kind)

@@ -1,0 +1,9 @@
+"""repro.optim — AdamW (sharded fp32 state), schedules, grad compression."""
+from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compression import (compress_error_feedback, dequantize_int8,
+                                     quantize_int8)
+
+__all__ = ["adamw_init", "adamw_update", "clip_by_global_norm",
+           "cosine_schedule", "quantize_int8", "dequantize_int8",
+           "compress_error_feedback"]

@@ -1,0 +1,6 @@
+"""repro.parallel — logical-axis sharding rules and mesh context."""
+from repro.parallel.sharding import (ShardingRules, default_rules, pshard,
+                                     use_sharding, param_specs, spec_for)
+
+__all__ = ["ShardingRules", "default_rules", "pshard", "use_sharding",
+           "param_specs", "spec_for"]

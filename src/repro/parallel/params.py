@@ -1,0 +1,116 @@
+"""Parameter logical axes, resolved by leaf name (the model is ours, so the
+name table is exhaustive; anything unknown is replicated and reported).
+
+``param_specs_for(cfg, params_like, rules)`` → pytree of PartitionSpec.
+``cache_specs_for(cfg, cache_like, rules)`` → same for the decode cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.parallel.sharding import ShardingRules
+
+# leaf name → logical axes (without the stacked-layer leading axis)
+_NAME_AXES = {
+    # attention
+    "wq": ("embed", "heads_flat"), "wk": ("embed", "heads_flat"),
+    "wv": ("embed", "heads_flat"), "wo": ("heads_flat", "embed"),
+    "q_norm": (None,), "k_norm": (None,),
+    # mlp
+    "up": ("embed", "mlp"), "gate": ("embed", "mlp"),
+    "down": ("mlp", "embed"),
+    # moe
+    "router": ("embed", None),
+    "w_gate": ("experts", "embed", "expert_mlp"),
+    "w_up": ("experts", "embed", "expert_mlp"),
+    "w_down": ("experts", "expert_mlp", "embed"),
+    # mla
+    "wq_a": ("embed", "q_lora"), "wq_b": ("q_lora", "heads_flat"),
+    "wkv_a": ("embed", None), "wkv_b": ("kv_lora", "heads_flat"),
+    # mamba2
+    "in_proj": ("embed", "conv_dim"), "out_proj": ("ssm_inner", "embed"),
+    "conv_w": (None, "conv_dim"), "conv_b": ("conv_dim",),
+    "dt_bias": (None,), "a_log": (None,), "d_skip": (None,),
+    # rwkv6
+    "wr": ("embed", "heads_flat"), "wg": ("embed", "heads_flat"),
+    "mu": (None, None), "ts_a": ("embed", None), "ts_b": (None, None, None),
+    "w0": (None,), "w_a": ("embed", None), "w_b": (None, None),
+    "u": (None,), "mu_k": (None,), "mu_r": (None,),
+    # norms / embeddings / heads
+    "scale": (None,),
+    "embed": ("vocab", "embed"), "lm_head": ("embed", "vocab"),
+    "out": (None, "embed"),       # zamba shared out-proj (2D → D)
+}
+
+# extra logical axes used only here
+_EXTRA_RULES = {
+    "heads_flat": "model",
+    "ssm_inner": "model",
+}
+
+
+def rules_for(cfg, mesh, overrides: Optional[dict] = None) -> ShardingRules:
+    """Build the rule table for a config (applying its overrides)."""
+    table = dict(_EXTRA_RULES)
+    table.update(dict(cfg.sharding_overrides))
+    if overrides:
+        table.update(overrides)
+    return ShardingRules(mesh, table)
+
+
+def _leaf_name(path) -> str:
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            return str(p.key)
+        if hasattr(p, "name"):
+            return str(p.name)
+    return ""
+
+
+def param_specs_for(cfg, params_like, rules: ShardingRules):
+    """PartitionSpec pytree congruent with ``params_like``."""
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(params_like)
+    specs = []
+    for path, leaf in paths_leaves:
+        name = _leaf_name(path)
+        axes = _NAME_AXES.get(name)
+        shape = tuple(leaf.shape)
+        if axes is None:
+            specs.append(rules.spec([None] * len(shape), shape))
+            continue
+        if len(axes) < len(shape):     # stacked layers / codebooks prefix
+            axes = (None,) * (len(shape) - len(axes)) + tuple(axes)
+        specs.append(rules.spec(axes, shape))
+    return treedef.unflatten(specs)
+
+
+# cache leaf axes by (named-tuple field) name
+_CACHE_AXES = {
+    "k": ("cache_batch", "cache_seq", "cache_heads", None),
+    "v": ("cache_batch", "cache_seq", "cache_heads", None),
+    "c_kv": ("cache_batch", "cache_seq", None),
+    "k_rope": ("cache_batch", "cache_seq", None),
+    "tm_shift": ("cache_batch", None),
+    "cm_shift": ("cache_batch", None),
+    "wkv": ("cache_batch", "rwkv_heads", None, None),
+    "conv": ("cache_batch", None, "conv_dim"),
+    "ssm": ("cache_batch", "ssm_heads", None, None),
+}
+
+
+def cache_specs_for(cfg, cache_like, rules: ShardingRules):
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(cache_like)
+    specs = []
+    for path, leaf in paths_leaves:
+        name = _leaf_name(path)
+        axes = _CACHE_AXES.get(name)
+        shape = tuple(leaf.shape)
+        if axes is None:
+            specs.append(rules.spec([None] * len(shape), shape))
+            continue
+        if len(axes) < len(shape):     # leading stacked-layer dim
+            axes = (None,) * (len(shape) - len(axes)) + tuple(axes)
+        specs.append(rules.spec(axes, shape))
+    return treedef.unflatten(specs)

@@ -1,0 +1,148 @@
+"""Logical-axis sharding (MaxText-style rules → ``PartitionSpec``).
+
+Model code annotates tensors with *logical* axis names
+(``pshard(x, 'batch', 'seq', 'embed')``); a :class:`ShardingRules` table maps
+logical names to physical mesh axes.  Outside a mesh context the annotation
+is a no-op, so the same model code runs on one CPU device, in unit tests and
+on a 512-chip dry-run unchanged.
+
+Hillclimbs swap rule tables, not model code — e.g. remapping ``cache_seq``
+from ``None`` to ``'model'`` turns replicated-KV decode into sequence-sharded
+flash-decode (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_CTX = threading.local()
+
+
+def default_rules() -> Dict[str, MeshAxes]:
+    """Baseline DP+TP mapping for the (pod, data, model) production mesh."""
+    return {
+        "batch": ("pod", "data"),     # DP over pod × data
+        "seq": None,
+        "embed": None,                # activations replicated over model
+        "heads": "model",             # TP: attention heads
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",               # TP: ffn hidden
+        "vocab": "model",             # TP: embedding/lm-head vocab shard
+        "experts": "model",           # EP: routed experts
+        "expert_mlp": None,           # (mixtral remaps this to 'model')
+        "q_lora": None,
+        "kv_lora": None,
+        "cache_batch": ("pod", "data"),
+        # decode caches shard the SEQUENCE over the model axis (distributed
+        # flash-decode: GSPMD turns the softmax/context sums into small
+        # all-reduces).  Head-sharding fails divisibility for most GQA
+        # configs (kv_heads < 16) and replicates the cache 16× — measured
+        # 25–60× worse on qwen3 decode_32k; see EXPERIMENTS.md §Perf.
+        "cache_seq": "model",
+        "cache_heads": None,
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "conv_dim": "model",
+        "rwkv_heads": "model",
+        "layers": None,               # stacked-layer leading axis
+        "stage": None,                # pipeline stages (PP rule set)
+    }
+
+
+class ShardingRules:
+    def __init__(self, mesh, rules: Optional[Dict[str, MeshAxes]] = None):
+        self.mesh = mesh
+        self.rules = dict(default_rules())
+        if rules:
+            self.rules.update(rules)
+        self._axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def mesh_axes(self, logical: Optional[str], dim_size: Optional[int] = None
+                  ) -> MeshAxes:
+        if logical is None:
+            return None
+        ax = self.rules.get(logical)
+        if ax is None:
+            return None
+        # keep only axes present in this mesh (single-pod meshes have no
+        # 'pod' axis; the same rule table serves both)
+        axes = tuple(a for a in ((ax,) if isinstance(ax, str) else ax)
+                     if a in self._axis_sizes)
+        if not axes:
+            return None
+        # drop the mapping if the dimension does not divide the mesh axis —
+        # e.g. kv_heads=8 on model=16 falls back to replication (a baseline
+        # inefficiency the roofline table surfaces).
+        if dim_size is not None:
+            total = 1
+            for a in axes:
+                total *= self._axis_sizes[a]
+            if dim_size % total:
+                return None
+        return axes[0] if len(axes) == 1 else axes
+
+    def spec(self, logical_axes, shape=None) -> P:
+        parts = []
+        for i, name in enumerate(logical_axes):
+            size = None if shape is None else shape[i]
+            parts.append(self.mesh_axes(name, size))
+        return P(*parts)
+
+    def sharding(self, logical_axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_axes, shape))
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_CTX, "rules", None)
+
+
+@contextlib.contextmanager
+def use_sharding(rules: Optional[ShardingRules]):
+    prev = getattr(_CTX, "rules", None)
+    _CTX.rules = rules
+    try:
+        yield rules
+    finally:
+        _CTX.rules = prev
+
+
+def pshard(x, *logical_axes):
+    """Annotate ``x`` with logical axes; no-op outside a mesh context."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def spec_for(rules: Optional[ShardingRules], logical_axes, shape=None):
+    if rules is None:
+        return P()
+    return rules.spec(logical_axes, shape)
+
+
+def param_specs(params_axes, rules: ShardingRules):
+    """Map a pytree of logical-axis tuples to a pytree of PartitionSpec."""
+    return jax.tree.map(
+        lambda axes: rules.spec(axes.axes, axes.shape),
+        params_axes,
+        is_leaf=lambda v: isinstance(v, AxisInfo))
+
+
+class AxisInfo:
+    """Leaf marker: logical axes + shape for one parameter."""
+
+    def __init__(self, axes, shape):
+        self.axes = tuple(axes)
+        self.shape = tuple(shape)
+
+    def __repr__(self):
+        return f"AxisInfo({self.axes}, {self.shape})"

@@ -1,0 +1,5 @@
+"""repro.runtime — fault tolerance, stragglers, elastic scaling."""
+from repro.runtime.fault import HeartbeatMonitor, ResilientLoop
+from repro.runtime.elastic import remesh
+
+__all__ = ["HeartbeatMonitor", "ResilientLoop", "remesh"]

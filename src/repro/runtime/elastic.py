@@ -1,0 +1,40 @@
+"""Elastic scaling: reshard live state onto a different mesh.
+
+The restart path after losing (or gaining) a slice: rebuild the mesh from
+the surviving device set, re-derive shardings from the same logical-axis
+rules, and ``device_put`` every leaf.  Works across any device-count change
+as long as the new mesh axes still divide the sharded dims (the rules table
+falls back to replication otherwise — see ShardingRules.mesh_axes).
+
+Global-batch invariance on shrink is the caller's policy: either raise
+``num_microbatches`` (keep tokens/step constant) or keep per-chip batch and
+rescale LR; ``shrink_plan`` computes both options.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def remesh(tree, specs_tree, new_mesh):
+    """Reshard every leaf of ``tree`` to ``specs_tree`` on ``new_mesh``."""
+    def place(leaf, spec):
+        arr = np.asarray(jax.device_get(leaf))
+        return jax.device_put(
+            arr, jax.sharding.NamedSharding(new_mesh, spec))
+    return jax.tree.map(place, tree, specs_tree)
+
+
+def shrink_plan(old_dp: int, new_dp: int, global_batch: int,
+                num_microbatches: int):
+    """Options for keeping training semantics across a DP-width change."""
+    per_chip = global_batch // (old_dp * num_microbatches)
+    # option A: same global batch, more microbatches
+    mb_needed = -(-global_batch // (new_dp * per_chip))
+    # option B: same microbatches, smaller global batch (+ LR rescale)
+    new_global = new_dp * num_microbatches * per_chip
+    return {
+        "keep_global_batch": {"num_microbatches": mb_needed},
+        "keep_microbatches": {"global_batch": new_global,
+                              "lr_scale": new_global / global_batch},
+    }

@@ -1,0 +1,91 @@
+"""Fault tolerance: checkpoint/restart loop + straggler detection.
+
+``ResilientLoop`` is the production driver contract: run steps; on any
+device/runtime failure, restore the last checkpoint (params, optimizer,
+data-stream position) and continue; give up after ``max_failures``
+consecutive failures.  On real pods the failure signal is an XlaRuntimeError
+from a dead host; here it is any exception from the step callable (tests
+inject them).
+
+``HeartbeatMonitor`` watches wall-clock step durations on a background
+thread and calls ``on_straggler`` when a step exceeds
+``threshold × trailing-median`` — at 1000-node scale this is the hook that
+triggers hot-spare swap / re-slicing.  The monitor only observes; policy
+lives with the caller.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional
+
+
+class HeartbeatMonitor:
+    def __init__(self, threshold: float = 3.0, window: int = 16,
+                 on_straggler: Optional[Callable[[int, float], None]] = None):
+        self.threshold = threshold
+        self.window = window
+        self.on_straggler = on_straggler
+        self.durations: List[float] = []
+        self.flagged: List[int] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def start_step(self, step: int) -> None:
+        self._t0 = time.monotonic()
+        self._step = step
+
+    def end_step(self) -> None:
+        if self._t0 is None:
+            return
+        dt = time.monotonic() - self._t0
+        hist = self.durations[-self.window:]
+        if hist:
+            med = sorted(hist)[len(hist) // 2]
+            if dt > self.threshold * med:
+                self.flagged.append(self._step)
+                if self.on_straggler:
+                    self.on_straggler(self._step, dt / med)
+        self.durations.append(dt)
+        self._t0 = None
+
+
+class ResilientLoop:
+    """Checkpoint/restart training driver.
+
+    ``step_fn(state, batch) -> (state, metrics)`` must be functional;
+    ``save_fn(step, state)`` / ``restore_fn() -> (state, step)`` bind the
+    CheckpointManager; ``dataset`` must be seekable (``state()/restore()``).
+    """
+
+    def __init__(self, step_fn, save_fn, restore_fn, dataset, *,
+                 ckpt_every: int = 100, max_failures: int = 3,
+                 monitor: Optional[HeartbeatMonitor] = None):
+        self.step_fn = step_fn
+        self.save_fn = save_fn
+        self.restore_fn = restore_fn
+        self.dataset = dataset
+        self.ckpt_every = ckpt_every
+        self.max_failures = max_failures
+        self.monitor = monitor or HeartbeatMonitor()
+        self.failures = 0
+
+    def run(self, state, start_step: int, num_steps: int):
+        step = start_step
+        metrics = None
+        while step < start_step + num_steps:
+            try:
+                self.monitor.start_step(step)
+                batch = self.dataset.next_batch()
+                state, metrics = self.step_fn(state, batch)
+                self.monitor.end_step()
+                step += 1
+                self.failures = 0
+                if step % self.ckpt_every == 0:
+                    self.save_fn(step, state)
+            except Exception:
+                self.failures += 1
+                if self.failures > self.max_failures:
+                    raise
+                state, step = self.restore_fn()
+        return state, step, metrics

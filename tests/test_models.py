@@ -1,0 +1,147 @@
+"""Per-arch smoke tests (reduced configs) + decode/prefill parity."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import model as M
+
+
+def _tokens(cfg, key, b, s):
+    shape = (b, s) if cfg.n_codebooks == 1 else (b, s, cfg.n_codebooks)
+    return jax.random.randint(key, shape, 1, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one train step on the reduced config: shapes + no NaN."""
+    cfg = get_config(arch).smoke()
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(key, cfg)
+    tokens = _tokens(cfg, key, 2, 16)
+
+    logits, aux = M.forward(params, tokens, cfg)
+    want = ((2, 16, cfg.vocab_size) if cfg.n_codebooks == 1
+            else (2, 16, cfg.n_codebooks, cfg.vocab_size))
+    assert logits.shape == want
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+
+    from repro.launch.steps import make_opt_state, make_train_step
+    step = jax.jit(make_train_step(cfg))
+    opt = make_opt_state(params)
+    batch = {"tokens": tokens, "labels": tokens}
+    params2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(opt2.step) == 1
+    # params actually moved
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode equals the training forward, token by token."""
+    cfg = get_config(arch).smoke()
+    if cfg.moe:   # avoid train-path capacity drops in the comparison
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    key = jax.random.PRNGKey(1)
+    params = M.init_params(key, cfg)
+    b, s, s0, s_max = 2, 12, 8, 16
+    tokens = _tokens(cfg, key, b, s)
+    full, _ = M.forward(params, tokens, cfg)
+
+    logits_p, cache = M.prefill(params, tokens[:, :s0], cfg, s_max)
+    np.testing.assert_allclose(np.asarray(logits_p[:, 0]),
+                               np.asarray(full[:, s0 - 1]), atol=3e-4)
+    for t in range(s0, s):
+        lg, cache = M.decode_step(params, cache, tokens[:, t:t + 1], t, cfg)
+        np.testing.assert_allclose(np.asarray(lg[:, 0]),
+                                   np.asarray(full[:, t]), atol=3e-4)
+
+
+def test_flat_mode_matches_scan():
+    """scan_layers=False (calibration mode) is numerically identical."""
+    cfg = get_config("qwen3-0.6b").smoke()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = _tokens(cfg, jax.random.PRNGKey(2), 2, 8)
+    a, _ = M.forward(params, tokens, cfg)
+    flat_cfg = dataclasses.replace(cfg, scan_layers=False)
+    b, _ = M.forward(params, tokens, flat_cfg)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_causality():
+    """Future tokens must not influence current logits."""
+    cfg = get_config("qwen3-0.6b").smoke()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    t1 = _tokens(cfg, jax.random.PRNGKey(3), 1, 12)
+    t2 = t1.at[:, 6:].set((t1[:, 6:] + 7) % cfg.vocab_size + 1)
+    l1, _ = M.forward(params, t1, cfg)
+    l2, _ = M.forward(params, t2, cfg)
+    np.testing.assert_allclose(np.asarray(l1[:, :6]), np.asarray(l2[:, :6]),
+                               atol=2e-5)
+
+
+def test_recurrent_causality():
+    """Same property for the recurrent archs (rwkv, zamba2)."""
+    for arch in ("rwkv6-7b", "zamba2-2.7b"):
+        cfg = get_config(arch).smoke()
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        t1 = _tokens(cfg, jax.random.PRNGKey(4), 1, 12)
+        t2 = t1.at[:, 6:].set((t1[:, 6:] + 7) % cfg.vocab_size + 1)
+        l1, _ = M.forward(params, t1, cfg)
+        l2, _ = M.forward(params, t2, cfg)
+        np.testing.assert_allclose(np.asarray(l1[:, :6]),
+                                   np.asarray(l2[:, :6]), atol=2e-5,
+                                   err_msg=arch)
+
+
+def test_mla_absorbed_decode_matches_naive():
+    """The absorbed (latent-space) MLA decode is numerically identical to
+    the naive expand-K/V decode — the beyond-paper serving optimization."""
+    cfg = get_config("minicpm3-4b").smoke()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    tokens = _tokens(cfg, jax.random.PRNGKey(6), 2, 10)
+    _, cache_a = M.prefill(params, tokens[:, :8], cfg, 12)
+    _, cache_b = M.prefill(params, tokens[:, :8], cfg, 12)
+    cfg_abs = dataclasses.replace(cfg, mla_absorbed=True)
+    for t in (8, 9):
+        la, cache_a = M.decode_step(params, cache_a, tokens[:, t:t + 1], t,
+                                    cfg)
+        lb, cache_b = M.decode_step(params, cache_b, tokens[:, t:t + 1], t,
+                                    cfg_abs)
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=5e-4)
+
+
+def test_sliding_window_limits_context():
+    """SWA mask at the attention primitive: one layer's output at position p
+    is independent of K/V beyond the window (across the full model the
+    receptive field legitimately stacks ~layers × window, so the isolation
+    property must be asserted per layer)."""
+    from repro.models.attention import chunked_attention
+    rng = np.random.default_rng(0)
+    b, s, kv, g, hd, w = 1, 16, 2, 2, 8, 8
+    q = jnp.asarray(rng.normal(size=(b, s, kv, g, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, kv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, kv, hd)).astype(np.float32))
+    pos = jnp.arange(s)
+    out1 = chunked_attention(q, k, v, pos, pos, window=w)
+    # perturb K/V at positions 0..1 — outside position 15's window (8..15)
+    k2 = k.at[:, :2].add(3.0)
+    v2 = v.at[:, :2].add(3.0)
+    out2 = chunked_attention(q, k2, v2, pos, pos, window=w)
+    np.testing.assert_allclose(np.asarray(out1[:, 15]),
+                               np.asarray(out2[:, 15]), atol=1e-6)
+    # position 3 is inside the perturbed range: must change
+    assert float(jnp.abs(out1[:, 3] - out2[:, 3]).max()) > 1e-3
+    # and without a window, position 15 must change
+    out3 = chunked_attention(q, k, v, pos, pos, window=None)
+    out4 = chunked_attention(q, k2, v2, pos, pos, window=None)
+    assert float(jnp.abs(out3[:, 15] - out4[:, 15]).max()) > 1e-4

@@ -1,0 +1,132 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.explicit import ftcs_step, interior_mask3d
+from repro.core.implicit import make_operator
+from repro.core.perfmodel import (roofline_time, StepCost, wse_dot_time,
+                                  wse_explicit_rate, wse_implicit_rate)
+
+SMALL = dict(deadline=None, max_examples=20)
+
+
+def _field(draw_shape, values):
+    return values.reshape(draw_shape).astype(np.float32)
+
+
+@given(st.integers(4, 8), st.integers(4, 8), st.integers(4, 8),
+       st.floats(0.01, 1.0 / 6.0), st.integers(0, 1000))
+@settings(**SMALL)
+def test_ftcs_maximum_principle(nx, ny, nz, w, seed):
+    """FTCS with stable ω obeys the discrete maximum principle: values stay
+    inside [min(T0), max(T0)] (no new extrema — the paper's stability
+    condition ω ≤ 1/6)."""
+    rng = np.random.default_rng(seed)
+    T0 = rng.uniform(200.0, 600.0, size=(nx, ny, nz)).astype(np.float32)
+    T = jnp.asarray(T0)
+    for _ in range(3):
+        T = ftcs_step(T, w)
+    assert float(T.max()) <= T0.max() + 1e-2
+    assert float(T.min()) >= T0.min() - 1e-2
+
+
+@given(st.integers(4, 7), st.integers(4, 7), st.integers(4, 7),
+       st.integers(0, 100))
+@settings(**SMALL)
+def test_ftcs_linearity(nx, ny, nz, seed):
+    """The update is affine: step(a+b) - step(b) is linear in a on the
+    interior (superposition — it is a linear PDE)."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(nx, ny, nz)).astype(np.float32)
+    b = rng.normal(size=(nx, ny, nz)).astype(np.float32)
+    w = 0.1
+    sa = np.asarray(ftcs_step(jnp.asarray(a), w))
+    sb = np.asarray(ftcs_step(jnp.asarray(b), w))
+    sab = np.asarray(ftcs_step(jnp.asarray(a + b), w))
+    np.testing.assert_allclose(sab, sa + sb - np.asarray(
+        ftcs_step(jnp.zeros_like(jnp.asarray(a)), w)), atol=1e-3)
+
+
+@given(st.integers(4, 7), st.integers(4, 7), st.integers(4, 7),
+       st.integers(0, 100), st.floats(0.01, 0.16))
+@settings(**SMALL)
+def test_operator_symmetric_on_interior(nx, ny, nz, seed, w):
+    """(x, Ay) == (Ax, y) for interior-supported x, y — CG's requirement."""
+    A, rhs, dot, mask = make_operator(w, (nx, ny, nz))
+    rng = np.random.default_rng(seed)
+    x = jnp.where(mask, jnp.asarray(
+        rng.normal(size=(nx, ny, nz)).astype(np.float32)), 0.0)
+    y = jnp.where(mask, jnp.asarray(
+        rng.normal(size=(nx, ny, nz)).astype(np.float32)), 0.0)
+    lhs = float(dot(x, A(y)))
+    rhs_ = float(dot(A(x), y))
+    np.testing.assert_allclose(lhs, rhs_, rtol=1e-3, atol=1e-3)
+
+
+@given(st.integers(1, 10 ** 6))
+@settings(**SMALL)
+def test_eq6_monotone_in_workload(w):
+    """Eq. 6: iteration rate strictly decreases with workload."""
+    assert wse_explicit_rate(w) > wse_explicit_rate(w + 1)
+
+
+@given(st.integers(1, 10 ** 5), st.integers(1, 750), st.integers(1, 950))
+@settings(**SMALL)
+def test_eq16_le_eq6(w, x, y):
+    """CG is never faster than the explicit step at equal W (paper §3.2.2)."""
+    assert wse_implicit_rate(w, x, y) < wse_explicit_rate(w)
+
+
+@given(st.integers(1, 10 ** 5), st.integers(1, 750), st.integers(1, 950))
+@settings(**SMALL)
+def test_dot_time_additive_in_fabric(w, x, y):
+    """Eq. 17 latency grows exactly linearly in fabric extents."""
+    t0 = wse_dot_time(w, x, y)
+    t1 = wse_dot_time(w, x + 1, y)
+    np.testing.assert_allclose((t1 - t0) * 850e6, 1.0, rtol=1e-6)
+
+
+@given(st.floats(1e6, 1e15), st.floats(1e3, 1e12), st.floats(0, 1e9))
+@settings(**SMALL)
+def test_roofline_bound_identification(flops, bytes_, coll):
+    r = roofline_time(StepCost(flops, bytes_, coll, hops=0))
+    assert r["t_total"] >= max(r["t_compute"], r["t_memory"])
+    assert r["bound"] in ("compute", "memory", "collective")
+
+
+# -- MoE routing invariants ---------------------------------------------------
+
+@given(st.integers(2, 16), st.integers(1, 4), st.integers(0, 50))
+@settings(**SMALL)
+def test_router_weights_normalized(n_experts, k, seed):
+    from repro.models.moe import _route
+    k = min(k, n_experts)
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(32, n_experts)).astype(np.float32))
+    topw, topi, probs = _route(logits, k, norm_topk=True)
+    np.testing.assert_allclose(np.asarray(topw.sum(-1)), 1.0, rtol=1e-4)
+    assert int(topi.max()) < n_experts
+    # chosen experts are the k largest gates
+    np.testing.assert_allclose(
+        np.sort(np.asarray(topw), axis=-1)[:, ::-1], np.asarray(topw)
+        if k == 1 else np.sort(np.asarray(topw), axis=-1)[:, ::-1],
+        rtol=1e-5)
+
+
+@given(st.integers(1, 6), st.integers(0, 20))
+@settings(**SMALL)
+def test_moe_dispatch_conserves_tokens(cap_scale, seed):
+    """With ample capacity every (token, choice) lands in exactly one slot."""
+    from repro.models.moe import _dispatch_group
+    rng = np.random.default_rng(seed)
+    t, d, e, k = 16, 8, 4, 2
+    x = jnp.asarray(rng.normal(size=(t, d)).astype(np.float32))
+    topw = jnp.ones((t, k), jnp.float32) / k
+    topi = jnp.asarray(rng.integers(0, e, size=(t, k)), jnp.int32)
+    capacity = t * k
+    buf, meta = _dispatch_group(x, topw, topi, e, capacity)
+    # total mass conserved: every row of x appears k times across buf
+    np.testing.assert_allclose(float(jnp.abs(buf).sum()),
+                               k * float(jnp.abs(x).sum()), rtol=1e-4)

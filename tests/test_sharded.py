@@ -1,0 +1,183 @@
+"""Multi-device behaviour (4 fake CPU devices via subprocess — the main
+pytest process must keep 1 device for the unit tests)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(code: str, devices: int = 4, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+PREAMBLE = """
+import jax, numpy as np, jax.numpy as jnp
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+T0 = np.ones((8, 12, 10), np.float32) * 500.0
+T0[1:-1, 1:-1, 0] = 300.0
+T0[1:-1, 1:-1, -1] = 400.0
+
+def oracle(T, w, steps):
+    T = T.copy()
+    for _ in range(steps):
+        new = T.copy()
+        new[1:-1,1:-1,1:-1] = (1-6*w)*T[1:-1,1:-1,1:-1] + w*(
+            T[2:,1:-1,1:-1]+T[:-2,1:-1,1:-1]+T[1:-1,2:,1:-1]
+            +T[1:-1,:-2,1:-1]+T[1:-1,1:-1,2:]+T[1:-1,1:-1,:-2])
+        T = new
+    return T
+"""
+
+
+def test_sharded_ftcs_variants_match_oracle():
+    out = run_py(PREAMBLE + """
+from repro.core.explicit import make_sharded_ftcs
+o = oracle(T0, 0.1, 6)
+for kw, steps in [({}, 6), (dict(overlap=True), 6),
+                  (dict(halo_depth=3), 2), (dict(use_kernel=True), 6)]:
+    step, sh = make_sharded_ftcs(mesh, T0.shape, 0.1, steps_per_call=steps,
+                                 **kw)
+    got = np.asarray(jax.device_get(step(jax.device_put(jnp.asarray(T0),
+                                                        sh))))
+    err = abs(got - o).max()
+    assert err < 2e-3, (kw, err)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_sharded_implicit_all_methods():
+    out = run_py(PREAMBLE + """
+from repro.core.implicit import make_sharded_implicit, btcs_solve
+ref, _ = btcs_solve(jnp.asarray(T0), 0.1, 2, method="cg", tol=1e-7,
+                    maxiter=400)
+for m in ["cg", "pipecg", "chebyshev"]:
+    for kernel in [False, True]:
+        step, sh = make_sharded_implicit(mesh, T0.shape, 0.1, method=m,
+                                         tol=1e-6, maxiter=200, steps=2,
+                                         use_kernel=kernel)
+        got = np.asarray(jax.device_get(step(jax.device_put(
+            jnp.asarray(T0), sh))))
+        err = abs(got - np.asarray(ref)).max()
+        assert err < 5e-3, (m, kernel, err)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_wfa_frontend_sharded_backend():
+    out = run_py(PREAMBLE + """
+from repro.core import WSE_Interface, WSE_Array, WSE_For_Loop
+o = oracle(T0, 0.1, 5)
+wse = WSE_Interface()
+c = 0.1; center = 1.0 - 6.0 * c
+T_n = WSE_Array('T_n', init_data=T0)
+with WSE_For_Loop('t', 5):
+    T_n[1:-1, 0, 0] = center * T_n[1:-1, 0, 0] + c * (
+        T_n[2:, 0, 0] + T_n[:-2, 0, 0] + T_n[1:-1, 1, 0]
+        + T_n[1:-1, 0, -1] + T_n[1:-1, -1, 0] + T_n[1:-1, 0, 1])
+a = wse.make(answer=T_n, backend='shard_map', mesh=mesh)
+assert abs(a - o).max() < 2e-3
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_small_mesh_dryrun_and_multipod():
+    """A reduced-scale production dry-run (2×2 and 2×2×2 with pod axis)."""
+    out = run_py("""
+import jax, json
+from repro.launch.mesh import make_mesh2d
+from repro.launch.dryrun import run_cell
+for mesh in [make_mesh2d(2, 2), make_mesh2d(1, 2, pod=2)]:
+    rec = run_cell("qwen3-0.6b", "decode_32k", mesh=mesh, verbose=False,
+                   calibrate=False)
+    assert rec["t_total"] > 0 and rec["bound"] in (
+        "compute", "memory", "collective")
+print("OK")
+""", devices=8)
+    assert "OK" in out
+
+
+def test_train_step_sharded_loss_decreases():
+    out = run_py("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.configs import get_config
+from repro.launch.train import build
+from repro.launch.mesh import make_mesh2d
+from repro.data import TokenDataset, shard_batch
+from repro.parallel.sharding import use_sharding
+
+mesh = make_mesh2d(2, 2)
+cfg = get_config("qwen3-0.6b").smoke()
+import dataclasses
+cfg = dataclasses.replace(cfg, num_microbatches=2)
+params, opt, jitted, rules = build(cfg, mesh, peak_lr=5e-3, warmup=2)
+ds = TokenDataset(cfg.vocab_size, 32, 8)
+sh = jax.sharding.NamedSharding(mesh, rules.spec(("batch", "seq"), (8, 32)))
+losses = []
+with use_sharding(rules):
+    for i in range(14):
+        batch = shard_batch(ds.next_batch(), sh)
+        params, opt, m = jitted(params, opt, batch)
+        losses.append(float(m["loss"]))
+assert losses[-1] < losses[0], losses
+print("OK", losses[0], "->", losses[-1])
+""")
+    assert "OK" in out
+
+
+def test_elastic_remesh_roundtrip():
+    out = run_py("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.runtime.elastic import remesh
+from repro.launch.mesh import make_mesh2d
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+m1 = make_mesh2d(2, 2)
+m2 = make_mesh2d(4, 1)
+tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+specs = {"w": P("data", "model")}
+a = jax.device_put(tree["w"], NamedSharding(m1, specs["w"]))
+out = remesh({"w": a}, specs, m2)
+np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+assert out["w"].sharding.mesh.shape["data"] == 4
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_zero_extended_optimizer_specs():
+    """ZeRO moment sharding: moments gain a data-axis dim, params don't."""
+    out = run_py("""
+import jax
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh2d
+from repro.launch.specs import _zero_extend
+
+mesh = make_mesh2d(2, 2)
+class L:  # shape carrier
+    def __init__(s, shape): s.shape = shape
+
+# free dim divisible by dp=2 → extended
+assert _zero_extend(P(None, "model"), (8, 4), mesh) == P("data", "model")
+# data already used → unchanged
+assert _zero_extend(P("data", None), (8, 4), mesh) == P("data", None)
+# nothing divisible → unchanged
+assert _zero_extend(P(None, "model"), (7, 4), mesh) == P(None, "model")
+# largest free divisible dim wins
+assert _zero_extend(P(None, None), (4, 16), mesh) == P(None, "data")
+print("OK")
+""")
+    assert "OK" in out

@@ -1,0 +1,99 @@
+"""Explicit + implicit solvers vs oracles (single device)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import ftcs_oracle, heat_init
+from repro.core.explicit import ftcs_solve
+from repro.core.implicit import (btcs_solve, chebyshev_bounds, make_operator,
+                                 psi)
+
+
+def test_ftcs_matches_oracle():
+    T0 = heat_init()
+    out = np.asarray(ftcs_solve(jnp.asarray(T0), 0.1, 9))
+    np.testing.assert_allclose(out, ftcs_oracle(T0, 0.1, 9), atol=3e-4)
+
+
+def test_ftcs_steady_state_uniform():
+    """Uniform init + uniform BCs is a fixed point."""
+    T0 = np.full((8, 8, 8), 100.0, np.float32)
+    out = np.asarray(ftcs_solve(jnp.asarray(T0), 0.1, 50))
+    np.testing.assert_allclose(out, T0, atol=1e-3)
+
+
+def _dense_btcs(T0, w):
+    shape = T0.shape
+    n = T0.size
+    psi_ = psi(w)
+
+    def idx(x, y, z):
+        return (x * shape[1] + y) * shape[2] + z
+
+    A = np.eye(n)
+    b = np.zeros(n)
+    for x in range(shape[0]):
+        for y in range(shape[1]):
+            for z in range(shape[2]):
+                i = idx(x, y, z)
+                interior = (0 < x < shape[0] - 1 and 0 < y < shape[1] - 1
+                            and 0 < z < shape[2] - 1)
+                if interior:
+                    for dx, dy, dz in [(1, 0, 0), (-1, 0, 0), (0, 1, 0),
+                                       (0, -1, 0), (0, 0, 1), (0, 0, -1)]:
+                        A[i, idx(x + dx, y + dy, z + dz)] = -w * psi_
+                    b[i] = psi_ * T0[x, y, z]
+                else:
+                    b[i] = T0[x, y, z]
+    return np.linalg.solve(A, b).reshape(shape)
+
+
+@pytest.mark.parametrize("method,maxiter,atol", [
+    ("cg", 400, 2e-4), ("pipecg", 400, 5e-3), ("chebyshev", 80, 2e-4)])
+def test_btcs_one_step_vs_dense(method, maxiter, atol):
+    T0 = heat_init((7, 8, 9))
+    ref = _dense_btcs(T0, 0.1)
+    out, aux = btcs_solve(jnp.asarray(T0), 0.1, 1, method=method,
+                          tol=1e-7, maxiter=maxiter)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=atol)
+
+
+def test_methods_agree_multistep():
+    T0 = heat_init((6, 6, 6))
+    a, _ = btcs_solve(jnp.asarray(T0), 0.1, 3, method="cg", tol=1e-7,
+                      maxiter=300)
+    b, _ = btcs_solve(jnp.asarray(T0), 0.1, 3, method="pipecg", tol=1e-7,
+                      maxiter=300)
+    c, _ = btcs_solve(jnp.asarray(T0), 0.1, 3, method="chebyshev",
+                      maxiter=80)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=1e-3)
+
+
+def test_operator_spd_on_interior():
+    """A is SPD on the interior subspace: x'Ax > 0 for interior x ≠ 0."""
+    shape = (6, 7, 5)
+    A, rhs, dot, mask = make_operator(0.1, shape)
+    rng = np.random.default_rng(3)
+    for _ in range(5):
+        x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+        x = jnp.where(mask, x, 0.0)
+        val = float(dot(x, A(x)))
+        assert val > 0.0
+
+
+def test_chebyshev_bounds_bracket_spectrum():
+    lmin, lmax = chebyshev_bounds(0.1)
+    assert 0.0 < lmin < 1.0 < lmax
+    np.testing.assert_allclose(lmin, 0.625)
+    np.testing.assert_allclose(lmax, 1.375)
+
+
+def test_jacobi_matches_cg():
+    """Reduction-free Jacobi (0 collectives/iter) agrees with CG."""
+    T0 = heat_init((7, 8, 9))
+    ref, _ = btcs_solve(jnp.asarray(T0), 0.1, 2, method="cg", tol=1e-7,
+                        maxiter=300)
+    jac, _ = btcs_solve(jnp.asarray(T0), 0.1, 2, method="jacobi",
+                        maxiter=40)
+    np.testing.assert_allclose(np.asarray(jac), np.asarray(ref), atol=5e-4)

@@ -1,0 +1,102 @@
+"""The WFA NumPy-like frontend (paper Fig. 3): numpy + jit backends."""
+import numpy as np
+import pytest
+
+from conftest import ftcs_oracle, heat_init
+from repro.core import WSE_Array, WSE_For_Loop, WSE_Interface
+
+
+def build_heat_program(T_init, steps, c=0.1):
+    wse = WSE_Interface()
+    center = 1.0 - 6.0 * c
+    T_n = WSE_Array("T_n", init_data=T_init)
+    with WSE_For_Loop("time_loop", steps):
+        T_n[1:-1, 0, 0] = center * T_n[1:-1, 0, 0] \
+            + c * (T_n[2:, 0, 0] + T_n[:-2, 0, 0]
+                   + T_n[1:-1, 1, 0] + T_n[1:-1, 0, -1]
+                   + T_n[1:-1, -1, 0] + T_n[1:-1, 0, 1])
+    return wse, T_n
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jit"])
+def test_fig3_heat_equation(backend):
+    T0 = heat_init()
+    wse, T_n = build_heat_program(T0, steps=7)
+    out = wse.make(answer=T_n, backend=backend)
+    np.testing.assert_allclose(out, ftcs_oracle(T0, 0.1, 7), atol=2e-4)
+
+
+def test_backends_agree():
+    T0 = heat_init((8, 9, 11))
+    wse, T_n = build_heat_program(T0, steps=5)
+    a = wse.make(answer=T_n, backend="numpy")
+    wse, T_n = build_heat_program(T0, steps=5)
+    b = wse.make(answer=T_n, backend="jit")
+    np.testing.assert_allclose(a, b, atol=2e-4)
+
+
+def test_boundaries_pinned():
+    T0 = heat_init()
+    wse, T_n = build_heat_program(T0, steps=10)
+    out = wse.make(answer=T_n, backend="jit")
+    np.testing.assert_array_equal(out[0, :, :], T0[0, :, :])
+    np.testing.assert_array_equal(out[:, :, 0], T0[:, :, 0])
+    np.testing.assert_array_equal(out[:, :, -1], T0[:, :, -1])
+
+
+def test_update_requires_program():
+    T = WSE_Array("T_orphan_ctx", shape=(4, 4, 4))
+    # field created outside any program: updating must fail cleanly
+    with pytest.raises(RuntimeError):
+        T[1:-1, 0, 0] = 2.0 * T[1:-1, 0, 0]
+
+
+def test_mismatched_slice_length_rejected():
+    wse = WSE_Interface()
+    try:
+        T = WSE_Array("T_badslice", shape=(6, 4, 4))
+        with pytest.raises(ValueError):
+            T[1:-1, 0, 0] = T[2:, 0, 0] + T[1:, 0, 0]   # 4 vs 5 cells
+    finally:
+        wse.__exit__()
+
+
+def test_nested_expression_and_scalars():
+    T0 = heat_init((6, 6, 8))
+    wse = WSE_Interface()
+    T = WSE_Array("T_n", init_data=T0)
+    with WSE_For_Loop("t", 3):
+        T[1:-1, 0, 0] = (T[1:-1, 0, 0] * 0.5 + 0.5 * T[1:-1, 0, 0]) \
+            - 0.0 * T[1:-1, 1, 0]
+    out = wse.make(answer=T, backend="jit")
+    np.testing.assert_allclose(out, T0, atol=1e-5)
+
+
+def test_variable_coefficient_diffusion():
+    """The frontend expresses variable-coefficient fields with no core
+    changes (the paper's finite-volume CFD direction): ω becomes a field."""
+    T0 = heat_init((8, 9, 10))
+    rng = np.random.default_rng(0)
+    C0 = rng.uniform(0.02, 0.15, size=T0.shape).astype(np.float32)
+
+    wse = WSE_Interface()
+    T = WSE_Array("T_n", init_data=T0)
+    C = WSE_Array("C_f", init_data=C0)
+    with WSE_For_Loop("t", 4):
+        T[1:-1, 0, 0] = T[1:-1, 0, 0] + C[1:-1, 0, 0] * (
+            T[2:, 0, 0] + T[:-2, 0, 0] + T[1:-1, 1, 0] + T[1:-1, 0, -1]
+            + T[1:-1, -1, 0] + T[1:-1, 0, 1] - 6.0 * T[1:-1, 0, 0])
+    out = wse.make(answer=T, backend="jit")
+
+    # numpy oracle
+    Tn = T0.copy()
+    for _ in range(4):
+        new = Tn.copy()
+        lap = (Tn[2:, 1:-1, 1:-1] + Tn[:-2, 1:-1, 1:-1]
+               + Tn[1:-1, 2:, 1:-1] + Tn[1:-1, :-2, 1:-1]
+               + Tn[1:-1, 1:-1, 2:] + Tn[1:-1, 1:-1, :-2]
+               - 6.0 * Tn[1:-1, 1:-1, 1:-1])
+        new[1:-1, 1:-1, 1:-1] = (Tn[1:-1, 1:-1, 1:-1]
+                                 + C0[1:-1, 1:-1, 1:-1] * lap)
+        Tn = new
+    np.testing.assert_allclose(out, Tn, atol=2e-3)

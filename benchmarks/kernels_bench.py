@@ -39,6 +39,49 @@ def run() -> None:
     emit("fig3_fused_kernel", us_fused,
          f"temporaries=0;speedup={us_gen / us_fused:.2f}")
 
+    frontend_compile()
+
+
+def frontend_compile() -> None:
+    """Fig. 3 loop through the frontend: interpreter-jit vs the program
+    compiler (``backend="pallas"``), with kernel-launch accounting.
+
+    The interpreter traces one roll per stencil term per iteration (7 HBM
+    passes); the compiler emits one fused pallas_call per loop body.  On this
+    CPU container the Pallas kernel runs in interpret mode, so wall time
+    favours the jit interpreter — the number to watch is launches/terms per
+    iteration (the WFA's fused-RPC count); Mosaic compilation on TPU turns
+    that into wall time.
+    """
+    from repro.compiler import reset_stats, stats
+    from repro.core import WSE_Array, WSE_For_Loop, WSE_Interface
+
+    n, steps, c = 24, 10, 0.1
+    T0 = np.ones((n, n, n), np.float32) * 500.0
+    T0[1:-1, 1:-1, 0] = 300.0
+    T0[1:-1, 1:-1, -1] = 400.0
+
+    def make_once(backend):
+        wse = WSE_Interface()
+        center = 1.0 - 6.0 * c
+        T = WSE_Array("T_n", init_data=T0)
+        with WSE_For_Loop("t", steps):
+            T[1:-1, 0, 0] = center * T[1:-1, 0, 0] + c * (
+                T[2:, 0, 0] + T[:-2, 0, 0] + T[1:-1, 1, 0]
+                + T[1:-1, 0, -1] + T[1:-1, -1, 0] + T[1:-1, 0, 1])
+        return wse.make(answer=T, backend=backend)
+
+    us_jit = time_fn(lambda: make_once("jit"), warmup=1, iters=3)
+    emit("frontend_fig3_interpreter_jit", us_jit,
+         f"steps={steps};launches_per_iter=7(one-roll-per-tap)")
+    reset_stats()
+    us_pl = time_fn(lambda: make_once("pallas"), warmup=1, iters=3)
+    emit("frontend_fig3_pallas_compiler", us_pl,
+         f"steps={steps};fused_pallas_calls={stats.kernels_built};"
+         f"launches_per_iter=1;cache_hits={stats.cache_hits};"
+         f"fallbacks={stats.fallbacks};"
+         "note=interpret-mode-wall-time(TPU target=mosaic)")
+
 
 if __name__ == "__main__":
     run()

@@ -1,0 +1,85 @@
+"""Advection–diffusion through the WFA frontend + program compiler.
+
+Transport of a scalar (temperature) by a constant velocity field with
+isotropic diffusion and a diagonal cross-diffusion term:
+
+    ∂T/∂t + u·∇T = κ ∇²T + χ ∂²T/∂ξ∂η
+
+Discretized with first-order upwind advection and FTCS diffusion.  The
+cross-diffusion stencil uses *off-axis* taps — ``T[1:-1, 1, 1]`` and
+``T[1:-1, -1, -1]`` — which none of the hand-wired solver paths (7-point
+heat, hex SpMV) ever compile; the program compiler lowers them like any
+other tap, so ``backend="pallas"`` still fuses the whole update into one
+Pallas kernel per time step.
+
+    PYTHONPATH=src python examples/advection_diffusion.py [--steps 200]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import WSE_Array, WSE_For_Loop, WSE_Interface
+
+
+def build_advection_diffusion(T_init, steps, kappa=0.05, ux=0.1, uy=0.07,
+                              chi=0.02, name="T_adv"):
+    """Record the advection–diffusion program; returns (wse, field).
+
+    ``ux, uy >= 0`` (upwind differences look at the -x / -y neighbours).
+    Stability: kappa <= 1/6 and ux + uy + 6*kappa + 2*chi <= 1.
+    """
+    wse = WSE_Interface()
+    T = WSE_Array(name, init_data=T_init)
+    with WSE_For_Loop("time_loop", steps):
+        T[1:-1, 0, 0] = T[1:-1, 0, 0] \
+            + kappa * (T[2:, 0, 0] + T[:-2, 0, 0]
+                       + T[1:-1, 1, 0] + T[1:-1, -1, 0]
+                       + T[1:-1, 0, 1] + T[1:-1, 0, -1]
+                       - 6.0 * T[1:-1, 0, 0]) \
+            - ux * (T[1:-1, 0, 0] - T[1:-1, -1, 0]) \
+            - uy * (T[1:-1, 0, 0] - T[1:-1, 0, -1]) \
+            + chi * (T[1:-1, 1, 1] + T[1:-1, -1, -1]
+                     - 2.0 * T[1:-1, 0, 0])
+    return wse, T
+
+
+def blob_init(shape=(48, 48, 16)):
+    """A Gaussian blob off-center, zero Dirichlet boundary."""
+    nx, ny, nz = shape
+    x = np.arange(nx)[:, None, None]
+    y = np.arange(ny)[None, :, None]
+    z = np.arange(nz)[None, None, :]
+    T = np.exp(-(((x - nx / 4.0) ** 2) / 18.0
+                 + ((y - ny / 4.0) ** 2) / 18.0
+                 + ((z - nz / 2.0) ** 2) / 8.0)).astype(np.float32)
+    T[0, :, :] = T[-1, :, :] = 0.0
+    T[:, 0, :] = T[:, -1, :] = 0.0
+    return T
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    T0 = blob_init()
+    wse, T = build_advection_diffusion(T0, args.steps)
+    out = wse.make(answer=T, backend="pallas")
+
+    from repro.compiler import stats
+    wse, T = build_advection_diffusion(T0, min(args.steps, 20))
+    check = wse.make(answer=T, backend="numpy")
+
+    cx, cy, _ = np.unravel_index(np.argmax(out), out.shape)
+    print(f"grid {T0.shape}, {args.steps} steps "
+          f"(fused kernels: {stats.kernels_built}, "
+          f"fallbacks: {stats.fallbacks})")
+    print(f"  blob peak drifted to ({cx}, {cy}) "
+          f"from ({T0.shape[0] // 4}, {T0.shape[1] // 4})")
+    print(f"  mass: {out.sum():.4f} (t0: {T0.sum():.4f})")
+    print(f"  numpy validation finite: {np.isfinite(check).all()}")
+    assert cx >= T0.shape[0] // 4 and cy >= T0.shape[1] // 4  # advected +x/+y
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""repro.compiler — lower recorded WFA programs to fused Pallas kernels.
+
+The paper's core move: the NumPy-like Python program compiles into bytecode
+whose *fused* RPCs give the WSE its two-orders-of-magnitude win.  This
+package is the JAX analogue for the recorded ``Program``: instead of
+interpreting one ``jnp.roll`` per stencil term, ``backend="pallas"`` lowers
+every ``ForLoop`` body through
+
+1. :mod:`~repro.compiler.ir` — normalization to a canonical sum of
+   ``coeff · field[dz, dx, dy]`` taps (constant folding, like-term merging,
+   variable-coefficient products, non-affine rejection);
+2. :mod:`~repro.compiler.codegen` — one fused ``pl.pallas_call`` per loop
+   body via :mod:`repro.kernels.fused`, with the Moat mask applied in-kernel,
+   memoized by program signature;
+3. backend integration in :mod:`repro.core.program` (single device, wrapped
+   in ``lax.fori_loop``) and :mod:`repro.core.halo` (halo-pad brick → fused
+   kernel inside ``shard_map``), with a logged interpreter fallback whenever
+   lowering is unsupported.
+"""
+from repro.compiler.codegen import (CompilerStats, clear_cache, compile_group,
+                                    compile_group_sharded, reset_stats, stats,
+                                    try_compile)
+from repro.compiler.ir import (AffineUpdate, LoweredGroup, LoweringError, Tap,
+                               lower_group, lower_update)
+
+
+__all__ = [
+    "AffineUpdate", "CompilerStats", "LoweredGroup", "LoweringError", "Tap",
+    "clear_cache", "compile_group", "compile_group_sharded",
+    "lower_group", "lower_update", "reset_stats", "stats", "try_compile",
+]

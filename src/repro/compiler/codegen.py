@@ -1,0 +1,189 @@
+"""Codegen pass + kernel cache for the WFA program compiler.
+
+``compile_group`` turns one loop body's lowered :class:`LoweredGroup` into a
+``step(env) -> env`` function around exactly one fused ``pl.pallas_call``
+(built by :func:`repro.kernels.fused.build_fused_call`).  Kernels are
+memoized by *program signature* — the lowered tap form plus field
+shapes/dtypes and block/interpret settings — so re-making an identical
+program (the WFA's repeated ``make_WSE`` workflow) reuses the compiled
+kernel; :data:`stats` exposes build/hit/fallback counters for tests and
+benchmarks.
+
+Two integration points:
+
+* :func:`compile_group` — single device.  Inputs are wrap-padded with
+  ``jnp.pad`` so out-of-domain taps reproduce the interpreter's ``jnp.roll``
+  semantics bit-for-bit (wrap-around only ever lands in Moat cells for
+  depth-1 stencils; for wider stencils the backends still agree because both
+  wrap).
+* :func:`compile_group_sharded` — inside ``shard_map``.  The brick is
+  halo-padded with ``core.halo.halo_pad`` (ICI ppermute) and the kernel's
+  Moat mask is driven by the brick's mesh coordinates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compiler.ir import LoweredGroup, LoweringError, lower_group
+
+log = logging.getLogger("repro.compiler")
+
+
+@dataclasses.dataclass
+class CompilerStats:
+    """Counters for the fused-kernel pipeline (reset with ``reset_stats``)."""
+
+    groups_fused: int = 0      # loop bodies routed to a fused kernel
+    kernels_built: int = 0     # distinct pallas_call sites constructed
+    cache_hits: int = 0        # loop bodies served from the kernel cache
+    fallbacks: int = 0         # loop bodies routed to the interpreter
+    fallback_reasons: Tuple[str, ...] = ()
+
+    def note_fallback(self, reason: str) -> None:
+        self.fallbacks += 1
+        self.fallback_reasons = self.fallback_reasons + (reason,)
+
+
+stats = CompilerStats()
+
+_KERNEL_CACHE: Dict[tuple, object] = {}
+
+
+def reset_stats() -> None:
+    # mutate in place so `from repro.compiler import stats` stays live
+    stats.groups_fused = 0
+    stats.kernels_built = 0
+    stats.cache_hits = 0
+    stats.fallbacks = 0
+    stats.fallback_reasons = ()
+
+
+def clear_cache() -> None:
+    _KERNEL_CACHE.clear()
+
+
+def try_compile(compile_fn, loop):
+    """Shared fallback policy for both pallas backends (single + sharded).
+
+    Runs ``compile_fn()``; on :class:`LoweringError` counts the fallback,
+    logs the reason, and returns ``None`` so the caller substitutes its
+    interpreter step.  Keeping the policy here stops the two call sites from
+    diverging in accounting or log wording.
+    """
+    try:
+        return compile_fn()
+    except LoweringError as e:
+        stats.note_fallback(str(e))
+        log.warning(
+            "pallas lowering failed for loop %r: %s — falling back to the "
+            "interpreter for this body", getattr(loop, "name", None), e)
+        return None
+
+
+def _field_specs(group: LoweredGroup, shapes: Dict[str, tuple],
+                 dtypes: Dict[str, object]):
+    """Ordered name -> (nz, dtype); validates a common (X, Y) extent."""
+    names = list(group.fields_written())
+    for n in group.fields_read():
+        if n not in names:
+            names.append(n)
+    base_xy = shapes[names[0]][:2]
+    for n in names:
+        if shapes[n][:2] != base_xy:
+            raise LoweringError(
+                f"fields {names[0]!r} {shapes[names[0]]} and {n!r} "
+                f"{shapes[n]} disagree in (X, Y); cannot fuse")
+    specs = {n: (shapes[n][2], dtypes[n]) for n in names}
+    return specs, base_xy
+
+
+def _get_kernel(group: LoweredGroup, specs, bx, by, nx, ny, block, interpret):
+    from repro.kernels.fused import build_fused_call
+    sig = (group, tuple((n, s[0], jnp.dtype(s[1]).name) for n, s in
+                        specs.items()), bx, by, nx, ny, tuple(block),
+           bool(interpret))
+    hit = _KERNEL_CACHE.get(sig)
+    if hit is not None:
+        stats.cache_hits += 1
+        return hit
+    kernel = build_fused_call(group.updates, specs, group.halo, bx, by,
+                              nx, ny, block=block, interpret=interpret)
+    stats.kernels_built += 1
+    _KERNEL_CACHE[sig] = kernel
+    return kernel
+
+
+def compile_group(ops, shapes: Dict[str, tuple], dtypes: Dict[str, object],
+                  block=(8, 128), interpret: bool = False):
+    """Lower + codegen one loop body for single-device execution.
+
+    Returns ``step(env) -> env`` fusing all of ``ops`` into one pallas_call.
+    Raises :class:`LoweringError` when the body cannot be fused (the caller
+    falls back to the interpreter and logs the reason).
+    """
+    group = lower_group(ops)
+    specs, (nx, ny) = _field_specs(group, shapes, dtypes)
+    fused, written = _get_kernel(group, specs, nx, ny, nx, ny, block,
+                                 interpret)
+    h = group.halo
+    in_names = list(specs)
+    coords = jnp.zeros((1, 2), jnp.int32)
+    stats.groups_fused += 1
+
+    def step(env):
+        env = dict(env)
+        padded = [env[n] if h == 0 else
+                  jnp.pad(env[n], ((h, h), (h, h), (0, 0)), mode="wrap")
+                  for n in in_names]
+        outs = fused(coords, *padded)
+        for name, out in zip(written, outs):
+            env[name] = out
+        return env
+
+    return step
+
+
+def compile_group_sharded(ops, shapes: Dict[str, tuple],
+                          dtypes: Dict[str, object], *, mesh_xy, axis_names,
+                          block=(8, 128), interpret: bool = False):
+    """Lower + codegen one loop body for use *inside* ``shard_map``.
+
+    ``shapes`` are the global field shapes; the returned ``step`` operates on
+    the per-device brick env (halo-pads it with ppermute, then runs the same
+    fused kernel with mesh-derived coordinates).
+    """
+    from repro.core.halo import halo_pad
+
+    group = lower_group(ops)
+    specs, (nx, ny) = _field_specs(group, shapes, dtypes)
+    mx, my = mesh_xy
+    ax_x, ax_y = axis_names
+    if nx % mx or ny % my:
+        raise LoweringError(
+            f"global extent ({nx},{ny}) not divisible by mesh ({mx},{my})")
+    bx, by = nx // mx, ny // my
+    fused, written = _get_kernel(group, specs, bx, by, nx, ny, block,
+                                 interpret)
+    h = group.halo
+    in_names = list(specs)
+    stats.groups_fused += 1
+
+    def step(env):
+        env = dict(env)
+        cx = jax.lax.axis_index(ax_x) * bx
+        cy = jax.lax.axis_index(ax_y) * by
+        coords = jnp.stack([cx, cy]).astype(jnp.int32).reshape(1, 2)
+        padded = [env[n] if h == 0 else
+                  halo_pad(env[n], h, ax_x, ax_y, mx, my)
+                  for n in in_names]
+        outs = fused(coords, *padded)
+        for name, out in zip(written, outs):
+            env[name] = out
+        return env
+
+    return step

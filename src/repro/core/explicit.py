@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.jaxcompat import shard_map
 from repro.core.halo import halo_pad, local_moat_mask
 
 
@@ -183,6 +184,6 @@ def make_sharded_ftcs(mesh, shape, w: float, *, overlap: bool = False,
 
         return jax.lax.fori_loop(0, steps_per_call, body, T)
 
-    step = jax.jit(jax.shard_map(local, mesh=mesh, in_specs=(spec,),
-                                 out_specs=spec, check_vma=False))
+    step = jax.jit(shard_map(local, mesh=mesh, in_specs=(spec,),
+                                 out_specs=spec, check=False))
     return step, sharding

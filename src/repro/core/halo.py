@@ -21,6 +21,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import stencil as st
+from repro.core.jaxcompat import shard_map
 from repro.core.program import Program, _group_ops
 
 
@@ -91,8 +92,16 @@ def default_mesh2d():
     return jax.make_mesh((mx, n // mx), ("data", "model"))
 
 
-def run_sharded(program: Program, env: Dict[str, np.ndarray], mesh=None):
-    """Execute a recorded WFA program on a 2-D device mesh."""
+def run_sharded(program: Program, env: Dict[str, np.ndarray], mesh=None,
+                use_pallas: bool = False):
+    """Execute a recorded WFA program on a 2-D device mesh.
+
+    With ``use_pallas=True`` each ForLoop body is lowered by repro.compiler
+    to one fused Pallas kernel applied to the halo-padded brick inside the
+    mapped function (halo-pad → fused kernel — the ``backend="pallas"``
+    composition); bodies that cannot be lowered fall back to the per-term
+    roll interpreter below with a logged reason.
+    """
     if mesh is None:
         mesh = default_mesh2d()
     ax_x, ax_y = mesh.axis_names[-2], mesh.axis_names[-1]
@@ -109,10 +118,27 @@ def run_sharded(program: Program, env: Dict[str, np.ndarray], mesh=None):
     genv = {k: jax.device_put(jnp.asarray(v), sharding) for k, v in env.items()}
     specs = {k: spec for k in genv}
 
+    fused_steps = {}
+    if use_pallas:
+        from repro.compiler import compile_group_sharded, try_compile
+        from repro.kernels.ops import _interpret
+
+        dtypes = {k: v.dtype for k, v in genv.items()}
+        for gi, (loop, ops) in enumerate(_group_ops(program)):
+            step = try_compile(
+                lambda: compile_group_sharded(
+                    ops, shapes, dtypes, mesh_xy=(mx, my),
+                    axis_names=(ax_x, ax_y), interpret=_interpret()), loop)
+            if step is not None:
+                fused_steps[gi] = step
+
     def local_step(env_local):
         e = dict(env_local)
-        for loop, ops in _group_ops(program):
-            def body(e, ops=ops):
+        for gi, (loop, ops) in enumerate(_group_ops(program)):
+            fused = fused_steps.get(gi)
+            def body(e, ops=ops, fused=fused):
+                if fused is not None:
+                    return fused(e)
                 e = dict(e)
                 for op in ops:
                     h = max(1, op.expr.max_offset())
@@ -135,7 +161,7 @@ def run_sharded(program: Program, env: Dict[str, np.ndarray], mesh=None):
         return e
 
     stepped = jax.jit(
-        jax.shard_map(local_step, mesh=mesh, in_specs=(specs,),
-                      out_specs=specs, check_vma=False))
+        shard_map(local_step, mesh=mesh, in_specs=(specs,),
+                  out_specs=specs, check=False))
     out = stepped(genv)
     return {k: np.asarray(jax.device_get(v)) for k, v in out.items()}

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.jaxcompat import shard_map
 from repro.core.explicit import (interior_mask3d, neighbor_sum_padded,
                                  _fix_z_boundary)
 from repro.core.halo import halo_pad, local_moat_mask
@@ -356,8 +357,8 @@ def make_sharded_iteration(mesh, shape, w: float, *, method: str = "cg",
     vspec = spec
     sspec = jax.sharding.PartitionSpec()
     state_spec = tuple([vspec] * n_vec + [sspec] * n_scal)
-    step = jax.jit(jax.shard_map(local, mesh=mesh, in_specs=(state_spec,),
-                                 out_specs=state_spec, check_vma=False))
+    step = jax.jit(shard_map(local, mesh=mesh, in_specs=(state_spec,),
+                                 out_specs=state_spec, check=False))
     return step, state_sds
 
 
@@ -423,6 +424,6 @@ def make_sharded_implicit(mesh, shape, w: float, *, method: str = "cg",
         T2, aux = jax.lax.scan(one, T, None, length=steps)
         return T2
 
-    step = jax.jit(jax.shard_map(local, mesh=mesh, in_specs=(spec,),
-                                 out_specs=spec, check_vma=False))
+    step = jax.jit(shard_map(local, mesh=mesh, in_specs=(spec,),
+                                 out_specs=spec, check=False))
     return step, sharding

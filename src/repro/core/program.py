@@ -9,6 +9,10 @@ Three backends mirror the WFA's workflow:
 * ``numpy``   — the WFA "validation capability" (runs the ops eagerly in NumPy)
 * ``jit``     — single-device compiled execution
 * ``shard_map`` — distributed bricks with halo exchange (see core/halo.py)
+* ``pallas``  — the program *compiler* (repro.compiler): every ForLoop body
+  lowers to one fused Pallas kernel (all taps of all updates in a single
+  VMEM pass — the WFA's fused-RPC win) with an interpreter fallback for
+  bodies that cannot be lowered; pass ``mesh=`` to compose with shard_map.
 """
 from __future__ import annotations
 
@@ -71,12 +75,24 @@ class Program:
         self.fields[field.name] = field
 
     def record_update(self, field, target_z: slice, expr: st.StencilExpr):
-        # validate: every term's z slice must match the target length
+        # Normalize every z slice (target and terms) to concrete non-negative
+        # (start, stop) via slice.indices, so negative-start spellings like
+        # T[-9:-1, 0, 0] validate and evaluate identically to their
+        # non-negative equivalents, and the compiler can compute z deltas by
+        # plain subtraction of starts.
         n = field.shape[2]
-        tlen = len(range(*target_z.indices(n)))
+        t0, t1, _ = target_z.indices(n)
+        target_z = slice(t0, t1)
+        nz_of = {name: f.shape[2] for name, f in self.fields.items()}
         for t in expr.terms():
-            f = self.fields[t.field_name]
-            zlen = len(range(*t.zslice_obj().indices(f.shape[2])))
+            if t.field_name not in nz_of:
+                raise ValueError(
+                    f"term references field {t.field_name!r} that is not "
+                    "registered in this program")
+        expr = st.normalize_zslices(expr, nz_of)
+        tlen = t1 - t0
+        for t in expr.terms():
+            zlen = t.zslice[1] - t.zslice[0]
             if zlen != tlen:
                 raise ValueError(
                     f"term {t.field_name}[{t.zslice}] length {zlen} != "
@@ -127,6 +143,13 @@ class WFAInterface:
             elif backend == "shard_map":
                 from repro.core.halo import run_sharded
                 out = run_sharded(self.program, env, mesh=mesh)
+            elif backend == "pallas":
+                if mesh is not None:
+                    from repro.core.halo import run_sharded
+                    out = run_sharded(self.program, env, mesh=mesh,
+                                      use_pallas=True)
+                else:
+                    out = _run_pallas(self.program, env)
             else:
                 raise ValueError(f"unknown backend {backend!r}")
         finally:
@@ -179,22 +202,63 @@ def _run_numpy(program: Program, env):
     return env
 
 
-def _run_jax(program: Program, env):
-    env = {k: jnp.asarray(v) for k, v in env.items()}
+def _interp_step(ops):
+    """Traced interpreter step for one op group: one roll per stencil term.
+
+    Shared by the ``jit`` backend and the ``pallas`` backend's fallback path
+    so their semantics cannot diverge.
+    """
     roll = lambda a, s, ax: jnp.roll(a, s, axis=ax)
 
-    def body(ops):
-        def f(e):
-            e = dict(e)
-            for op in ops:
-                e[op.field_name] = _apply_op(op, e, jnp, roll)
-            return e
-        return f
+    def f(e):
+        e = dict(e)
+        for op in ops:
+            e[op.field_name] = _apply_op(op, e, jnp, roll)
+        return e
+    return f
+
+
+def _run_jax(program: Program, env):
+    env = {k: jnp.asarray(v) for k, v in env.items()}
 
     @jax.jit
     def run(env):
         for loop, ops in _group_ops(program):
-            step = body(ops)
+            step = _interp_step(ops)
+            if loop is None:
+                env = step(env)
+            else:
+                env = jax.lax.fori_loop(0, loop.n, lambda i, e: step(e), env)
+        return env
+
+    return jax.device_get(run(env))
+
+
+def _run_pallas(program: Program, env):
+    """Compiled backend: one fused Pallas kernel per ForLoop body.
+
+    Each loop body is lowered through repro.compiler (IR normalization →
+    fused-kernel codegen, memoized by program signature); bodies that cannot
+    be lowered fall back to the roll-based interpreter step with a logged
+    reason, inside the same jitted run.
+    """
+    from repro.compiler import compile_group, try_compile
+    from repro.kernels.ops import _interpret
+
+    env = {k: jnp.asarray(v) for k, v in env.items()}
+    shapes = {n: f.shape for n, f in program.fields.items()}
+    dtypes = {n: env[n].dtype for n in env}
+
+    steps = []
+    for loop, ops in _group_ops(program):
+        step = try_compile(
+            lambda: compile_group(ops, shapes, dtypes,
+                                  interpret=_interpret()), loop)
+        steps.append((loop, step if step is not None else _interp_step(ops)))
+
+    @jax.jit
+    def run(env):
+        for loop, step in steps:
             if loop is None:
                 env = step(env)
             else:

@@ -29,16 +29,21 @@ import numpy as np
 Scalar = Union[int, float]
 
 
-def _slice_delta(zslice: slice, target: slice) -> int:
+def zslice_delta(zslice: slice, target: slice) -> int:
     """Relative Z offset of a term slice w.r.t. the update target slice.
 
     The WFA convention writes the target as ``T[1:-1, 0, 0]`` and neighbours
     as ``T[2:, 0, 0]`` (z+1) / ``T[:-2, 0, 0]`` (z-1).  Both slices must have
-    equal length; the delta is the difference of their start offsets.
+    equal length and be *normalized* — concrete, non-negative start/stop as
+    produced by ``slice.indices`` in :meth:`Program.record_update`.  Raw
+    subtraction of starts is wrong for negative-start spellings like
+    ``T[-9:-1, 0, 0]``, which is why normalization happens at record time.
     """
-    t0 = 0 if target.start is None else target.start
-    s0 = 0 if zslice.start is None else zslice.start
-    return s0 - t0
+    if (zslice.start is None or target.start is None
+            or zslice.start < 0 or target.start < 0):
+        raise ValueError("zslice_delta requires normalized slices "
+                         "(record the update through a Program first)")
+    return zslice.start - target.start
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +116,26 @@ def _lift(v) -> StencilExpr:
     if isinstance(v, (int, float, np.floating, np.integer)):
         return Const(float(v))
     raise TypeError(f"cannot use {type(v)} in a stencil expression")
+
+
+def normalize_zslices(e: StencilExpr, nz_of: Dict[str, int]) -> StencilExpr:
+    """Rewrite every :class:`Term` with a concrete ``(start, stop)`` z slice.
+
+    ``nz_of`` maps field names to their Z extent.  Negative or open-ended
+    slice spellings (``T[-9:-1]``, ``T[2:]``) are resolved via
+    ``slice.indices`` so downstream passes (length validation, the compiler's
+    :func:`zslice_delta`) can do plain integer arithmetic on starts.
+    """
+    if isinstance(e, Term):
+        start, stop, _ = e.zslice_obj().indices(nz_of[e.field_name])
+        return dataclasses.replace(e, zslice=(start, stop, None))
+    if isinstance(e, BinOp):
+        return dataclasses.replace(
+            e,
+            lhs=normalize_zslices(e.lhs, nz_of),
+            rhs=normalize_zslices(e.rhs, nz_of),
+        )
+    return e
 
 
 def _collect_terms(e: StencilExpr, out) -> None:

@@ -1,0 +1,159 @@
+"""Generic fused stencil kernel — arbitrary tap sets, multiple outputs.
+
+This generalizes the hand-fused 7-point :mod:`repro.kernels.stencil7` to any
+canonical tap form produced by :mod:`repro.compiler.ir`: arbitrary (dz, dx,
+dy) offsets within a halo of depth ``h`` (off-axis/diagonal taps included),
+variable-coefficient products of up to two taps, several ``UpdateOp``s — and
+several *output fields* — fused into a single ``pl.pallas_call`` per loop
+body.  Each grid cell loads one overlapping ``(bxb+2h, byb+2h, Z)`` window
+per input field (``pl.Element`` indexing, exactly the stencil7 layout),
+evaluates every update's tap sum in VMEM, applies the Dirichlet Moat mask
+in-kernel from global coordinates, and writes one ``(bxb, byb, Z)`` tile per
+written field.  Sequential updates inside one body see earlier updates'
+*local* values (dx = dy = 0 reads only — the lowering pass rejects the rest),
+mirroring the Control Tile's ordered RPC stream.
+
+The caller supplies halo-padded inputs: ``jnp.pad(..., mode="wrap")`` on a
+single device (matching the interpreter's ``jnp.roll`` semantics exactly) or
+``core.halo.halo_pad`` (ICI ppermute) inside ``shard_map``.  ``coords`` is a
+(1, 2) int32 array with the brick's global cell origin so one kernel image
+serves every brick — how one Worker image serves the whole WSE fabric.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.compat import element_block_spec
+from repro.kernels.stencil7 import _pick_block
+
+
+def _read_tap(tap, u, window, center, h, bxb, byb):
+    """Value of one tap over the update's target block, (bxb, byb, zlen)."""
+    zlo = u.z0 + tap.dz
+    if tap.field in center:
+        # field already updated this body: lowering guarantees dx == dy == 0,
+        # so the read is block-local (the Z column lives in this block).
+        return center[tap.field][:, :, zlo:zlo + u.zlen]
+    w = window[tap.field]
+    x0 = h + tap.dx
+    y0 = h + tap.dy
+    return w[x0:x0 + bxb, y0:y0 + byb, zlo:zlo + u.zlen]
+
+
+def _fused_body(updates, in_names, written, nz_of, h, bxb, byb, nx, ny,
+                coords_ref, *refs):
+    window = dict(zip(in_names, (r[...] for r in refs[:len(in_names)])))
+    out_refs = dict(zip(written, refs[len(in_names):]))
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    gx0 = coords_ref[0, 0] + i * bxb
+    gy0 = coords_ref[0, 1] + j * byb
+
+    center: Dict[str, jnp.ndarray] = {}   # full-Z center blocks, post-update
+    for u in updates:
+        nz = nz_of[u.field]
+        if u.field in center:
+            old = center[u.field]
+        else:
+            w = window[u.field]
+            old = w[h:h + bxb, h:h + byb, :]
+        dtype = old.dtype
+        # group products sharing a scalar coefficient: sum first, multiply
+        # once — fewer VPU multiplies and the same association the source
+        # spelling `c * (T_E + T_W + ...)` used, so rounding matches the
+        # interpreter to ~1 ulp.
+        groups: Dict[float, jnp.ndarray] = {}
+        for coeff, taps in u.terms:
+            t = _read_tap(taps[0], u, window, center, h, bxb, byb)
+            for tap in taps[1:]:
+                t = t * _read_tap(tap, u, window, center, h, bxb, byb)
+            groups[coeff] = t if coeff not in groups else groups[coeff] + t
+        acc = None
+        for coeff, t in groups.items():
+            if coeff != 1.0:
+                t = dtype.type(coeff) * t
+            acc = t if acc is None else acc + t
+        if acc is None:
+            acc = jnp.full((bxb, byb, u.zlen), u.const, dtype)
+        elif u.const != 0.0:
+            acc = acc + dtype.type(u.const)
+
+        row = jax.lax.broadcasted_iota(jnp.int32, (bxb, byb, u.zlen), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (bxb, byb, u.zlen), 1)
+        gx = gx0 + row
+        gy = gy0 + col
+        interior = (gx > 0) & (gx < nx - 1) & (gy > 0) & (gy < ny - 1)
+        old_z = old[:, :, u.z0:u.z0 + u.zlen]
+        new_z = jnp.where(interior, acc, old_z)
+        parts = []
+        if u.z0 > 0:
+            parts.append(old[:, :, :u.z0])
+        parts.append(new_z)
+        if u.z0 + u.zlen < nz:
+            parts.append(old[:, :, u.z0 + u.zlen:])
+        center[u.field] = (jnp.concatenate(parts, axis=2)
+                           if len(parts) > 1 else new_z)
+
+    for name in written:
+        out_refs[name][...] = center[name]
+
+
+def build_fused_call(updates: Sequence, field_specs: Dict[str, Tuple[int, object]],
+                     halo: int, bx: int, by: int, nx: int, ny: int,
+                     block=(8, 128), interpret: bool = False):
+    """Build the fused kernel for one loop body.
+
+    ``updates``     — :class:`repro.compiler.ir.AffineUpdate`s, program order.
+    ``field_specs`` — ordered ``name -> (nz, dtype)`` for every field the body
+                      reads or writes; all share the brick extent (bx, by).
+    ``bx, by``      — brick extent (global grid on 1 device, local brick under
+                      ``shard_map``); ``nx, ny`` — global extent for the Moat.
+
+    Returns ``call(coords, *padded) -> tuple(new_full_fields)`` where
+    ``padded`` are the (bx+2h, by+2h, nz) inputs in ``field_specs`` order and
+    the outputs are the written fields' full (bx, by, nz) arrays, in
+    first-written order.
+    """
+    in_names = list(field_specs)
+    written = []
+    for u in updates:
+        if u.field not in written:
+            written.append(u.field)
+    nz_of = {n: s[0] for n, s in field_specs.items()}
+    h = halo
+    bxb = _pick_block(bx, block[0])
+    byb = _pick_block(by, block[1])
+    grid = (bx // bxb, by // byb)
+
+    body = functools.partial(_fused_body, tuple(updates), tuple(in_names),
+                             tuple(written), nz_of, h, bxb, byb, nx, ny)
+    in_specs = [pl.BlockSpec((1, 2), lambda i, j: (0, 0))]
+    for name in in_names:
+        nz = nz_of[name]
+        in_specs.append(element_block_spec(
+            (bxb + 2 * h, byb + 2 * h, nz),
+            lambda i, j: (i * bxb, j * byb, 0)))
+    out_specs = [pl.BlockSpec((bxb, byb, nz_of[n]), lambda i, j: (i, j, 0))
+                 for n in written]
+    out_shape = [jax.ShapeDtypeStruct((bx, by, nz_of[n]), field_specs[n][1])
+                 for n in written]
+
+    call = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+
+    def fused(coords, *padded):
+        out = call(coords, *padded)
+        return tuple(out) if isinstance(out, (list, tuple)) else (out,)
+
+    return fused, tuple(written)

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.compat import element_block_spec
 from repro.kernels.stencil7 import _pick_block
 
 
@@ -51,8 +52,8 @@ def spmv_dot(P, c_diag: float, c_off: float, block=(8, 128),
     return pl.pallas_call(
         functools.partial(_spmv_dot_body, c_diag, c_off),
         grid=grid,
-        in_specs=[pl.BlockSpec(
-            (pl.Element(bxb + 2), pl.Element(byb + 2), nz),
+        in_specs=[element_block_spec(
+            (bxb + 2, byb + 2, nz),
             lambda i, j: (i * bxb, j * byb, 0))],
         out_specs=[
             pl.BlockSpec((bxb, byb, nz), lambda i, j: (i, j, 0)),

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.compat import element_block_spec
+
 
 def _affine_stencil_body(c_diag: float, c_off: float, p_ref, o_ref):
     x = p_ref[...]                       # (bxb+2, byb+2, Z) window in VMEM
@@ -60,8 +62,8 @@ def affine_stencil(P, c_diag: float, c_off: float, block=(8, 128),
     return pl.pallas_call(
         functools.partial(_affine_stencil_body, c_diag, c_off),
         grid=grid,
-        in_specs=[pl.BlockSpec(
-            (pl.Element(bxb + 2), pl.Element(byb + 2), nz),
+        in_specs=[element_block_spec(
+            (bxb + 2, byb + 2, nz),
             lambda i, j: (i * bxb, j * byb, 0))],
         out_specs=pl.BlockSpec((bxb, byb, nz), lambda i, j: (i, j, 0)),
         out_shape=jax.ShapeDtypeStruct((bx, by, nz), P.dtype),
@@ -140,11 +142,11 @@ def stencil_planes(T, xlo, xhi, ylo, yhi, coords, c_diag: float,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
-            # NB: Element padding shifts the window start by -pad_lo, so the
+            # NB: element padding shifts the window start by -pad_lo, so the
             # index map uses the unshifted element offset (verified).
-            pl.BlockSpec((pl.Element(bxb + 2, padding=(1, 1)),
-                          pl.Element(byb + 2, padding=(1, 1)), nz),
-                         lambda i, j: (i * bxb, j * byb, 0)),
+            element_block_spec((bxb + 2, byb + 2, nz),
+                               lambda i, j: (i * bxb, j * byb, 0),
+                               padding=((1, 1), (1, 1), (0, 0))),
             pl.BlockSpec((1, byb, nz), lambda i, j: (0, j, 0)),
             pl.BlockSpec((1, byb, nz), lambda i, j: (0, j, 0)),
             pl.BlockSpec((bxb, 1, nz), lambda i, j: (i, 0, 0)),

@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.core.jaxcompat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """The target deployment mesh.
@@ -14,17 +16,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh2d(data: int, model: int, *, pod: int = 0):
     """Arbitrary-size mesh with the production axis names (tests use 2×2)."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

@@ -46,6 +46,45 @@ def test_spmv_matches_stencil(rng):
         np.asarray(ops.stencil7(P, 1.0, -0.05)), atol=1e-6)
 
 
+# -- non-divisible grids × block shapes (block picker must fall back to a
+#    divisor; coverage for the generalized fused path too) -------------------
+
+ODD_SHAPES = [(5, 7, 3), (9, 13, 6), (7, 130, 12)]
+BLOCKS = [(8, 128), (4, 32), (3, 5)]
+
+
+@pytest.mark.parametrize("shape", ODD_SHAPES)
+@pytest.mark.parametrize("block", BLOCKS)
+def test_stencil7_odd_shapes_blocks(rng, shape, block):
+    bx, by, nz = shape
+    P = jnp.asarray(rng.normal(size=(bx + 2, by + 2, nz)).astype(np.float32))
+    out = ops.stencil7(P, 0.4, 0.1, block=block)
+    expect = ref.affine_stencil_ref(P, 0.4, 0.1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("shape", ODD_SHAPES[:2])
+@pytest.mark.parametrize("block", BLOCKS)
+def test_spmv_dot_odd_shapes_blocks(rng, shape, block):
+    bx, by, nz = shape
+    P = jnp.asarray(rng.normal(size=(bx + 2, by + 2, nz)).astype(np.float32))
+    av, d = ops.spmv_hex_dot(P, 1.0, -0.0625, block=block)
+    rav, rd = ref.spmv_dot_ref(P, 1.0, -0.0625)
+    np.testing.assert_allclose(np.asarray(av), np.asarray(rav), atol=1e-5)
+    np.testing.assert_allclose(float(d), float(rd), rtol=1e-4)
+
+
+@pytest.mark.parametrize("block", [(256, 128), (64, 32), (16, 8)])
+def test_dual_dot_blocks(rng, block):
+    a, b, c, d = [jnp.asarray(rng.normal(size=(12, 64, 4)).astype(np.float32))
+                  for _ in range(4)]
+    out = ops.dual_dot(a, b, c, d, block=block)
+    expect = ref.dual_dot_ref(a, b, c, d)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4)
+
+
 @pytest.mark.parametrize("shape", [(16, 64, 8), (4, 4, 4), (32, 128, 2)])
 def test_dual_dot_sweep(rng, shape):
     a, b, c, d = [jnp.asarray(rng.normal(size=shape).astype(np.float32))

@@ -1,7 +1,14 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+``hypothesis`` is an optional test extra (see pyproject.toml); the module
+skips cleanly when it is absent so the tier-1 suite stays runnable.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.explicit import ftcs_step, interior_mask3d

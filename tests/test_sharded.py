@@ -22,8 +22,8 @@ def run_py(code: str, devices: int = 4, timeout: int = 560) -> str:
 
 PREAMBLE = """
 import jax, numpy as np, jax.numpy as jnp
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.core.jaxcompat import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
 T0 = np.ones((8, 12, 10), np.float32) * 500.0
 T0[1:-1, 1:-1, 0] = 300.0
 T0[1:-1, 1:-1, -1] = 400.0
@@ -89,6 +89,28 @@ with WSE_For_Loop('t', 5):
         + T_n[1:-1, 0, -1] + T_n[1:-1, -1, 0] + T_n[1:-1, 0, 1])
 a = wse.make(answer=T_n, backend='shard_map', mesh=mesh)
 assert abs(a - o).max() < 2e-3
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_wfa_frontend_sharded_pallas_backend():
+    """backend='pallas' with a mesh: halo-pad brick → fused kernel inside
+    shard_map, one pallas_call per loop body."""
+    out = run_py(PREAMBLE + """
+from repro.core import WSE_Interface, WSE_Array, WSE_For_Loop
+from repro.compiler import stats
+o = oracle(T0, 0.1, 5)
+wse = WSE_Interface()
+c = 0.1; center = 1.0 - 6.0 * c
+T_n = WSE_Array('T_n', init_data=T0)
+with WSE_For_Loop('t', 5):
+    T_n[1:-1, 0, 0] = center * T_n[1:-1, 0, 0] + c * (
+        T_n[2:, 0, 0] + T_n[:-2, 0, 0] + T_n[1:-1, 1, 0]
+        + T_n[1:-1, 0, -1] + T_n[1:-1, -1, 0] + T_n[1:-1, 0, 1])
+a = wse.make(answer=T_n, backend='pallas', mesh=mesh)
+assert abs(a - o).max() < 2e-3
+assert stats.kernels_built == 1 and stats.fallbacks == 0, stats
 print("OK")
 """)
     assert "OK" in out

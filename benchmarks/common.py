@@ -1,10 +1,18 @@
-"""Benchmark utilities: timing + CSV emission (``name,us_per_call,derived``)."""
+"""Benchmark utilities: timing + CSV emission (``name,us_per_call,derived``).
+
+Every :func:`emit` row is also recorded in :data:`RESULTS` so the harness
+(``benchmarks/run.py``) can dump a machine-readable JSON artifact — the
+per-PR perf trajectory CI uploads.
+"""
 from __future__ import annotations
 
 import time
-from typing import Callable
+from typing import Callable, Dict, List
 
 import jax
+
+#: rows recorded by emit(): {"name", "us_per_call", "derived"}
+RESULTS: List[Dict[str, object]] = []
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -21,4 +29,7 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    RESULTS.append(
+        {"name": name, "us_per_call": round(us_per_call, 2),
+         "derived": derived})
     print(f"{name},{us_per_call:.2f},{derived}")

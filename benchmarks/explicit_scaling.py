@@ -15,7 +15,6 @@ sharded variant's halo volume is charged in the roofline model).
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.configs.heat3d import HeatConfig, make_field

@@ -13,9 +13,8 @@ from benchmarks.common import emit, time_fn
 from repro.configs.heat3d import HeatConfig, make_field
 from repro.core.explicit import ftcs_solve
 from repro.core.implicit import btcs_solve
-from repro.core.perfmodel import (WSE_CLOCK_HZ, openfoam_implicit_rate,
-                                  wse_dot_time, wse_explicit_rate,
-                                  wse_implicit_rate)
+from repro.core.perfmodel import (openfoam_implicit_rate, wse_dot_time,
+                                  wse_explicit_rate, wse_implicit_rate)
 
 ITERS = 25
 

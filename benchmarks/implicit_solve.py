@@ -1,0 +1,64 @@
+"""``wfa.solve`` benchmark: compiled operator application + Krylov loop.
+
+Times one reusable jitted solver step (``repro.solver.make_solver``) per
+method at a fixed inner-iteration budget, for the BTCS heat system and the
+variable-coefficient (non-symmetric, BiCGSTAB) system.  The derived column
+records the fused-kernel accounting — launches per operator application is
+the WFA's fused-RPC count; on this CPU container the kernels execute in
+Pallas interpret mode, so the number to watch is the accounting, not wall
+time (Mosaic compilation on TPU turns it into wall time).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+ITERS = 25
+N = 32
+
+
+def run() -> None:
+    from repro.compiler import reset_stats, stats
+    from repro.configs.heat3d import HeatConfig, make_field
+    from repro.solver import btcs_program, make_solver
+    from repro.solver.presets import record_varcoef_btcs
+
+    shape = (N, N, N)
+    T0 = make_field(HeatConfig(nx=N, ny=N, nz=N))
+
+    for method in ("cg", "pipecg", "bicgstab", "chebyshev", "jacobi"):
+        reset_stats()
+        prog = btcs_program(shape, 0.1, init_data=T0)
+        step = make_solver(
+            prog, "T", method=method, backend="pallas", tol=0.0, maxiter=ITERS
+        )
+        us = time_fn(lambda T: step(T)[0], T0)
+        emit(
+            f"wfa_solve_{method}_inner_iter",
+            us / ITERS,
+            f"cells={N ** 3};fused_kernels={stats.kernels_built};"
+            f"cache_hits={stats.cache_hits};fallbacks={stats.fallbacks};"
+            "launches_per_apply=1",
+        )
+
+    # variable-coefficient (non-symmetric) system — BiCGSTAB workhorse
+    rng = np.random.default_rng(0)
+    C0 = rng.uniform(0.05, 0.3, size=shape).astype(np.float32)
+    reset_stats()
+    wse, T, C = record_varcoef_btcs(T0, C0, 0.1)
+    step = make_solver(
+        wse.program, "T", method="bicgstab", backend="pallas", tol=0.0, maxiter=ITERS
+    )
+    us = time_fn(lambda Ti: step(Ti)[0], T0)
+    emit(
+        "wfa_solve_varcoef_bicgstab_inner_iter",
+        us / ITERS,
+        f"cells={N ** 3};fused_kernels={stats.kernels_built};"
+        f"fallbacks={stats.fallbacks};note=two-tap-products-fused",
+    )
+
+
+if __name__ == "__main__":
+    run()

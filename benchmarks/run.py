@@ -4,32 +4,68 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
   * explicit_scaling    — Fig. 4a / Eq. 6 / Eqs. 4–5
   * implicit_scaling    — Fig. 4b / Eq. 16 / Eqs. 13–15 / §3.2.2 ratio
+  * implicit_solve      — wfa.solve: compiled operator + Krylov loop
   * reduction           — Eq. 17 / §3.2.2 dot-product analysis
   * distributed_model   — Table 1 / Table 2 / Eq. 12 / §5 headline speedups
   * kernels_bench       — Fig. 3 fused-RPC comparison + Pallas kernels
+
+Usage::
+
+    python benchmarks/run.py [--json OUT.json] [case ...]
+
+``--json`` additionally writes the emitted rows as a JSON document — the
+perf-trajectory artifact CI uploads per PR.
 """
 from __future__ import annotations
 
-import sys
+import argparse
+import json
+import platform
 
 
 def main() -> None:
     from benchmarks import (distributed_model, explicit_scaling,
-                            implicit_scaling, kernels_bench, reduction)
-    print("name,us_per_call,derived")
+                            implicit_scaling, implicit_solve, kernels_bench,
+                            reduction)
+    from benchmarks.common import RESULTS
+
     mods = {
         "explicit_scaling": explicit_scaling,
         "implicit_scaling": implicit_scaling,
+        "implicit_solve": implicit_solve,
         "reduction": reduction,
         "distributed_model": distributed_model,
         "kernels_bench": kernels_bench,
     }
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write emitted rows as JSON")
+    ap.add_argument("cases", nargs="*", metavar="case",
+                    help=f"benchmark cases to run (default: all of {list(mods)})")
+    args = ap.parse_args()
+    unknown = [c for c in args.cases if c not in mods]
+    if unknown:
+        ap.error(f"unknown case(s) {unknown}; choose from {list(mods)}")
+
+    print("name,us_per_call,derived")
     for name, mod in mods.items():
-        if only and only != name:
+        if args.cases and name not in args.cases:
             continue
         print(f"# --- {name} ---")
         mod.run()
+
+    if args.json:
+        import jax
+        doc = {
+            "cases": args.cases or list(mods),
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+            "jax": jax.__version__,
+            "rows": RESULTS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"# wrote {len(RESULTS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

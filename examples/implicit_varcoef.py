@@ -1,0 +1,85 @@
+"""Variable-coefficient implicit diffusion through ``wfa.solve`` (BiCGSTAB).
+
+A per-cell diffusivity field C (the finite-volume CFD direction: material
+properties become fields) makes the BTCS operator A = I + ωC·(6I − S)
+**non-symmetric**, so CG no longer applies — this is the paper's BiCGSTAB
+use case.  The lowering pass turns the C·T products into two-tap terms, so
+``backend="pallas"`` still fuses the whole operator application into ONE
+Pallas kernel — zero interpreter fallbacks.
+
+    PYTHONPATH=src python examples/implicit_varcoef.py [--steps 5]
+"""
+import argparse
+
+import numpy as np
+
+from repro.compiler import reset_stats, stats
+from repro.configs.heat3d import HeatConfig, make_field
+from repro.solver import operator_fns, record_varcoef_btcs
+
+
+def two_material_coef(shape, c_slow=0.02, c_fast=0.25):
+    """A slab of fast-diffusing material embedded in a slow matrix."""
+    C = np.full(shape, c_slow, np.float32)
+    nx, ny, _ = shape
+    C[nx // 4 : 3 * nx // 4, ny // 4 : 3 * ny // 4, :] = c_fast
+    return C
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--n", type=int, default=32)
+    args = ap.parse_args()
+
+    shape = (args.n, args.n, args.n)
+    T0 = make_field(HeatConfig(nx=args.n, ny=args.n, nz=args.n))
+    C0 = two_material_coef(shape)
+    omega = 0.1
+
+    reset_stats()
+    wse, T, C = record_varcoef_btcs(T0, C0, omega)
+    x, info = wse.solve(
+        T,
+        method="bicgstab",
+        backend="pallas",
+        steps=args.steps,
+        tol=1e-6,
+        maxiter=300,
+        return_info=True,
+    )
+    print(
+        f"grid {shape}, {args.steps} implicit steps, two-material C "
+        f"({C0.min():.2f}/{C0.max():.2f})"
+    )
+    print(
+        f"  bicgstab inner iters/step = {info.iterations.tolist()}, "
+        f"final residual = {float(info.residual[-1]):.2e}"
+    )
+    print(
+        f"  compiler: fused kernels={stats.kernels_built}, "
+        f"cache hits={stats.cache_hits}, fallbacks={stats.fallbacks}"
+    )
+
+    # verify: apply the recorded operator to the solution of the LAST step
+    # and compare against that step's right-hand side (the previous state)
+    wse2, T2, C2 = record_varcoef_btcs(T0, C0, omega)
+    prev, _ = wse2.solve(
+        T2,
+        method="bicgstab",
+        backend="pallas",
+        steps=args.steps - 1,
+        tol=1e-6,
+        maxiter=300,
+        return_info=True,
+    )
+    wse3, T3, C3 = record_varcoef_btcs(prev, C0, omega)
+    A, _ = operator_fns(wse3.program, T3, backend="jit")
+    resid = np.abs(np.asarray(A(x)) - prev).max()
+    print(f"  ‖A·x − b‖∞ against the previous state: {resid:.2e}")
+    assert stats.fallbacks == 0
+    assert resid < 1e-3
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,11 @@
 Grid sizes follow the paper's test points: the Fig. 3 example (102³ with
 boundary layers) and the industrially-relevant zone (5.8e6–4.67e7 cells).
 ``W`` (cells per processor) is the brick volume per chip.
+
+The implicit side of the workload (Eq. 3) is parameterized here too:
+``method``/``tol``/``maxiter`` feed :func:`record_implicit`, which records
+the BTCS system through the WFA frontend ready for ``wse.solve`` — the
+one operator-compilation path shared with the explicit programs.
 """
 from __future__ import annotations
 
@@ -20,6 +25,11 @@ class HeatConfig:
     bc_hot: float = 400.0
     init: float = 500.0
     dtype: str = "float32"    # the paper runs single precision
+
+    # implicit-solve (wfa.solve) parameters — paper Eq. 3
+    method: str = "cg"        # cg | pipecg | bicgstab | chebyshev | jacobi
+    tol: float = 1e-6
+    maxiter: int = 500
 
     @property
     def cells(self) -> int:
@@ -40,3 +50,10 @@ def make_field(cfg: HeatConfig):
     T[1:-1, 1:-1, 0] = cfg.bc_cold
     T[1:-1, 1:-1, -1] = cfg.bc_hot
     return T
+
+
+def record_implicit(cfg: HeatConfig):
+    """Record the config's BTCS system; returns ``(wse, field)`` ready for
+    ``wse.solve(answer=field, method=cfg.method, tol=cfg.tol, ...)``."""
+    from repro.solver import record_btcs
+    return record_btcs(make_field(cfg), cfg.omega)

@@ -15,7 +15,6 @@ Three tiers, all computing the same update:
 from __future__ import annotations
 
 from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,13 +12,12 @@ Fig. 3 script runs unchanged on 1 device or 512.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.core import stencil as st
 from repro.core.jaxcompat import shard_map
@@ -83,6 +82,34 @@ def evaluate_padded(expr: st.StencilExpr, env_padded: Dict[str, jnp.ndarray],
     raise TypeError(type(expr))
 
 
+def interp_step_sharded(ops, ax_x: str, ax_y: str, mx: int, my: int):
+    """Roll-interpreter step for one op group on halo-padded bricks.
+
+    The ``shard_map``-local analogue of ``program._interp_step``: one halo
+    exchange + padded evaluation per op, Moat mask from mesh coordinates.
+    Shared by ``run_sharded`` and the solver's interpreter fallback so the
+    two cannot diverge.
+    """
+
+    def step(e):
+        e = dict(e)
+        for op in ops:
+            h = max(1, op.expr.max_offset())
+            names = {t.field_name for t in op.expr.terms()}
+            padded = {n: halo_pad(e[n], h, ax_x, ax_y, mx, my) for n in names}
+            f = e[op.field_name]
+            bx, by, _ = f.shape
+            val = evaluate_padded(op.expr, padded, op.target_z, h, bx, by)
+            mask = local_moat_mask(bx, by, ax_x, ax_y, mx, my)
+            new_z = jnp.where(mask, val, f[:, :, op.target_z])
+            start = op.target_z.indices(f.shape[2])[0]
+            e[op.field_name] = jax.lax.dynamic_update_slice(
+                f, new_z, (0, 0, start))
+        return e
+
+    return step
+
+
 def default_mesh2d():
     """Largest 2-D mesh over the available devices (rows ~ sqrt)."""
     n = len(jax.devices())
@@ -135,29 +162,14 @@ def run_sharded(program: Program, env: Dict[str, np.ndarray], mesh=None,
     def local_step(env_local):
         e = dict(env_local)
         for gi, (loop, ops) in enumerate(_group_ops(program)):
-            fused = fused_steps.get(gi)
-            def body(e, ops=ops, fused=fused):
-                if fused is not None:
-                    return fused(e)
-                e = dict(e)
-                for op in ops:
-                    h = max(1, op.expr.max_offset())
-                    names = {t.field_name for t in op.expr.terms()}
-                    padded = {n2: halo_pad(e[n2], h, ax_x, ax_y, mx, my)
-                              for n2 in names}
-                    f = e[op.field_name]
-                    bx, by, _ = f.shape
-                    val = evaluate_padded(op.expr, padded, op.target_z, h, bx, by)
-                    mask = local_moat_mask(bx, by, ax_x, ax_y, mx, my)
-                    new_z = jnp.where(mask, val, f[:, :, op.target_z])
-                    start = op.target_z.indices(f.shape[2])[0]
-                    e[op.field_name] = jax.lax.dynamic_update_slice(
-                        f, new_z, (0, 0, start))
-                return e
+            body = fused_steps.get(gi)
+            if body is None:
+                body = interp_step_sharded(ops, ax_x, ax_y, mx, my)
             if loop is None:
                 e = body(e)
             else:
-                e = jax.lax.fori_loop(0, loop.n, lambda i, ee: body(ee), e)
+                e = jax.lax.fori_loop(
+                    0, loop.n, lambda i, ee, b=body: b(ee), e)
         return e
 
     stepped = jax.jit(

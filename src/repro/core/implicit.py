@@ -1,38 +1,52 @@
-"""Implicit BTCS heat solver (paper Eq. 3) — CG family, matrix-free.
+"""Implicit BTCS heat solver (paper Eq. 3) — legacy drivers over the solver
+subsystem.
 
 ``A = I − ωψ·S`` with ``S`` the 6-neighbour sum and ``ψ = 1/(1+6ω)``; identity
 rows on boundary cells.  CG runs on the interior subspace: search vectors are
 zero on the Moat, so the masked operator is SPD there.
 
-Variants (all matrix-free, single-device or brick-sharded):
+Since the solver subsystem landed (:mod:`repro.solver`) there is ONE
+operator-compilation path: the BTCS operator is *recorded* through the WFA
+frontend (:func:`repro.solver.presets.btcs_program`) and applied via the
+shared program step — the same body ``wfa.solve`` lowers to a fused Pallas
+kernel — and every iteration lives in :mod:`repro.solver.krylov`.  This
+module keeps the historical driver surface:
 
-* :func:`cg_solve` — classic CG, two reduction points per iteration
-  (paper-faithful; the second reduction is what Eq. 16's ``2(X+Y)`` term
-  prices on the WSE and what ``psum`` latency prices on the TPU torus);
-* :func:`pipecg_solve` — Ghysels–Vanroose pipelined CG: the two dots fuse
-  into ONE reduction that overlaps with the next SpMV (the paper's
-  "pipelined Krylov" future-work remark, implemented);
-* :func:`chebyshev_solve` — reduction-free Chebyshev iteration using the
-  analytic eigenvalue bounds of A (the paper's "reduction-free implicit
-  methods" remark, implemented).
+* :func:`btcs_solve` — single-device time stepping (CG, pipelined CG,
+  BiCGSTAB, Chebyshev, Jacobi);
+* :func:`make_sharded_implicit` — brick-sharded drivers over a device mesh
+  (kernel or interpreter operator application, fused ``psum`` reductions);
+* :func:`make_operator` / :func:`make_brick_operator` — raw operator
+  builders (the brick variant backs the roofline iteration harness).
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.jaxcompat import shard_map
-from repro.core.explicit import (interior_mask3d, neighbor_sum_padded,
-                                 _fix_z_boundary)
+from repro.core.explicit import interior_mask3d, neighbor_sum_padded
 from repro.core.halo import halo_pad, local_moat_mask
+from repro.core.jaxcompat import shard_map
+from repro.solver import krylov
+from repro.solver.api import make_sharded_solver, operator_fns
+from repro.solver.presets import btcs_program, psi
 
+__all__ = [
+    "bicgstab_solve", "btcs_solve", "cg_solve", "chebyshev_bounds",
+    "chebyshev_solve", "jacobi_solve", "make_brick_operator",
+    "make_operator", "make_sharded_implicit", "make_sharded_iteration",
+    "pipecg_solve", "psi",
+]
 
-def psi(w: float) -> float:
-    return 1.0 / (1.0 + 6.0 * w)
+# the Krylov/relaxation iterations, re-exported under their legacy names
+# (one shared implementation — see repro.solver.krylov)
+cg_solve = krylov.cg
+pipecg_solve = krylov.pipecg
+bicgstab_solve = krylov.bicgstab
+chebyshev_solve = krylov.chebyshev
+jacobi_solve = krylov.jacobi
 
 
 # ---------------------------------------------------------------------------
@@ -40,20 +54,15 @@ def psi(w: float) -> float:
 # ---------------------------------------------------------------------------
 
 def make_operator(w: float, shape):
-    """Single-device masked BTCS operator and rhs builder."""
+    """Single-device masked BTCS operator and rhs builder.
+
+    The operator body is recorded through the WFA frontend and applied with
+    the shared program step (``repro.solver.api.operator_fns``), so this
+    hand-callable path and the compiled ``wfa.solve`` path execute the same
+    recorded stencil.
+    """
+    A, rhs = operator_fns(btcs_program(shape, w), "T", backend="jit")
     mask = interior_mask3d(shape)
-    wpsi = w * psi(w)
-
-    def nbsum(v):
-        P = jnp.pad(v, ((1, 1), (1, 1), (0, 0)))
-        return neighbor_sum_padded(P)
-
-    def A(v):
-        return jnp.where(mask, v - wpsi * nbsum(v), v)
-
-    def rhs(T):
-        # b = ψ·Tⁿ on interior; boundary rows carry γ (identity rows).
-        return jnp.where(mask, psi(w) * T, T)
 
     def dot(a, b):
         return jnp.sum(a * b, dtype=jnp.float32)
@@ -66,7 +75,10 @@ def make_brick_operator(w: float, brick_shape, ax_x, ax_y, mx, my,
     """Brick-local operator for use inside ``shard_map``.
 
     SpMV = halo exchange + padded stencil; dot = local dot + ``psum`` over
-    both mesh axes (the reduction-to-center analogue, Fig. 2c).
+    both mesh axes (the reduction-to-center analogue, Fig. 2c).  Kept as the
+    raw building block for the roofline iteration harness
+    (:func:`make_sharded_iteration`); the time-stepping drivers go through
+    ``repro.solver`` instead.
     """
     bx, by, nz = brick_shape
     wpsi = w * psi(w)
@@ -99,140 +111,16 @@ def make_brick_operator(w: float, brick_shape, ax_x, ax_y, mx, my,
     return A, rhs, dot, mask
 
 
-# ---------------------------------------------------------------------------
-# solvers (operator- and dot-generic: same code runs on 1 chip or 512)
-# ---------------------------------------------------------------------------
-
-def cg_solve(A: Callable, dot: Callable, b, x0, *, tol: float = 1e-6,
-             maxiter: int = 500):
-    """Classic CG (Eq. 3 solve).  Two reductions per iteration: (p,Ap) and
-    (r,r) — the paper's benchmarked bottleneck."""
-    r = b - A(x0)
-    p = r
-    rr = dot(r, r)
-
-    def cond(s):
-        x, r, p, rr, i = s
-        return (rr > tol * tol) & (i < maxiter)
-
-    def body(s):
-        x, r, p, rr, i = s
-        Ap = A(p)
-        pAp = dot(p, Ap)                      # reduction 1
-        alpha = rr / pAp
-        x = x + alpha * p
-        r = r - alpha * Ap
-        rr_new = dot(r, r)                    # reduction 2 (overlaps x-update)
-        beta = rr_new / rr
-        p = r + beta * p
-        return (x, r, p, rr_new, i + 1)
-
-    x, r, p, rr, i = jax.lax.while_loop(cond, body, (x0, r, p, rr, 0))
-    return x, i, jnp.sqrt(rr)
-
-
-def pipecg_solve(A: Callable, dot2: Callable, b, x0, *, tol: float = 1e-6,
-                 maxiter: int = 500):
-    """Ghysels–Vanroose pipelined CG: ONE fused reduction per iteration,
-    overlapped with the next SpMV.
-
-    ``dot2(a, b, c, d)`` returns (a·b, c·d) in a single reduction — sharded
-    backends implement it as one ``psum`` of a length-2 vector, halving the
-    Eq. 16 latency term; XLA then schedules ``n = A w`` while it completes.
-    """
-    r = b - A(x0)
-    w_ = A(r)
-    zero = jnp.zeros_like(b)
-    rr0 = dot2(r, r, r, r)[0]    # true entry residual (warm-start guard)
-    replace_every = 25           # periodic residual replacement (fp32 drift)
-
-    def body2(s):
-        x, r, w_, z, p, sv, gamma_prev, alpha_prev, i, fresh = s
-        gamma, delta = dot2(r, r, w_, r)       # fused reduction
-        n = A(w_)                              # overlapped SpMV
-        beta = jnp.where(fresh, 0.0, gamma / gamma_prev)
-        denom = delta - beta * gamma / jnp.where(fresh, 1.0, alpha_prev)
-        # fp32 pipelined recurrences can hit a vanishing denominator near
-        # convergence; clamp to keep the iterate finite (cond exits next).
-        denom = jnp.where(jnp.abs(denom) < 1e-30,
-                          jnp.where(denom < 0, -1e-30, 1e-30), denom)
-        alpha = gamma / denom
-        z = n + beta * z
-        p = r + beta * p
-        sv = w_ + beta * sv
-        x = x + alpha * p
-        r = r - alpha * sv
-        w_ = w_ - alpha * z
-        # residual replacement: resync the recurred r/w with the true
-        # residual every k iterations (Cools & Vanroose) — two extra SpMVs,
-        # amortised 2/k, restores attainable accuracy at warm starts.
-        do = (i + 1) % replace_every == 0
-        r, w_ = jax.lax.cond(
-            do, lambda x, r, w_: (b - A(x), A(b - A(x))),
-            lambda x, r, w_: (r, w_), x, r, w_)
-        return (x, r, w_, z, p, sv, gamma, alpha, i + 1, do)
-
-    def cond2(s):
-        gamma_prev, i = s[6], s[8]
-        # gamma_prev is ‖r‖² of the previous iterate (true rr0 at entry)
-        return (gamma_prev > tol * tol) & (i < maxiter)
-
-    s0 = (x0, r, w_, zero, zero, zero, rr0,
-          jnp.asarray(1.0, jnp.float32), jnp.asarray(0, jnp.int32),
-          jnp.asarray(True))
-    out = jax.lax.while_loop(cond2, body2, s0)
-    x, i = out[0], out[8]
-    rr = dot2(out[1], out[1], out[1], out[1])[0]
-    return x, i, jnp.sqrt(rr)
-
-
-def chebyshev_bounds(w: float) -> Tuple[float, float]:
+def chebyshev_bounds(w: float):
     """Analytic eigenvalue bounds of A = I − ωψS on the interior subspace.
 
     The neighbour-sum S on a Dirichlet grid has spectrum in (−6, 6), so
     λ(A) ⊂ [1−6ωψ, 1+6ωψ].  With the paper's ω = 0.1: [0.625, 1.375].
+    (``repro.solver`` derives the same bracket mechanically from the lowered
+    tap form — Gershgorin circles; see ``gershgorin_bounds``.)
     """
     wp = w * psi(w)
     return 1.0 - 6.0 * wp, 1.0 + 6.0 * wp
-
-
-def jacobi_solve(step: Callable, x0, *, iters: int = 500):
-    """Reduction-free Jacobi iteration for A = I − ωψS (unit diagonal):
-
-        x ← where(interior, b + ωψ·S x, b)
-
-    (``step`` is that update — built by the caller with its own nbsum/mask.)
-    Spectral radius 6ωψ = 6ω/(1+6ω) < 1 for all ω > 0, so it always
-    converges; zero collectives per iteration and only one neighbour
-    exchange — the cheapest member of the paper's "reduction-free implicit
-    methods" family (Chebyshev converges faster per iteration).
-    """
-    x = jax.lax.fori_loop(0, iters, lambda k, x: step(x), x0)
-    return x, iters, jnp.zeros(())
-
-
-def chebyshev_solve(A: Callable, b, x0, lmin: float, lmax: float, *,
-                    iters: int = 500):
-    """Reduction-free Chebyshev iteration — zero collectives per iteration."""
-    theta = 0.5 * (lmax + lmin)
-    delta = 0.5 * (lmax - lmin)
-    sigma1 = theta / delta
-
-    r = b - A(x0)
-    d = r / theta
-    x = x0 + d
-    rho = 1.0 / sigma1
-
-    def body(k, s):
-        x, r, d, rho = s
-        r = r - A(d)
-        rho_new = 1.0 / (2.0 * sigma1 - rho)
-        d = rho_new * rho * d + (2.0 * rho_new / delta) * r
-        x = x + d
-        return (x, r, d, rho_new)
-
-    x, r, d, rho = jax.lax.fori_loop(0, iters, body, (x, r, d, rho))
-    return x, iters, jnp.sqrt(jnp.sum(r * r, dtype=jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -251,20 +139,20 @@ def btcs_solve(T0, w: float, steps: int, method: str = "cg",
     def one(T, _):
         b = rhs(T)
         if method == "cg":
-            x, i, res = cg_solve(A, dot, b, T, tol=tol, maxiter=maxiter)
+            x, i, res = krylov.cg(A, dot, b, T, tol=tol, maxiter=maxiter)
         elif method == "pipecg":
-            x, i, res = pipecg_solve(A, dot2, b, T, tol=tol, maxiter=maxiter)
+            x, i, res = krylov.pipecg(A, dot2, b, T, tol=tol, maxiter=maxiter)
+        elif method == "bicgstab":
+            x, i, res = krylov.bicgstab(A, dot, b, T, tol=tol,
+                                        maxiter=maxiter)
         elif method == "chebyshev":
             lmin, lmax = chebyshev_bounds(w)
-            x, i, res = chebyshev_solve(A, b, T, lmin, lmax, iters=maxiter)
+            x, i, res = krylov.chebyshev(A, b, T, lmin, lmax, iters=maxiter)
         elif method == "jacobi":
-            wpsi = w * psi(w)
-
-            def jstep(x):
-                P = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
-                return jnp.where(mask, b + wpsi * neighbor_sum_padded(P), b)
-
-            x, i, res = jacobi_solve(jstep, T, iters=maxiter)
+            # unit diagonal + identity Moat rows: x + b − A(x) IS the Jacobi
+            # sweep (b + ωψ·Sx interior, b on the Moat) — no mask needed
+            x, i, res = krylov.jacobi(lambda x: x + b - A(x), T,
+                                      iters=maxiter)
         else:
             raise ValueError(method)
         return x, (i, res)
@@ -272,6 +160,31 @@ def btcs_solve(T0, w: float, steps: int, method: str = "cg",
     T, aux = jax.lax.scan(one, T0, None, length=steps)
     return T, aux
 
+
+def make_sharded_implicit(mesh, shape, w: float, *, method: str = "cg",
+                          tol: float = 1e-6, maxiter: int = 500,
+                          use_kernel: bool = False, steps: int = 1):
+    """Brick-sharded BTCS solver over ``mesh``; returns (step_fn, sharding).
+
+    Routed through ``repro.solver.make_sharded_solver``: the recorded BTCS
+    body compiles to one fused Pallas kernel per operator application when
+    ``use_kernel`` (the PR-1 compiler path, inside shard_map) or runs on the
+    shared roll interpreter otherwise; reductions are one fused ``psum``.
+    """
+    backend = "pallas" if use_kernel else "jit"
+    step, sharding = make_sharded_solver(
+        btcs_program(shape, w), "T", mesh, method=method, backend=backend,
+        tol=tol, maxiter=maxiter, steps=steps)
+
+    def step_fn(T):
+        return step(T)[0]
+
+    return step_fn, sharding
+
+
+# ---------------------------------------------------------------------------
+# roofline iteration harness (exact per-iteration accounting)
+# ---------------------------------------------------------------------------
 
 def make_sharded_iteration(mesh, shape, w: float, *, method: str = "cg",
                            use_kernel: bool = False):
@@ -309,7 +222,6 @@ def make_sharded_iteration(mesh, shape, w: float, *, method: str = "cg",
             x, r, p, rr = state
             if use_kernel:
                 from repro.kernels import ops as kops
-                from repro.core.halo import halo_pad
                 P = halo_pad(p, 1, ax_x, ax_y, mx, my)
                 Ap, pAp_l = kops.spmv_hex_dot(P, 1.0, -w * psi(w))
                 Ap = jnp.where(_mask(bx, by, nz, ax_x, ax_y, mx, my), Ap, p)
@@ -366,64 +278,3 @@ def _mask(bx, by, nz, ax_x, ax_y, mx, my):
     m2 = local_moat_mask(bx, by, ax_x, ax_y, mx, my)
     zi = jax.lax.broadcasted_iota(jnp.int32, (1, 1, nz), 2)
     return m2 & (zi > 0) & (zi < nz - 1)
-
-
-def make_sharded_implicit(mesh, shape, w: float, *, method: str = "cg",
-                          tol: float = 1e-6, maxiter: int = 500,
-                          use_kernel: bool = False, steps: int = 1):
-    """Brick-sharded BTCS solver over ``mesh``; returns (step_fn, sharding)."""
-    ax_x, ax_y = mesh.axis_names[-2], mesh.axis_names[-1]
-    mx, my = mesh.shape[ax_x], mesh.shape[ax_y]
-    nx, ny, nz = shape
-    bx, by = nx // mx, ny // my
-    spec = jax.sharding.PartitionSpec(ax_x, ax_y, None)
-    sharding = jax.sharding.NamedSharding(mesh, spec)
-
-    def local(T):
-        A, rhs, dot, _ = make_brick_operator(
-            w, (bx, by, nz), ax_x, ax_y, mx, my, use_kernel=use_kernel)
-
-        if use_kernel:
-            from repro.kernels import ops as kops
-
-        def dot2(a, b, c, d):
-            if use_kernel:
-                part = kops.dual_dot(a, b, c, d)      # fused local pass
-            else:
-                part = jnp.stack([jnp.sum(a * b, dtype=jnp.float32),
-                                  jnp.sum(c * d, dtype=jnp.float32)])
-            part = jax.lax.psum(part, (ax_x, ax_y))   # ONE fused all-reduce
-            return part[0], part[1]
-
-        def one(T, _):
-            b = rhs(T)
-            if method == "cg":
-                x, i, res = cg_solve(A, dot, b, T, tol=tol, maxiter=maxiter)
-            elif method == "pipecg":
-                x, i, res = pipecg_solve(A, dot2, b, T, tol=tol,
-                                         maxiter=maxiter)
-            elif method == "chebyshev":
-                lmin, lmax = chebyshev_bounds(w)
-                x, i, res = chebyshev_solve(A, b, T, lmin, lmax,
-                                            iters=maxiter)
-            elif method == "jacobi":
-                wpsi = w * psi(w)
-                A_, rhs_, dot_, mask_ = make_brick_operator(
-                    w, (bx, by, nz), ax_x, ax_y, mx, my)
-
-                def jstep(x):
-                    P = halo_pad(x, 1, ax_x, ax_y, mx, my)
-                    return jnp.where(mask_(),
-                                     b + wpsi * neighbor_sum_padded(P), b)
-
-                x, i, res = jacobi_solve(jstep, T, iters=maxiter)
-            else:
-                raise ValueError(method)
-            return x, (i, res)
-
-        T2, aux = jax.lax.scan(one, T, None, length=steps)
-        return T2
-
-    step = jax.jit(shard_map(local, mesh=mesh, in_specs=(spec,),
-                                 out_specs=spec, check=False))
-    return step, sharding

@@ -16,6 +16,7 @@ Three backends mirror the WFA's workflow:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 from typing import Dict, List, Optional
@@ -32,6 +33,22 @@ _STATE = threading.local()
 
 def current_program() -> Optional["Program"]:
     return getattr(_STATE, "program", None)
+
+
+@contextlib.contextmanager
+def scoped_program():
+    """Activate a fresh :class:`Program`, restoring any active one on exit.
+
+    Lets library code (e.g. the :mod:`repro.solver` presets) record programs
+    through the frontend without clobbering a user's active ``WFAInterface``.
+    """
+    prev = current_program()
+    p = Program()
+    _STATE.program = p
+    try:
+        yield p
+    finally:
+        _STATE.program = prev
 
 
 @dataclasses.dataclass
@@ -134,6 +151,16 @@ class WFAInterface:
 
         (the WFA's ``make_WSE``; ``backend='numpy'`` is its validation mode.)
         """
+        for op in self.program.ops:
+            if getattr(op.loop, "role", None) is not None:
+                # deactivate like every other exit path from make(); the
+                # program object itself stays usable for wse.solve(...)
+                if current_program() is self.program:
+                    _STATE.program = None
+                raise ValueError(
+                    "this program records an implicit system "
+                    "(Operator()/Rhs() groups); run wse.solve(answer, ...) "
+                    "instead of make")
         try:
             env = {n: f.init_data for n, f in self.program.fields.items()}
             if backend == "numpy":
@@ -156,6 +183,25 @@ class WFAInterface:
             if current_program() is self.program:
                 _STATE.program = None
         return np.asarray(out[answer.name])
+
+    def solve(self, answer, method: str = "cg", backend: str = "pallas",
+              mesh=None, **kwargs):
+        """Solve the recorded implicit system ``A(x) = b`` for ``answer``.
+
+        The operator body (recorded inside ``with Operator():``) compiles
+        through the same IR → fused-Pallas pipeline as explicit programs;
+        matrix-free Krylov iterations run on top of the compiled
+        application.  See :func:`repro.solver.solve` for the full keyword
+        surface (``steps``, ``tol``, ``maxiter``, ``lambda_bounds``,
+        ``return_info``).
+        """
+        from repro.solver.api import solve as _solve
+        try:
+            return _solve(self.program, answer, method=method,
+                          backend=backend, mesh=mesh, **kwargs)
+        finally:
+            if current_program() is self.program:
+                _STATE.program = None
 
     # paper-compatible alias
     make_WSE = make

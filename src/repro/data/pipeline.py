@@ -8,7 +8,7 @@ fault tolerance (see runtime/fault.py).
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import numpy as np

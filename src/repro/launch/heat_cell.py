@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs.heat3d import HeatConfig
 from repro.core.explicit import make_sharded_ftcs
-from repro.core.implicit import make_sharded_implicit, make_sharded_iteration
+from repro.core.implicit import make_sharded_iteration
 from repro.launch import roofline
 
 PROD_GRID = HeatConfig(nx=2048, ny=2048, nz=512)   # 2.1e9 cells, fp32

@@ -2,8 +2,6 @@
 importing this module must not touch jax device state)."""
 from __future__ import annotations
 
-import jax
-
 from repro.core.jaxcompat import make_mesh
 
 

@@ -11,13 +11,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.launch.mesh import make_mesh2d
 from repro.models import model as M
-from repro.parallel.params import (cache_specs_for, param_specs_for,
-                                   rules_for)
+from repro.parallel.params import param_specs_for, rules_for
 from repro.parallel.sharding import use_sharding
 
 

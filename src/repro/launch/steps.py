@@ -7,9 +7,6 @@ caller jits them with shardings from ``input_specs``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

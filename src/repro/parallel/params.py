@@ -6,7 +6,7 @@ name table is exhaustive; anything unknown is replicated and reported).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 

@@ -15,7 +15,6 @@ lives with the caller.
 """
 from __future__ import annotations
 
-import threading
 import time
 from typing import Callable, List, Optional
 

@@ -1,0 +1,55 @@
+"""repro.solver — implicit field equations as first-class WFA programs.
+
+The paper's implicit results (BTCS + matrix-free Krylov on the WSE) used a
+hand-wired operator per PDE; this package routes the operator through the
+same recorded-program → fused-Pallas pipeline as the explicit path:
+
+1. :mod:`~repro.solver.frontend` — ``Operator()``/``Rhs()`` recording
+   contexts: the operator stencil ``A(v)`` is written exactly like an
+   explicit update (masked self-update of the unknown — identity Moat rows
+   for free);
+2. :mod:`~repro.solver.api` — ``wfa.solve``: compiles the recorded bodies
+   through :mod:`repro.compiler` (kernel cache + stats + logged interpreter
+   fallback) and runs matrix-free iterations on the compiled application,
+   single-device or brick-sharded (``mesh=`` → halo exchange + ONE fused
+   ``psum`` per reduction);
+3. :mod:`~repro.solver.krylov` — the iteration kernels (CG, pipelined CG,
+   BiCGSTAB, Chebyshev, Jacobi), shared with the legacy
+   :mod:`repro.core.implicit` drivers;
+4. :mod:`~repro.solver.presets` — canonical recorded systems (BTCS heat,
+   variable-coefficient diffusion).
+"""
+
+from repro.solver import krylov
+from repro.solver.api import (
+    SolveInfo,
+    gershgorin_bounds,
+    make_sharded_solver,
+    make_solver,
+    operator_fns,
+    solve,
+)
+from repro.solver.frontend import Operator, Rhs, SolverMarker
+from repro.solver.presets import (
+    btcs_program,
+    psi,
+    record_btcs,
+    record_varcoef_btcs,
+)
+
+__all__ = [
+    "Operator",
+    "Rhs",
+    "SolveInfo",
+    "SolverMarker",
+    "btcs_program",
+    "gershgorin_bounds",
+    "krylov",
+    "make_sharded_solver",
+    "make_solver",
+    "operator_fns",
+    "psi",
+    "record_btcs",
+    "record_varcoef_btcs",
+    "solve",
+]

@@ -1,0 +1,92 @@
+"""Canonical implicit programs, recorded through the WFA frontend.
+
+These are the systems the paper benchmarks, spelled as recorded programs so
+every solver path (legacy ``btcs_solve``, ``wfa.solve``, sharded bricks)
+compiles the *same* operator body through the *same* IR → codegen pipeline —
+one operator-compilation path instead of two hand-wired ones.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.field import Field
+from repro.core.program import Program, WFAInterface, scoped_program
+from repro.solver.frontend import Operator, Rhs
+
+
+def psi(w: float) -> float:
+    """The BTCS diagonal normalization ψ = 1/(1 + 6ω) (paper Eq. 3)."""
+    return 1.0 / (1.0 + 6.0 * w)
+
+
+def _record_btcs_body(T, w: float) -> None:
+    """Record A = I − ωψ·S (identity Moat rows) and b = ψ·Tⁿ onto ``T``."""
+    wpsi = w * psi(w)
+    with Operator():
+        T[1:-1, 0, 0] = T[1:-1, 0, 0] - wpsi * (
+            T[2:, 0, 0]
+            + T[:-2, 0, 0]
+            + T[1:-1, 1, 0]
+            + T[1:-1, -1, 0]
+            + T[1:-1, 0, 1]
+            + T[1:-1, 0, -1]
+        )
+    with Rhs():
+        T[1:-1, 0, 0] = psi(w) * T[1:-1, 0, 0]
+
+
+def btcs_program(
+    shape: Tuple[int, int, int],
+    w: float,
+    init_data: Optional[np.ndarray] = None,
+    name: str = "T",
+) -> Program:
+    """The BTCS heat system (paper Eq. 3) as a recorded :class:`Program`.
+
+    Safe to call while another program is active (uses a scoped recording
+    context) — this is how ``repro.core.implicit`` builds its operator.
+    """
+    with scoped_program() as program:
+        T = Field(name, init_data=init_data, shape=shape)
+        _record_btcs_body(T, w)
+    return program
+
+
+def record_btcs(T0: np.ndarray, w: float, name: str = "T"):
+    """User-facing variant: records the BTCS system into a fresh
+    :class:`WFAInterface`; returns ``(wse, field)`` ready for
+    ``wse.solve(answer=field, ...)``."""
+    wse = WFAInterface()
+    T = Field(name, init_data=T0)
+    _record_btcs_body(T, w)
+    return wse, T
+
+
+def record_varcoef_btcs(T0: np.ndarray, C0: np.ndarray, w: float, name: str = "T"):
+    """Variable-coefficient implicit diffusion: A = I + ωC·(6I − S).
+
+    ``C`` is a per-cell diffusivity field, so the operator row-scales the
+    graph Laplacian and is **non-symmetric** — the BiCGSTAB use case.  The
+    lowering pass turns the ``C·T`` products into two-tap terms, so
+    ``backend="pallas"`` still fuses the whole application into one kernel.
+    Returns ``(wse, T_field, C_field)``.
+    """
+    wse = WFAInterface()
+    T = Field(name, init_data=T0)
+    C = Field(name + "_coef", init_data=C0)
+    with Operator():
+        T[1:-1, 0, 0] = T[1:-1, 0, 0] + w * C[1:-1, 0, 0] * (
+            6.0 * T[1:-1, 0, 0]
+            - (
+                T[2:, 0, 0]
+                + T[:-2, 0, 0]
+                + T[1:-1, 1, 0]
+                + T[1:-1, -1, 0]
+                + T[1:-1, 0, 1]
+                + T[1:-1, 0, -1]
+            )
+        )
+    return wse, T, C

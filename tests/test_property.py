@@ -3,18 +3,18 @@
 ``hypothesis`` is an optional test extra (see pyproject.toml); the module
 skips cleanly when it is absent so the tier-1 suite stays runnable.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.explicit import ftcs_step, interior_mask3d
-from repro.core.implicit import make_operator
-from repro.core.perfmodel import (roofline_time, StepCost, wse_dot_time,
-                                  wse_explicit_rate, wse_implicit_rate)
+from repro.core.explicit import ftcs_step  # noqa: E402
+from repro.core.implicit import make_operator  # noqa: E402
+from repro.core.perfmodel import (roofline_time, StepCost,  # noqa: E402
+                                  wse_dot_time, wse_explicit_rate,
+                                  wse_implicit_rate)
 
 SMALL = dict(deadline=None, max_examples=20)
 

@@ -4,7 +4,6 @@ The chunked WKV6 / SSD formulations are the perf-critical training paths;
 these tests pin them against direct per-step recurrences (the definitional
 form), across chunk sizes that do and don't divide the sequence.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

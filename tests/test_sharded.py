@@ -1,11 +1,9 @@
 """Multi-device behaviour (4 fake CPU devices via subprocess — the main
 pytest process must keep 1 device for the unit tests)."""
-import json
 import os
 import subprocess
 import sys
 
-import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

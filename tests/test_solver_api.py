@@ -1,0 +1,253 @@
+"""``wfa.solve`` — the solver subsystem vs the legacy drivers + dense refs.
+
+Acceptance surface: agreement with ``btcs_solve`` and a dense reference for
+every method, zero interpreter fallbacks (with real pallas launches) for
+affine operators, variable-coefficient BiCGSTAB vs dense, the sharded
+(``mesh=``) result vs single-device, and the recording-validation errors.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import heat_init
+from repro.compiler import reset_stats, stats
+from repro.core import WSE_Array, WSE_Interface
+from repro.core.implicit import btcs_solve
+from repro.solver import Operator, Rhs, record_btcs, record_varcoef_btcs
+from test_solvers import _dense_btcs
+from test_sharded import run_py
+
+OMEGA = 0.1
+
+
+def _dense_varcoef(T0, C, w):
+    """Dense A = I + ωC·(6I − S) with identity boundary rows; b = Tⁿ."""
+    shape = T0.shape
+    n = T0.size
+
+    def idx(x, y, z):
+        return (x * shape[1] + y) * shape[2] + z
+
+    A = np.eye(n)
+    b = np.zeros(n)
+    for x in range(shape[0]):
+        for y in range(shape[1]):
+            for z in range(shape[2]):
+                i = idx(x, y, z)
+                interior = (
+                    0 < x < shape[0] - 1
+                    and 0 < y < shape[1] - 1
+                    and 0 < z < shape[2] - 1
+                )
+                if interior:
+                    c = C[x, y, z]
+                    A[i, i] = 1.0 + 6.0 * w * c
+                    for dx, dy, dz in [
+                        (1, 0, 0),
+                        (-1, 0, 0),
+                        (0, 1, 0),
+                        (0, -1, 0),
+                        (0, 0, 1),
+                        (0, 0, -1),
+                    ]:
+                        A[i, idx(x + dx, y + dy, z + dz)] = -w * c
+                b[i] = T0[x, y, z]
+    return np.linalg.solve(A, b).reshape(shape)
+
+
+# -- agreement: wfa.solve vs legacy btcs_solve vs dense ----------------------
+
+
+@pytest.mark.parametrize(
+    "method,maxiter,atol",
+    [
+        ("cg", 400, 2e-4),
+        ("bicgstab", 400, 2e-4),
+        ("pipecg", 400, 5e-3),
+        ("chebyshev", 80, 2e-4),
+        ("jacobi", 80, 5e-4),
+    ],
+)
+def test_solve_matches_legacy_and_dense(method, maxiter, atol):
+    T0 = heat_init((7, 8, 9))
+    dense = _dense_btcs(T0, OMEGA)
+    legacy, _ = btcs_solve(
+        jnp.asarray(T0), OMEGA, 1, method="cg", tol=1e-7, maxiter=400
+    )
+    wse, T = record_btcs(T0, OMEGA)
+    x = wse.solve(T, method=method, backend="pallas", tol=1e-7, maxiter=maxiter)
+    np.testing.assert_allclose(x, dense, atol=atol)
+    np.testing.assert_allclose(x, np.asarray(legacy), atol=1e-5 + atol)
+
+
+def test_solve_acceptance_tolerance_1e5():
+    """The headline acceptance bound: compiled CG vs dense to 1e-5."""
+    T0 = heat_init((6, 7, 5))
+    dense = _dense_btcs(T0, OMEGA)
+    wse, T = record_btcs(T0, OMEGA)
+    x = wse.solve(T, method="cg", backend="pallas", tol=1e-8, maxiter=600)
+    np.testing.assert_allclose(x, dense, atol=1e-5)
+
+
+def test_backend_jit_agrees_with_pallas():
+    T0 = heat_init((7, 8, 9))
+    wse, T = record_btcs(T0, OMEGA)
+    a = wse.solve(T, method="cg", backend="pallas", tol=1e-7, maxiter=400)
+    wse, T = record_btcs(T0, OMEGA)
+    b = wse.solve(T, method="cg", backend="jit", tol=1e-7, maxiter=400)
+    np.testing.assert_allclose(a, b, atol=2e-4)
+
+
+def test_multistep_matches_legacy():
+    T0 = heat_init((7, 8, 9))
+    legacy, _ = btcs_solve(
+        jnp.asarray(T0), OMEGA, 3, method="cg", tol=1e-7, maxiter=400
+    )
+    wse, T = record_btcs(T0, OMEGA)
+    x, info = wse.solve(
+        T,
+        method="cg",
+        backend="pallas",
+        steps=3,
+        tol=1e-7,
+        maxiter=400,
+        return_info=True,
+    )
+    # fused-kernel vs interpreter rounding accumulates over steps on the
+    # 300–500 K scale; 5e-4 is ~1e-6 relative
+    np.testing.assert_allclose(x, np.asarray(legacy), atol=5e-4)
+    assert info.iterations.shape == (3,)
+    assert (info.iterations > 0).all()
+
+
+# -- fusion accounting: affine operators never fall back ---------------------
+
+
+def test_affine_operator_zero_fallbacks_with_pallas_launches():
+    T0 = heat_init((7, 8, 9))
+    reset_stats()
+    wse, T = record_btcs(T0, OMEGA)
+    wse.solve(T, method="cg", backend="pallas", tol=1e-7, maxiter=400)
+    assert stats.fallbacks == 0
+    assert stats.groups_fused == 2  # operator body + rhs body
+    assert stats.kernels_built + stats.cache_hits == 2
+
+
+def test_varcoef_bicgstab_vs_dense_zero_fallbacks(rng):
+    T0 = heat_init((6, 7, 5))
+    C0 = rng.uniform(0.05, 0.3, size=T0.shape).astype(np.float32)
+    dense = _dense_varcoef(T0, C0, OMEGA)
+    reset_stats()
+    wse, T, C = record_varcoef_btcs(T0, C0, OMEGA)
+    x = wse.solve(T, method="bicgstab", backend="pallas", tol=1e-7, maxiter=400)
+    np.testing.assert_allclose(x, dense, atol=2e-4)
+    assert stats.fallbacks == 0  # two-tap products fuse (variable coeff)
+    assert stats.groups_fused == 1
+
+
+def test_chebyshev_needs_bounds_for_varcoef(rng):
+    """No Gershgorin bracket for variable coefficients: explicit
+    lambda_bounds are required — and make it converge."""
+    T0 = heat_init((6, 7, 5))
+    C0 = rng.uniform(0.05, 0.3, size=T0.shape).astype(np.float32)
+    wse, T, C = record_varcoef_btcs(T0, C0, OMEGA)
+    with pytest.raises(ValueError, match="lambda_bounds"):
+        wse.solve(T, method="chebyshev", backend="pallas", maxiter=50)
+    dense = _dense_varcoef(T0, C0, OMEGA)
+    wse, T, C = record_varcoef_btcs(T0, C0, OMEGA)
+    x = wse.solve(
+        T,
+        method="chebyshev",
+        backend="pallas",
+        maxiter=120,
+        lambda_bounds=(1.0 - 6 * OMEGA * 0.3, 1.0 + 6 * OMEGA * 0.3 + 0.2),
+    )
+    np.testing.assert_allclose(x, dense, atol=5e-4)
+
+
+# -- recording validation ----------------------------------------------------
+
+
+def test_nonlinear_operator_rejected():
+    T0 = heat_init((6, 6, 6))
+    wse = WSE_Interface()
+    T = WSE_Array("T", init_data=T0)
+    with Operator():
+        T[1:-1, 0, 0] = T[1:-1, 0, 0] * T[1:-1, 0, 0]
+    with pytest.raises(ValueError, match="nonlinear"):
+        wse.solve(T, method="cg")
+
+
+def test_constant_term_rejected():
+    T0 = heat_init((6, 6, 6))
+    wse = WSE_Interface()
+    T = WSE_Array("T", init_data=T0)
+    with Operator():
+        T[1:-1, 0, 0] = T[1:-1, 0, 0] + 1.0
+    with pytest.raises(ValueError, match="constant term"):
+        wse.solve(T, method="cg")
+
+
+def test_solve_requires_exactly_one_operator_group():
+    T0 = heat_init((6, 6, 6))
+    wse = WSE_Interface()
+    T = WSE_Array("T", init_data=T0)
+    with Rhs():
+        T[1:-1, 0, 0] = 0.5 * T[1:-1, 0, 0]
+    with pytest.raises(ValueError, match="Operator"):
+        wse.solve(T, method="cg")
+
+
+def test_make_rejects_solver_programs():
+    from repro.core.program import current_program
+
+    T0 = heat_init((6, 6, 6))
+    wse, T = record_btcs(T0, OMEGA)
+    with pytest.raises(ValueError, match="implicit"):
+        wse.make(answer=T)
+    # the failed make deactivates the program (no stuck thread-local state)
+    # but leaves it attached to wse, so solve still works afterwards
+    assert current_program() is None
+    x = wse.solve(T, method="cg", backend="jit", tol=1e-6, maxiter=100)
+    assert np.isfinite(x).all()
+
+
+def test_unlooped_updates_rejected_by_solve():
+    T0 = heat_init((6, 6, 6))
+    wse = WSE_Interface()
+    T = WSE_Array("T", init_data=T0)
+    T[1:-1, 0, 0] = 0.5 * T[1:-1, 0, 0]  # not inside Operator()/Rhs()
+    with pytest.raises(ValueError, match="Operator"):
+        wse.solve(T, method="cg")
+
+
+# -- sharded (mesh=) vs single device ----------------------------------------
+
+
+def test_sharded_solve_matches_single_device():
+    out = run_py(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.jaxcompat import make_mesh
+from repro.solver import btcs_program, solve
+from repro.compiler import stats
+
+mesh = make_mesh((2, 2), ("data", "model"))
+T0 = np.ones((8, 12, 10), np.float32) * 500.0
+T0[1:-1, 1:-1, 0] = 300.0
+T0[1:-1, 1:-1, -1] = 400.0
+
+prog = btcs_program(T0.shape, 0.1, init_data=T0)
+single = solve(prog, "T", method="cg", backend="pallas", steps=2,
+               tol=1e-7, maxiter=400)
+prog = btcs_program(T0.shape, 0.1, init_data=T0)
+sharded = solve(prog, "T", method="cg", backend="pallas", mesh=mesh,
+                steps=2, tol=1e-7, maxiter=400)
+err = np.abs(sharded - single).max()
+assert err < 2e-4, err
+assert stats.fallbacks == 0, stats
+print("OK", err)
+"""
+    )
+    assert "OK" in out

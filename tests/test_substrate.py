@@ -1,5 +1,4 @@
 """Data pipeline, optimizer, compression, checkpoint, fault tolerance."""
-import os
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,58 @@
+"""Temporal blocking: k-step fused kernels, one exchange/pad per tile.
+
+Sweeps the engine's ``time_tile`` factor k ∈ {1, 2, 4, 8} over the heat3d
+explicit loop (``backend="pallas"``) and reports, per k, the wall time per
+step plus the engine's communication accounting — pads/exchanges per step
+(must be 1/k), tiles fused, and steps/s.  On this CPU container the kernels
+run in Pallas interpret mode, so wall time is the correctness-path number;
+the architectural quantity CI tracks in the JSON artifact is the k× drop in
+exchanges per step (on TPU/WSE fabric that drop *is* the wall-time win —
+Rocki et al.'s temporal blocking argument).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_fn
+from repro.configs.heat3d import HeatConfig, make_field
+from repro.core import WSE_Array, WSE_For_Loop, WSE_Interface
+from repro.engine import reset_stats, stats
+
+STEPS = 8
+
+
+def _make_once(T0, steps: int, k: int):
+    wse = WSE_Interface()
+    c = 0.1
+    center = 1.0 - 6.0 * c
+    T = WSE_Array("T_n", init_data=T0)
+    with WSE_For_Loop("t", steps):
+        T[1:-1, 0, 0] = center * T[1:-1, 0, 0] + c * (
+            T[2:, 0, 0]
+            + T[:-2, 0, 0]
+            + T[1:-1, 1, 0]
+            + T[1:-1, 0, -1]
+            + T[1:-1, -1, 0]
+            + T[1:-1, 0, 1]
+        )
+    return wse.make(answer=T, backend="pallas", time_tile=k)
+
+
+def run() -> None:
+    cfg = HeatConfig(nx=32, ny=32, nz=16)
+    T0 = make_field(cfg)
+    for k in (1, 2, 4, 8):
+        reset_stats()
+        us = time_fn(lambda: _make_once(T0, STEPS, k), warmup=1, iters=3)
+        runs = 4  # 1 warmup + 3 timed executions since reset_stats()
+        emit(
+            f"time_tiling_k{k}",
+            us / STEPS,
+            f"steps={STEPS};exchanges_per_step={stats.exchanges_per_step:.3f};"
+            f"tiles_fused_per_run={stats.tiles_fused // runs};"
+            f"steps_per_sec={stats.steps_per_sec:.1f};"
+            "note=interpret-mode-wall-time(track=exchanges_per_step)",
+        )
+
+
+if __name__ == "__main__":
+    run()

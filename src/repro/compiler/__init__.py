@@ -11,21 +11,24 @@ every ``ForLoop`` body through
    variable-coefficient products, non-affine rejection);
 2. :mod:`~repro.compiler.codegen` — one fused ``pl.pallas_call`` per loop
    body via :mod:`repro.kernels.fused`, with the Moat mask applied in-kernel,
-   memoized by program signature;
-3. backend integration in :mod:`repro.core.program` (single device, wrapped
-   in ``lax.fori_loop``) and :mod:`repro.core.halo` (halo-pad brick → fused
-   kernel inside ``shard_map``), with a logged interpreter fallback whenever
-   lowering is unsupported.
+   memoized by program signature (the time-tile factor is part of the key);
+3. execution integration in :mod:`repro.engine` — the unified planner /
+   executor that ``make``, ``run_sharded`` and ``wfa.solve`` dispatch
+   through, including temporal blocking (:func:`~repro.compiler.ir.
+   tile_group`: k steps per kernel launch off one depth-``k·h`` halo) and a
+   logged interpreter fallback whenever lowering is unsupported.
 """
 from repro.compiler.codegen import (CompilerStats, clear_cache, compile_group,
                                     compile_group_sharded, reset_stats, stats,
                                     try_compile)
 from repro.compiler.ir import (AffineUpdate, LoweredGroup, LoweringError, Tap,
-                               lower_group, lower_update)
+                               TiledGroup, auto_tile, lower_group,
+                               lower_update, tile_group)
 
 
 __all__ = [
     "AffineUpdate", "CompilerStats", "LoweredGroup", "LoweringError", "Tap",
-    "clear_cache", "compile_group", "compile_group_sharded",
-    "lower_group", "lower_update", "reset_stats", "stats", "try_compile",
+    "TiledGroup", "auto_tile", "clear_cache", "compile_group",
+    "compile_group_sharded", "lower_group", "lower_update", "reset_stats",
+    "stats", "tile_group", "try_compile",
 ]

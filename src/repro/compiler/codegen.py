@@ -102,43 +102,55 @@ def _field_specs(group: LoweredGroup, shapes: Dict[str, tuple],
     return specs, base_xy
 
 
-def _get_kernel(group: LoweredGroup, specs, bx, by, nx, ny, block, interpret):
+def _get_kernel(group: LoweredGroup, specs, bx, by, nx, ny, block, interpret,
+                time_tile, wrap):
     from repro.kernels.fused import build_fused_call
     sig = (group, tuple((n, s[0], jnp.dtype(s[1]).name) for n, s in
                         specs.items()), bx, by, nx, ny, tuple(block),
-           bool(interpret))
+           bool(interpret), int(time_tile), bool(wrap))
     hit = _KERNEL_CACHE.get(sig)
     if hit is not None:
         stats.cache_hits += 1
         return hit
     kernel = build_fused_call(group.updates, specs, group.halo, bx, by,
-                              nx, ny, block=block, interpret=interpret)
+                              nx, ny, block=block, interpret=interpret,
+                              time_tile=time_tile, wrap=wrap)
     stats.kernels_built += 1
     _KERNEL_CACHE[sig] = kernel
     return kernel
 
 
 def compile_group(ops, shapes: Dict[str, tuple], dtypes: Dict[str, object],
-                  block=(8, 128), interpret: bool = False):
+                  block=(8, 128), interpret: bool = False, *,
+                  time_tile: int = 1, group: LoweredGroup = None):
     """Lower + codegen one loop body for single-device execution.
 
-    Returns ``step(env) -> env`` fusing all of ``ops`` into one pallas_call.
-    Raises :class:`LoweringError` when the body cannot be fused (the caller
-    falls back to the interpreter and logs the reason).
+    Returns ``step(env) -> env`` fusing all of ``ops`` into one pallas_call;
+    with ``time_tile=k`` each call advances *k* steps off one wrap pad of
+    depth ``k·h`` (validated by :func:`repro.compiler.ir.tile_group`).  Pass
+    ``group=`` to reuse a lowering the planner already derived.  Raises
+    :class:`LoweringError` when the body cannot be fused (the caller falls
+    back to the interpreter and logs the reason).
     """
-    group = lower_group(ops)
+    from repro.compiler.ir import tile_group
+
+    if group is None:
+        group = lower_group(ops)
     specs, (nx, ny) = _field_specs(group, shapes, dtypes)
+    # same brick bound the planner clamps against; direct callers get the
+    # validation too (a wrap pad deeper than the grid would be ill-formed)
+    tiled = tile_group(group, time_tile, brick_xy=(nx, ny))
     fused, written = _get_kernel(group, specs, nx, ny, nx, ny, block,
-                                 interpret)
-    h = group.halo
+                                 interpret, time_tile, wrap=True)
+    ph = tiled.halo            # k·h margin, paid once per tile
     in_names = list(specs)
     coords = jnp.zeros((1, 2), jnp.int32)
     stats.groups_fused += 1
 
     def step(env):
         env = dict(env)
-        padded = [env[n] if h == 0 else
-                  jnp.pad(env[n], ((h, h), (h, h), (0, 0)), mode="wrap")
+        padded = [env[n] if ph == 0 else
+                  jnp.pad(env[n], ((ph, ph), (ph, ph), (0, 0)), mode="wrap")
                   for n in in_names]
         outs = fused(coords, *padded)
         for name, out in zip(written, outs):
@@ -150,16 +162,20 @@ def compile_group(ops, shapes: Dict[str, tuple], dtypes: Dict[str, object],
 
 def compile_group_sharded(ops, shapes: Dict[str, tuple],
                           dtypes: Dict[str, object], *, mesh_xy, axis_names,
-                          block=(8, 128), interpret: bool = False):
+                          block=(8, 128), interpret: bool = False,
+                          time_tile: int = 1, group: LoweredGroup = None):
     """Lower + codegen one loop body for use *inside* ``shard_map``.
 
     ``shapes`` are the global field shapes; the returned ``step`` operates on
-    the per-device brick env (halo-pads it with ppermute, then runs the same
+    the per-device brick env (halo-pads it with ppermute — depth ``k·h``
+    when ``time_tile=k``, ONE exchange per k steps — then runs the same
     fused kernel with mesh-derived coordinates).
     """
+    from repro.compiler.ir import tile_group
     from repro.core.halo import halo_pad
 
-    group = lower_group(ops)
+    if group is None:
+        group = lower_group(ops)
     specs, (nx, ny) = _field_specs(group, shapes, dtypes)
     mx, my = mesh_xy
     ax_x, ax_y = axis_names
@@ -167,9 +183,10 @@ def compile_group_sharded(ops, shapes: Dict[str, tuple],
         raise LoweringError(
             f"global extent ({nx},{ny}) not divisible by mesh ({mx},{my})")
     bx, by = nx // mx, ny // my
+    tiled = tile_group(group, time_tile, brick_xy=(bx, by))
     fused, written = _get_kernel(group, specs, bx, by, nx, ny, block,
-                                 interpret)
-    h = group.halo
+                                 interpret, time_tile, wrap=False)
+    ph = tiled.halo
     in_names = list(specs)
     stats.groups_fused += 1
 
@@ -178,8 +195,8 @@ def compile_group_sharded(ops, shapes: Dict[str, tuple],
         cx = jax.lax.axis_index(ax_x) * bx
         cy = jax.lax.axis_index(ax_y) * by
         coords = jnp.stack([cx, cy]).astype(jnp.int32).reshape(1, 2)
-        padded = [env[n] if h == 0 else
-                  halo_pad(env[n], h, ax_x, ax_y, mx, my)
+        padded = [env[n] if ph == 0 else
+                  halo_pad(env[n], ph, ax_x, ax_y, mx, my)
                   for n in in_names]
         outs = fused(coords, *padded)
         for name, out in zip(written, outs):

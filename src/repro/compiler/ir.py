@@ -85,6 +85,80 @@ class LoweredGroup:
         return tuple(seen)
 
 
+@dataclasses.dataclass(frozen=True)
+class TiledGroup:
+    """Temporal composition of a loop body: ``k`` sub-steps per kernel launch.
+
+    The transform behind the engine's *time tiling*: one padded window of
+    halo depth ``k·h`` feeds ``k`` in-kernel applications of the body's tap
+    form, the valid region shrinking by ``h`` per sub-step (trapezoid
+    blocking — Rocki et al.'s wafer-scale stencil schedule).  Moat masking is
+    applied *per sub-step* from global coordinates, so composition stays
+    exact at the Dirichlet boundary; composing the taps algebraically would
+    not (the mask makes the k-step map non-affine at the boundary rows).
+    Communication amortizes k×: one halo exchange (or wrap pad) per tile
+    instead of one per step.
+    """
+
+    base: LoweredGroup
+    k: int
+
+    @property
+    def halo(self) -> int:
+        """Padding depth of the tiled window (``k·h``)."""
+        return self.k * self.base.halo
+
+    @property
+    def updates(self) -> Tuple[AffineUpdate, ...]:
+        return self.base.updates
+
+
+def tile_group(group: LoweredGroup, k: int,
+               brick_xy: Tuple[int, int] = None,
+               n_steps: int = None) -> TiledGroup:
+    """Validate and build the ``k``-step composition of ``group``.
+
+    Legality: the body must already be in canonical affine tap form (i.e. a
+    :class:`LoweredGroup` — non-affine bodies never reach here), which makes
+    it *self-consistent*: every field it reads through a spatial offset is
+    either updated by the body itself (its sub-step evolution is replayed
+    in-window) or constant over the tile (a coefficient field).  Bounds:
+    the tiled halo ``k·h`` must fit inside the brick (``ppermute`` moves at
+    most one brick per hop) and ``k`` cannot exceed the loop trip count.
+    Violations raise :class:`LoweringError`; the planner falls back to
+    ``k = 1`` with a logged reason.
+    """
+    if not isinstance(k, int) or k < 1:
+        raise LoweringError(f"time tile factor must be a positive int, got {k!r}")
+    if n_steps is not None and k > n_steps:
+        raise LoweringError(
+            f"time tile k={k} exceeds the loop trip count {n_steps}")
+    if brick_xy is not None and group.halo > 0:
+        if k * group.halo > min(brick_xy):
+            raise LoweringError(
+                f"time tile k={k} needs halo depth {k * group.halo} > brick "
+                f"extent {min(brick_xy)}; neighbour exchange only reaches one "
+                "brick")
+    return TiledGroup(base=group, k=k)
+
+
+def auto_tile(group: LoweredGroup, brick_xy: Tuple[int, int],
+              n_steps: int, max_k: int = 8) -> int:
+    """Pick a time-tile factor: the largest power of two ``k ≤ max_k`` that
+    divides the trip count (auto-tiled runs never need a remainder kernel)
+    and whose tiled halo stays small next to the brick
+    (``4·k·h ≤ min(bx, by)``, i.e. at most ~25% linear overhead per side).
+    Halo-free bodies tile purely for launch amortization."""
+    cand = max_k
+    while cand >= 2:
+        if (cand <= n_steps and n_steps % cand == 0
+                and (group.halo == 0
+                     or 4 * cand * group.halo <= min(brick_xy))):
+            return cand
+        cand //= 2
+    return 1
+
+
 # ---------------------------------------------------------------------------
 # expression → polynomial-in-taps
 # ---------------------------------------------------------------------------

@@ -3,12 +3,17 @@
 The paper's 1×1×Z decomposition gives every tile a Z-column and exchanges
 X/Y neighbour planes over single-cycle fabric hops.  The TPU analogue bricks
 the (X, Y) plane over the (``data``, ``model``) mesh axes — each chip owns a
-(bx, by, Z) brick — and exchanges one-plane (or depth-h, see wide halos)
-ghost zones with ``lax.ppermute`` along each axis: a nearest-neighbour ICI
-transfer, the direct analogue of the WSE's W→C→E / N→C→S background threads.
+(bx, by, Z) brick — and exchanges depth-``h`` ghost zones with
+``lax.ppermute`` along each axis: a nearest-neighbour ICI transfer, the
+direct analogue of the WSE's W→C→E / N→C→S background threads.  Time-tiled
+segments exchange depth ``k·h`` once per k steps (temporal blocking — the
+engine's communication amortization).
 
-``run_sharded`` executes any recorded WFA program this way, so the paper's
-Fig. 3 script runs unchanged on 1 device or 512.
+This module owns the mesh-level primitives (``halo_pad``, the traced Moat
+mask, the sharded roll-interpreter step); scheduling and backend dispatch
+live in :mod:`repro.engine`.  ``run_sharded`` is the thin mesh entry point
+into that engine, so the paper's Fig. 3 script runs unchanged on 1 device
+or 512.
 """
 from __future__ import annotations
 
@@ -17,11 +22,9 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from repro.core import stencil as st
-from repro.core.jaxcompat import shard_map
-from repro.core.program import Program, _group_ops
+from repro.core.program import Program
 
 
 def _ppermute_shift(x, axis_name: str, n: int, direction: int):
@@ -87,12 +90,13 @@ def interp_step_sharded(ops, ax_x: str, ax_y: str, mx: int, my: int):
 
     The ``shard_map``-local analogue of ``program._interp_step``: one halo
     exchange + padded evaluation per op, Moat mask from mesh coordinates.
-    Shared by ``run_sharded`` and the solver's interpreter fallback so the
-    two cannot diverge.
+    The engine hands this out (via ``compile_body``) as the ``jit`` backend
+    and the sharded interpreter fallback, so the two cannot diverge.
     """
 
     def step(e):
         e = dict(e)
+        masks = {}  # (bx, by) -> traced Moat mask, built once per step
         for op in ops:
             h = max(1, op.expr.max_offset())
             names = {t.field_name for t in op.expr.terms()}
@@ -100,8 +104,9 @@ def interp_step_sharded(ops, ax_x: str, ax_y: str, mx: int, my: int):
             f = e[op.field_name]
             bx, by, _ = f.shape
             val = evaluate_padded(op.expr, padded, op.target_z, h, bx, by)
-            mask = local_moat_mask(bx, by, ax_x, ax_y, mx, my)
-            new_z = jnp.where(mask, val, f[:, :, op.target_z])
+            if (bx, by) not in masks:
+                masks[bx, by] = local_moat_mask(bx, by, ax_x, ax_y, mx, my)
+            new_z = jnp.where(masks[bx, by], val, f[:, :, op.target_z])
             start = op.target_z.indices(f.shape[2])[0]
             e[op.field_name] = jax.lax.dynamic_update_slice(
                 f, new_z, (0, 0, start))
@@ -120,60 +125,20 @@ def default_mesh2d():
 
 
 def run_sharded(program: Program, env: Dict[str, np.ndarray], mesh=None,
-                use_pallas: bool = False):
+                use_pallas: bool = False, time_tile=None):
     """Execute a recorded WFA program on a 2-D device mesh.
 
-    With ``use_pallas=True`` each ForLoop body is lowered by repro.compiler
-    to one fused Pallas kernel applied to the halo-padded brick inside the
-    mapped function (halo-pad → fused kernel — the ``backend="pallas"``
-    composition); bodies that cannot be lowered fall back to the per-term
-    roll interpreter below with a logged reason.
+    A thin wrapper over the unified engine: plans the program for the
+    ``pallas`` (``use_pallas=True``; halo-pad brick → fused kernel inside
+    the mapped function, ``time_tile=k`` amortizing one depth-``k·h``
+    exchange over k steps) or ``jit`` backend and executes it inside one
+    ``shard_map``.  Bodies that cannot be lowered fall back to
+    :func:`interp_step_sharded` with a logged reason.
     """
+    from repro.engine import execute, plan
+
     if mesh is None:
         mesh = default_mesh2d()
-    ax_x, ax_y = mesh.axis_names[-2], mesh.axis_names[-1]
-    mx, my = mesh.shape[ax_x], mesh.shape[ax_y]
-
-    shapes = {n: f.shape for n, f in program.fields.items()}
-    for n, (nx, ny, _) in shapes.items():
-        if nx % mx or ny % my:
-            raise ValueError(
-                f"field {n} shape ({nx},{ny}) not divisible by mesh ({mx},{my})")
-
-    spec = P(ax_x, ax_y, None)
-    sharding = jax.sharding.NamedSharding(mesh, spec)
-    genv = {k: jax.device_put(jnp.asarray(v), sharding) for k, v in env.items()}
-    specs = {k: spec for k in genv}
-
-    fused_steps = {}
-    if use_pallas:
-        from repro.compiler import compile_group_sharded, try_compile
-        from repro.kernels.ops import _interpret
-
-        dtypes = {k: v.dtype for k, v in genv.items()}
-        for gi, (loop, ops) in enumerate(_group_ops(program)):
-            step = try_compile(
-                lambda: compile_group_sharded(
-                    ops, shapes, dtypes, mesh_xy=(mx, my),
-                    axis_names=(ax_x, ax_y), interpret=_interpret()), loop)
-            if step is not None:
-                fused_steps[gi] = step
-
-    def local_step(env_local):
-        e = dict(env_local)
-        for gi, (loop, ops) in enumerate(_group_ops(program)):
-            body = fused_steps.get(gi)
-            if body is None:
-                body = interp_step_sharded(ops, ax_x, ax_y, mx, my)
-            if loop is None:
-                e = body(e)
-            else:
-                e = jax.lax.fori_loop(
-                    0, loop.n, lambda i, ee, b=body: b(ee), e)
-        return e
-
-    stepped = jax.jit(
-        shard_map(local_step, mesh=mesh, in_specs=(specs,),
-                  out_specs=specs, check=False))
-    out = stepped(genv)
-    return {k: np.asarray(jax.device_get(v)) for k, v in out.items()}
+    p = plan(program, backend="pallas" if use_pallas else "jit", mesh=mesh,
+             time_tile=time_tile)
+    return execute(p, env)

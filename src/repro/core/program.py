@@ -1,18 +1,25 @@
-"""Program capture and compilation — the analogue of the WFA's RPC bytecode.
+"""Program capture — the analogue of the WFA's RPC bytecode.
 
 The WFA compiles the user's Python into a bytecode sequence that a Control
-Tile broadcasts as RPCs to Worker/Moat tiles.  On TPU the analogous artifact
-is an XLA SPMD executable: we trace the recorded update ops into one step
-function, wrap the time loop in ``lax.fori_loop`` and ``jax.jit`` the result.
-Three backends mirror the WFA's workflow:
+Tile broadcasts as RPCs to Worker/Moat tiles.  This module records the
+analogous artifact: fields and update ops captured into a :class:`Program`.
+Execution is owned by the unified engine (:mod:`repro.engine`) — ``make``
+hands the recording to ``engine.plan`` / ``engine.execute``, which schedule
+every ``ForLoop`` body onto one of the interchangeable backends:
 
 * ``numpy``   — the WFA "validation capability" (runs the ops eagerly in NumPy)
-* ``jit``     — single-device compiled execution
+* ``jit``     — single-device compiled execution (roll interpreter under XLA)
 * ``shard_map`` — distributed bricks with halo exchange (see core/halo.py)
 * ``pallas``  — the program *compiler* (repro.compiler): every ForLoop body
   lowers to one fused Pallas kernel (all taps of all updates in a single
-  VMEM pass — the WFA's fused-RPC win) with an interpreter fallback for
-  bodies that cannot be lowered; pass ``mesh=`` to compose with shard_map.
+  VMEM pass — the WFA's fused-RPC win), optionally *time-tiled* so k steps
+  share one halo exchange / wrap pad (``time_tile=``), with an interpreter
+  fallback for bodies that cannot be lowered; pass ``mesh=`` to compose
+  with shard_map.
+
+This module keeps only the recording machinery plus the roll-based
+interpreter step (:func:`_interp_step`) that the engine and solver share as
+the semantic reference for every backend.
 """
 from __future__ import annotations
 
@@ -33,6 +40,18 @@ _STATE = threading.local()
 
 def current_program() -> Optional["Program"]:
     return getattr(_STATE, "program", None)
+
+
+def release_program(program: "Program") -> None:
+    """Deactivate ``program`` if it is the thread-local active recording.
+
+    Every consumer of a finished recording (``make``, ``solve``, the solver
+    step builders, ``WFAInterface.__exit__``) funnels through here, so the
+    deactivation rule lives in one place; the program object itself stays
+    usable (e.g. for building a second solver from the same recording).
+    """
+    if current_program() is program:
+        _STATE.program = None
 
 
 @contextlib.contextmanager
@@ -141,47 +160,34 @@ class WFAInterface:
         return self
 
     def __exit__(self, *exc):
-        if current_program() is self.program:
-            _STATE.program = None
+        release_program(self.program)
         return False
 
     # -- execution ---------------------------------------------------------
-    def make(self, answer, backend: str = "jit", mesh=None):
+    def make(self, answer, backend: str = "jit", mesh=None, time_tile=None):
         """Compile and run the recorded program; returns ``answer``'s data.
 
         (the WFA's ``make_WSE``; ``backend='numpy'`` is its validation mode.)
+        Dispatches through the unified engine (:mod:`repro.engine`):
+        ``mesh=`` runs brick-sharded inside ``shard_map``; ``time_tile=k``
+        fuses k steps per kernel launch on ``backend="pallas"`` (one halo
+        exchange / wrap pad per tile; ``None`` lets the planner auto-pick).
         """
         for op in self.program.ops:
             if getattr(op.loop, "role", None) is not None:
                 # deactivate like every other exit path from make(); the
                 # program object itself stays usable for wse.solve(...)
-                if current_program() is self.program:
-                    _STATE.program = None
+                release_program(self.program)
                 raise ValueError(
                     "this program records an implicit system "
                     "(Operator()/Rhs() groups); run wse.solve(answer, ...) "
                     "instead of make")
         try:
-            env = {n: f.init_data for n, f in self.program.fields.items()}
-            if backend == "numpy":
-                out = _run_numpy(self.program, env)
-            elif backend == "jit":
-                out = _run_jax(self.program, env)
-            elif backend == "shard_map":
-                from repro.core.halo import run_sharded
-                out = run_sharded(self.program, env, mesh=mesh)
-            elif backend == "pallas":
-                if mesh is not None:
-                    from repro.core.halo import run_sharded
-                    out = run_sharded(self.program, env, mesh=mesh,
-                                      use_pallas=True)
-                else:
-                    out = _run_pallas(self.program, env)
-            else:
-                raise ValueError(f"unknown backend {backend!r}")
+            from repro.engine import run_program
+            out = run_program(self.program, backend=backend, mesh=mesh,
+                              time_tile=time_tile)
         finally:
-            if current_program() is self.program:
-                _STATE.program = None
+            release_program(self.program)
         return np.asarray(out[answer.name])
 
     def solve(self, answer, method: str = "cg", backend: str = "pallas",
@@ -200,8 +206,7 @@ class WFAInterface:
             return _solve(self.program, answer, method=method,
                           backend=backend, mesh=mesh, **kwargs)
         finally:
-            if current_program() is self.program:
-                _STATE.program = None
+            release_program(self.program)
 
     # paper-compatible alias
     make_WSE = make
@@ -237,22 +242,13 @@ def _apply_op(op: UpdateOp, env, xp, roll):
     return jax.lax.dynamic_update_slice(field, new_z, (0, 0, start))
 
 
-def _run_numpy(program: Program, env):
-    env = {k: v.copy() for k, v in env.items()}
-    roll = lambda a, s, ax: np.roll(a, s, axis=ax)
-    for loop, ops in _group_ops(program):
-        n = loop.n if loop is not None else 1
-        for _ in range(n):
-            for op in ops:
-                env[op.field_name] = _apply_op(op, env, np, roll)
-    return env
-
-
 def _interp_step(ops):
     """Traced interpreter step for one op group: one roll per stencil term.
 
     Shared by the ``jit`` backend and the ``pallas`` backend's fallback path
-    so their semantics cannot diverge.
+    (both via :func:`repro.engine.compile_body`) so their semantics cannot
+    diverge — this is the semantic reference every backend is tested
+    against.
     """
     roll = lambda a, s, ax: jnp.roll(a, s, axis=ax)
 
@@ -262,53 +258,3 @@ def _interp_step(ops):
             e[op.field_name] = _apply_op(op, e, jnp, roll)
         return e
     return f
-
-
-def _run_jax(program: Program, env):
-    env = {k: jnp.asarray(v) for k, v in env.items()}
-
-    @jax.jit
-    def run(env):
-        for loop, ops in _group_ops(program):
-            step = _interp_step(ops)
-            if loop is None:
-                env = step(env)
-            else:
-                env = jax.lax.fori_loop(0, loop.n, lambda i, e: step(e), env)
-        return env
-
-    return jax.device_get(run(env))
-
-
-def _run_pallas(program: Program, env):
-    """Compiled backend: one fused Pallas kernel per ForLoop body.
-
-    Each loop body is lowered through repro.compiler (IR normalization →
-    fused-kernel codegen, memoized by program signature); bodies that cannot
-    be lowered fall back to the roll-based interpreter step with a logged
-    reason, inside the same jitted run.
-    """
-    from repro.compiler import compile_group, try_compile
-    from repro.kernels.ops import _interpret
-
-    env = {k: jnp.asarray(v) for k, v in env.items()}
-    shapes = {n: f.shape for n, f in program.fields.items()}
-    dtypes = {n: env[n].dtype for n in env}
-
-    steps = []
-    for loop, ops in _group_ops(program):
-        step = try_compile(
-            lambda: compile_group(ops, shapes, dtypes,
-                                  interpret=_interpret()), loop)
-        steps.append((loop, step if step is not None else _interp_step(ops)))
-
-    @jax.jit
-    def run(env):
-        for loop, step in steps:
-            if loop is None:
-                env = step(env)
-            else:
-                env = jax.lax.fori_loop(0, loop.n, lambda i, e: step(e), env)
-        return env
-
-    return jax.device_get(run(env))

@@ -1,0 +1,47 @@
+"""repro.engine — the unified execution engine (planner + executor).
+
+Every way of running a recorded WFA program — ``WFAInterface.make`` (all
+backends), ``core.halo.run_sharded`` and the operator/rhs applications
+behind ``wfa.solve`` — dispatches through this package:
+
+* :func:`plan` schedules the program's op groups into
+  :class:`~repro.engine.plan.Segment`s (fused kernel vs interpreter, with a
+  time-tile factor per loop body);
+* :func:`execute` runs a plan eagerly (``numpy``), under one ``jax.jit``
+  (single device) or inside one ``shard_map`` (mesh);
+* :func:`compile_body` builds a single body application ``env -> env`` —
+  the one backend if/else in the tree — for the solver's matrix-free
+  operator steps;
+* :data:`stats` exposes the communication accounting (steps, launches,
+  halo exchanges / wrap pads, tiles fused, steps/sec).
+
+Temporal blocking: a fused segment with ``time_tile=k`` advances k steps
+per kernel launch off one halo exchange (or wrap pad) of depth ``k·h`` —
+the wafer-scale trapezoid schedule (Rocki et al.) on the TPU mesh.  Pass
+``time_tile=`` through ``make``/``run_sharded`` to override the planner's
+auto-pick; illegal factors clamp with a logged reason, non-lowerable bodies
+fall back to the untiled interpreter exactly as before.
+"""
+
+from repro.engine.executor import execute, run_program
+from repro.engine.plan import (
+    BACKENDS,
+    ExecutionPlan,
+    Segment,
+    compile_body,
+    plan,
+)
+from repro.engine.stats import EngineStats, reset_stats, stats
+
+__all__ = [
+    "BACKENDS",
+    "EngineStats",
+    "ExecutionPlan",
+    "Segment",
+    "compile_body",
+    "execute",
+    "plan",
+    "reset_stats",
+    "run_program",
+    "stats",
+]

@@ -1,0 +1,278 @@
+"""The engine planner: one dispatch point for every execution path.
+
+``plan(program, backend=..., mesh=..., time_tile=...)`` walks the recorded
+program's op groups exactly once and schedules each as a :class:`Segment` —
+either a *fused* segment (the :mod:`repro.compiler` pipeline built one
+``pallas_call`` for the body, possibly time-tiled so k steps share one halo
+exchange) or an *interpreter* segment (the shared roll-based step, used by
+the ``numpy``/``jit`` backends and as the logged fallback for bodies that do
+not lower).  :func:`repro.engine.executor.execute` then runs the plan on a
+single device or inside ``shard_map`` — ``WFAInterface.make``,
+``core.halo.run_sharded`` and the :mod:`repro.solver` step builders all
+dispatch through here, so backend policy lives in exactly one place.
+
+Time-tile selection: an explicit ``time_tile=k`` is honoured up to the
+legality bounds of :func:`repro.compiler.ir.tile_group` (halo depth ``k·h``
+must fit the brick, ``k`` the trip count) and clamped with a logged reason
+otherwise; ``time_tile=None`` auto-picks the largest power-of-two divisor of
+the trip count whose tiled halo stays small next to the brick
+(:func:`repro.compiler.ir.auto_tile`), so auto-tiled runs never need a
+remainder kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Callable, List, Optional, Tuple
+
+from repro.compiler import LoweringError, auto_tile, lower_group, tile_group
+from repro.compiler.codegen import compile_group, compile_group_sharded, try_compile
+from repro.core.program import Program, _group_ops, _interp_step
+from repro.engine.stats import stats
+
+log = logging.getLogger("repro.engine")
+
+#: user-facing backends accepted by plan() (``shard_map`` is ``jit`` + mesh)
+BACKENDS = ("numpy", "jit", "shard_map", "pallas")
+
+
+@dataclasses.dataclass
+class Segment:
+    """One scheduled op group: the loop, its ops, and the compiled step(s).
+
+    ``step`` advances ``time_tile`` logical steps per call; ``step_rem``
+    (untiled) covers the ``n % k`` remainder when the tile factor does not
+    divide the trip count.  ``numpy`` plans carry no compiled steps — the
+    executor interprets ``ops`` eagerly.
+    """
+
+    loop: Optional[object]
+    ops: Tuple
+    kind: str  # "fused" | "interp" | "eager"
+    step: Optional[Callable] = None
+    step_rem: Optional[Callable] = None
+    time_tile: int = 1
+    halo: int = 0
+    reason: str = ""  # fallback / clamp explanation, "" when none
+
+    @property
+    def n_steps(self) -> int:
+        return self.loop.n if self.loop is not None else 1
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """Scheduled execution of one recorded program."""
+
+    program: Program
+    backend: str  # normalized: "numpy" | "jit" | "pallas"
+    mesh: Optional[object]
+    segments: List[Segment]
+
+    @property
+    def mesh_ctx(self) -> Optional[Tuple[int, int, str, str]]:
+        return _mesh_ctx(self.mesh)
+
+
+def _mesh_ctx(mesh) -> Optional[Tuple[int, int, str, str]]:
+    """(mx, my, ax_x, ax_y) for the brick decomposition, None off-mesh."""
+    if mesh is None:
+        return None
+    ax_x, ax_y = mesh.axis_names[-2], mesh.axis_names[-1]
+    return mesh.shape[ax_x], mesh.shape[ax_y], ax_x, ax_y
+
+
+def compile_body(
+    ops,
+    loop,
+    shapes,
+    dtypes,
+    backend: str,
+    *,
+    mesh_ctx: Optional[Tuple[int, int, str, str]] = None,
+    time_tile: int = 1,
+    group=None,
+) -> Tuple[Callable, bool]:
+    """Build one body application ``env -> env`` — THE backend dispatch.
+
+    Returns ``(step, fused)``.  ``backend="pallas"`` routes through the
+    compiler (fused kernel, ``time_tile`` sub-steps per call, interpreter
+    fallback on :class:`LoweringError` counted in ``repro.compiler.stats``);
+    ``backend="jit"`` returns the shared roll-interpreter step.  With
+    ``mesh_ctx`` the step operates on per-device bricks inside ``shard_map``
+    (ppermute halo exchange); without, on the global array.  Explicit
+    program execution, ``run_sharded`` and the solver's operator/rhs
+    applications all obtain their steps here.
+    """
+    stats.bodies_compiled += 1
+    if backend == "pallas":
+        from repro.kernels.ops import _interpret
+
+        if mesh_ctx is None:
+            fn = lambda: compile_group(  # noqa: E731
+                ops,
+                shapes,
+                dtypes,
+                interpret=_interpret(),
+                time_tile=time_tile,
+                group=group,
+            )
+        else:
+            mx, my, ax_x, ax_y = mesh_ctx
+            fn = lambda: compile_group_sharded(  # noqa: E731
+                ops,
+                shapes,
+                dtypes,
+                mesh_xy=(mx, my),
+                axis_names=(ax_x, ax_y),
+                interpret=_interpret(),
+                time_tile=time_tile,
+                group=group,
+            )
+        step = try_compile(fn, loop)
+        if step is not None:
+            return step, True
+    elif backend != "jit":
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if mesh_ctx is None:
+        return _interp_step(ops), False
+    from repro.core.halo import interp_step_sharded
+
+    mx, my, ax_x, ax_y = mesh_ctx
+    return interp_step_sharded(ops, ax_x, ax_y, mx, my), False
+
+
+def _brick_xy(program: Program, mesh_ctx, group) -> Tuple[int, int]:
+    """Per-device brick extent of the fields ``group`` actually touches
+    (the whole grid on a single device).  Anchored on the group's first
+    written field — the same convention ``codegen._field_specs`` validates
+    every fused field against — so tile legality is judged on the extent
+    the kernel will really run over, not whichever field the program
+    happened to declare first."""
+    nx, ny, _ = program.fields[group.fields_written()[0]].shape
+    if mesh_ctx is None:
+        return nx, ny
+    mx, my, _, _ = mesh_ctx
+    return nx // mx, ny // my
+
+
+def _pick_tile(group, loop, requested: Optional[int], brick_xy) -> Tuple[int, str]:
+    """Resolve the tile factor for one fused loop body: (k, clamp_reason)."""
+    n = loop.n if loop is not None else 1
+    if n <= 1:
+        return 1, ""
+    if requested is None:
+        return auto_tile(group, brick_xy, n), ""
+    k = max(1, int(requested))
+    try:
+        tile_group(group, k, brick_xy=brick_xy, n_steps=n)
+        return k, ""
+    except LoweringError as e:
+        kmax = n
+        if group.halo > 0:
+            kmax = min(kmax, min(brick_xy) // group.halo)
+        k_ok = max(1, min(k, kmax))
+        reason = f"time_tile={requested} clamped to k={k_ok}: {e}"
+        log.warning("%s", reason)
+        return k_ok, reason
+
+
+def plan(
+    program: Program,
+    backend: str = "jit",
+    mesh=None,
+    time_tile: Optional[int] = None,
+) -> ExecutionPlan:
+    """Schedule a recorded program: group ops once, pick a strategy per body."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if backend == "shard_map":
+        backend = "jit"
+        if mesh is None:
+            from repro.core.halo import default_mesh2d
+
+            mesh = default_mesh2d()
+    if backend == "numpy":
+        mesh = None  # the validation backend is eager + single-host
+    mesh_ctx = _mesh_ctx(mesh)
+
+    shapes = {n: f.shape for n, f in program.fields.items()}
+    dtypes = {n: f.dtype for n, f in program.fields.items()}
+    if mesh_ctx is not None:
+        mx, my, _, _ = mesh_ctx
+        for n, (nx, ny, _) in shapes.items():
+            if nx % mx or ny % my:
+                raise ValueError(
+                    f"field {n} shape ({nx},{ny}) not divisible by mesh ({mx},{my})"
+                )
+
+    segments: List[Segment] = []
+    for loop, ops in _group_ops(program):
+        if backend == "numpy":
+            segments.append(Segment(loop=loop, ops=tuple(ops), kind="eager"))
+            continue
+        group = None
+        k, reason = 1, ""
+        if backend == "pallas":
+            try:
+                group = lower_group(ops)
+            except LoweringError:
+                group = None  # compile_body repeats the lowering to log/count
+            if group is not None:
+                k, reason = _pick_tile(
+                    group, loop, time_tile, _brick_xy(program, mesh_ctx, group)
+                )
+        elif time_tile is not None and time_tile != 1:
+            # an explicit tile request on an interpreter backend is dropped,
+            # not honoured — say so instead of silently running untiled
+            reason = (
+                f"time_tile={time_tile} ignored: backend {backend!r} has no "
+                "fused kernels to tile (use backend='pallas')"
+            )
+            log.warning("%s", reason)
+        step, fused = compile_body(
+            ops,
+            loop,
+            shapes,
+            dtypes,
+            backend,
+            mesh_ctx=mesh_ctx,
+            time_tile=k,
+            group=group,
+        )
+        if not fused:
+            k = 1
+        seg = Segment(
+            loop=loop,
+            ops=tuple(ops),
+            kind="fused" if fused else "interp",
+            step=step,
+            time_tile=k,
+            halo=group.halo if group is not None else 0,
+            reason=reason,
+        )
+        if fused and k > 1 and seg.n_steps % k:
+            seg.step_rem, _ = compile_body(
+                ops,
+                loop,
+                shapes,
+                dtypes,
+                backend,
+                mesh_ctx=mesh_ctx,
+                time_tile=1,
+                group=group,
+            )
+        if reason:
+            stats.note_tile_reason(reason)
+        if fused:
+            stats.segments_fused += 1
+        else:
+            stats.segments_interp += 1
+        segments.append(seg)
+
+    stats.plans_built += 1
+    stats.max_time_tile = max(
+        stats.max_time_tile, max((s.time_tile for s in segments), default=1)
+    )
+    return ExecutionPlan(program=program, backend=backend, mesh=mesh, segments=segments)

@@ -1,0 +1,68 @@
+"""Execution counters for the unified engine.
+
+One global :data:`stats` instance (mirroring ``repro.compiler.stats``) that
+:func:`repro.engine.plan` and :func:`repro.engine.execute` update in place;
+tests and benchmarks ``reset_stats()`` around a run and assert on the
+communication accounting — the headline being :attr:`EngineStats.
+exchanges_per_step`, which temporal blocking must drop k×.
+
+Exchange counting is *static*: execution is traced (``lax.fori_loop`` /
+``shard_map``), so the executor derives the counts from the plan — one pad /
+halo-exchange event per fused-kernel launch (zero for halo-free bodies, the
+wrap pad on a single device counts as the exchange analogue), and one event
+per op application on the roll-interpreter paths (which pad per op, per
+step).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Counters for engine planning + execution (reset with ``reset_stats``)."""
+
+    plans_built: int = 0
+    bodies_compiled: int = 0  # compile_body calls (every backend dispatch)
+    segments_fused: int = 0  # loop bodies routed to a fused kernel
+    segments_interp: int = 0  # loop bodies routed to the roll interpreter
+    steps_run: int = 0  # logical time steps executed
+    launches: int = 0  # kernel / interpreter-step invocations
+    exchanges: int = 0  # halo exchanges or wrap pads performed
+    tiles_fused: int = 0  # k>1 tiled launches (k steps per launch)
+    max_time_tile: int = 1  # largest k any segment ran with
+    elapsed_s: float = 0.0  # wall time inside execute()
+    tile_reasons: Tuple[str, ...] = ()  # why a tile factor was clamped/refused
+
+    @property
+    def exchanges_per_step(self) -> float:
+        """Halo exchanges (or wrap pads) per logical time step."""
+        return self.exchanges / self.steps_run if self.steps_run else 0.0
+
+    @property
+    def steps_per_sec(self) -> float:
+        """Logical time steps per wall-clock second across executes."""
+        return self.steps_run / self.elapsed_s if self.elapsed_s else 0.0
+
+    def note_tile_reason(self, reason: str) -> None:
+        self.tile_reasons = self.tile_reasons + (reason,)
+
+
+stats = EngineStats()
+
+
+def reset_stats() -> None:
+    # mutate in place so `from repro.engine import stats` stays live
+    stats.plans_built = 0
+    stats.bodies_compiled = 0
+    stats.segments_fused = 0
+    stats.segments_interp = 0
+    stats.steps_run = 0
+    stats.launches = 0
+    stats.exchanges = 0
+    stats.tiles_fused = 0
+    stats.max_time_tile = 1
+    stats.elapsed_s = 0.0
+    stats.tile_reasons = ()

@@ -1,23 +1,30 @@
-"""Generic fused stencil kernel — arbitrary tap sets, multiple outputs.
+"""Generic fused stencil kernel — arbitrary tap sets, outputs, time tiles.
 
 This generalizes the hand-fused 7-point :mod:`repro.kernels.stencil7` to any
 canonical tap form produced by :mod:`repro.compiler.ir`: arbitrary (dz, dx,
 dy) offsets within a halo of depth ``h`` (off-axis/diagonal taps included),
 variable-coefficient products of up to two taps, several ``UpdateOp``s — and
 several *output fields* — fused into a single ``pl.pallas_call`` per loop
-body.  Each grid cell loads one overlapping ``(bxb+2h, byb+2h, Z)`` window
-per input field (``pl.Element`` indexing, exactly the stencil7 layout),
-evaluates every update's tap sum in VMEM, applies the Dirichlet Moat mask
-in-kernel from global coordinates, and writes one ``(bxb, byb, Z)`` tile per
-written field.  Sequential updates inside one body see earlier updates'
-*local* values (dx = dy = 0 reads only — the lowering pass rejects the rest),
+body.  Sequential updates inside one body see earlier updates' *local*
+values (dx = dy = 0 reads only — the lowering pass rejects the rest),
 mirroring the Control Tile's ordered RPC stream.
+
+Time tiling (``time_tile=k``): each grid cell loads one overlapping
+``(bxb + 2kh, byb + 2kh, Z)`` window per input field (``pl.Element``
+indexing) and applies the loop body ``k`` times in VMEM, the valid region
+shrinking by ``h`` per sub-step (trapezoid blocking), so the caller pays the
+halo exchange / wrap pad once per *tile* instead of once per step.  The
+Dirichlet Moat mask is applied per sub-step from global coordinates — with
+``wrap=True`` (single device, ``jnp.pad(mode="wrap")`` margins) coordinates
+are taken modulo the grid so halo cells evolve exactly like the domain cells
+they mirror, keeping the tiled run bit-identical to k untiled steps.
 
 The caller supplies halo-padded inputs: ``jnp.pad(..., mode="wrap")`` on a
 single device (matching the interpreter's ``jnp.roll`` semantics exactly) or
-``core.halo.halo_pad`` (ICI ppermute) inside ``shard_map``.  ``coords`` is a
-(1, 2) int32 array with the brick's global cell origin so one kernel image
-serves every brick — how one Worker image serves the whole WSE fabric.
+``core.halo.halo_pad`` (ICI ppermute) inside ``shard_map`` — depth ``k·h``
+either way.  ``coords`` is a (1, 2) int32 array with the brick's global cell
+origin so one kernel image serves every brick — how one Worker image serves
+the whole WSE fabric.
 """
 from __future__ import annotations
 
@@ -32,36 +39,44 @@ from repro.kernels.compat import element_block_spec
 from repro.kernels.stencil7 import _pick_block
 
 
-def _read_tap(tap, u, window, center, h, bxb, byb):
-    """Value of one tap over the update's target block, (bxb, byb, zlen)."""
+def _read_tap(tap, u, cur, center, h, out_x, out_y):
+    """Value of one tap over the update's target block, (out_x, out_y, zlen)."""
     zlo = u.z0 + tap.dz
     if tap.field in center:
-        # field already updated this body: lowering guarantees dx == dy == 0,
-        # so the read is block-local (the Z column lives in this block).
+        # field already updated this sub-step: lowering guarantees
+        # dx == dy == 0, so the read is block-local (already out-sized).
         return center[tap.field][:, :, zlo:zlo + u.zlen]
-    w = window[tap.field]
+    a = cur[tap.field]
     x0 = h + tap.dx
     y0 = h + tap.dy
-    return w[x0:x0 + bxb, y0:y0 + byb, zlo:zlo + u.zlen]
+    return a[x0:x0 + out_x, y0:y0 + out_y, zlo:zlo + u.zlen]
 
 
-def _fused_body(updates, in_names, written, nz_of, h, bxb, byb, nx, ny,
-                coords_ref, *refs):
-    window = dict(zip(in_names, (r[...] for r in refs[:len(in_names)])))
-    out_refs = dict(zip(written, refs[len(in_names):]))
-    i = pl.program_id(0)
-    j = pl.program_id(1)
-    gx0 = coords_ref[0, 0] + i * bxb
-    gy0 = coords_ref[0, 1] + j * byb
+def _apply_updates(updates, cur, nz_of, h, out_x, out_y, gx0, gy0, nx, ny,
+                   wrap):
+    """One sub-step: apply every update over the (out_x, out_y) region.
 
-    center: Dict[str, jnp.ndarray] = {}   # full-Z center blocks, post-update
+    ``cur`` holds full-Z arrays of extent (out_x + 2h, out_y + 2h); returns
+    the post-step dict shrunk to (out_x, out_y).  ``gx0, gy0`` are the global
+    coordinates of the *output* region's origin; with ``wrap`` they are taken
+    modulo the grid so wrap-pad margin cells mask like the cells they mirror.
+    """
+    row = jax.lax.broadcasted_iota(jnp.int32, (out_x, out_y, 1), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (out_x, out_y, 1), 1)
+    gx = gx0 + row
+    gy = gy0 + col
+    if wrap:
+        gx = gx % nx
+        gy = gy % ny
+    interior = (gx > 0) & (gx < nx - 1) & (gy > 0) & (gy < ny - 1)
+
+    center: Dict[str, jnp.ndarray] = {}   # full-Z out-sized blocks, updated
     for u in updates:
         nz = nz_of[u.field]
         if u.field in center:
             old = center[u.field]
         else:
-            w = window[u.field]
-            old = w[h:h + bxb, h:h + byb, :]
+            old = cur[u.field][h:h + out_x, h:h + out_y, :]
         dtype = old.dtype
         # group products sharing a scalar coefficient: sum first, multiply
         # once — fewer VPU multiplies and the same association the source
@@ -69,9 +84,9 @@ def _fused_body(updates, in_names, written, nz_of, h, bxb, byb, nx, ny,
         # interpreter to ~1 ulp.
         groups: Dict[float, jnp.ndarray] = {}
         for coeff, taps in u.terms:
-            t = _read_tap(taps[0], u, window, center, h, bxb, byb)
+            t = _read_tap(taps[0], u, cur, center, h, out_x, out_y)
             for tap in taps[1:]:
-                t = t * _read_tap(tap, u, window, center, h, bxb, byb)
+                t = t * _read_tap(tap, u, cur, center, h, out_x, out_y)
             groups[coeff] = t if coeff not in groups else groups[coeff] + t
         acc = None
         for coeff, t in groups.items():
@@ -79,15 +94,10 @@ def _fused_body(updates, in_names, written, nz_of, h, bxb, byb, nx, ny,
                 t = dtype.type(coeff) * t
             acc = t if acc is None else acc + t
         if acc is None:
-            acc = jnp.full((bxb, byb, u.zlen), u.const, dtype)
+            acc = jnp.full((out_x, out_y, u.zlen), u.const, dtype)
         elif u.const != 0.0:
             acc = acc + dtype.type(u.const)
 
-        row = jax.lax.broadcasted_iota(jnp.int32, (bxb, byb, u.zlen), 0)
-        col = jax.lax.broadcasted_iota(jnp.int32, (bxb, byb, u.zlen), 1)
-        gx = gx0 + row
-        gy = gy0 + col
-        interior = (gx > 0) & (gx < nx - 1) & (gy > 0) & (gy < ny - 1)
         old_z = old[:, :, u.z0:u.z0 + u.zlen]
         new_z = jnp.where(interior, acc, old_z)
         parts = []
@@ -97,15 +107,39 @@ def _fused_body(updates, in_names, written, nz_of, h, bxb, byb, nx, ny,
         if u.z0 + u.zlen < nz:
             parts.append(old[:, :, u.z0 + u.zlen:])
         center[u.field] = (jnp.concatenate(parts, axis=2)
-                           if len(parts) > 1 else new_z)
+                          if len(parts) > 1 else new_z)
 
+    out = {}
+    for name, a in cur.items():
+        out[name] = (center[name] if name in center
+                     else a[h:h + out_x, h:h + out_y, :])
+    return out
+
+
+def _fused_body(updates, in_names, written, nz_of, h, k, wrap, bxb, byb,
+                nx, ny, coords_ref, *refs):
+    cur = dict(zip(in_names, (r[...] for r in refs[:len(in_names)])))
+    out_refs = dict(zip(written, refs[len(in_names):]))
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    # global origin of the loaded window (halo depth k·h below the block)
+    gx0 = coords_ref[0, 0] + i * bxb - k * h
+    gy0 = coords_ref[0, 1] + j * byb - k * h
+    for s in range(k):
+        out_x = bxb + 2 * (k - s - 1) * h
+        out_y = byb + 2 * (k - s - 1) * h
+        gx0 = gx0 + h   # origin of this sub-step's output region
+        gy0 = gy0 + h
+        cur = _apply_updates(updates, cur, nz_of, h, out_x, out_y, gx0, gy0,
+                             nx, ny, wrap)
     for name in written:
-        out_refs[name][...] = center[name]
+        out_refs[name][...] = cur[name]
 
 
 def build_fused_call(updates: Sequence, field_specs: Dict[str, Tuple[int, object]],
                      halo: int, bx: int, by: int, nx: int, ny: int,
-                     block=(8, 128), interpret: bool = False):
+                     block=(8, 128), interpret: bool = False,
+                     time_tile: int = 1, wrap: bool = False):
     """Build the fused kernel for one loop body.
 
     ``updates``     — :class:`repro.compiler.ir.AffineUpdate`s, program order.
@@ -113,11 +147,14 @@ def build_fused_call(updates: Sequence, field_specs: Dict[str, Tuple[int, object
                       reads or writes; all share the brick extent (bx, by).
     ``bx, by``      — brick extent (global grid on 1 device, local brick under
                       ``shard_map``); ``nx, ny`` — global extent for the Moat.
+    ``time_tile``   — sub-steps fused per launch (k); inputs carry ``k·halo``
+                      margins.  ``wrap`` marks wrap-pad margins (single
+                      device) so the per-sub-step Moat mask wraps coordinates.
 
     Returns ``call(coords, *padded) -> tuple(new_full_fields)`` where
-    ``padded`` are the (bx+2h, by+2h, nz) inputs in ``field_specs`` order and
-    the outputs are the written fields' full (bx, by, nz) arrays, in
-    first-written order.
+    ``padded`` are the (bx + 2·k·halo, by + 2·k·halo, nz) inputs in
+    ``field_specs`` order and the outputs are the written fields' full
+    (bx, by, nz) arrays, in first-written order.
     """
     in_names = list(field_specs)
     written = []
@@ -126,17 +163,19 @@ def build_fused_call(updates: Sequence, field_specs: Dict[str, Tuple[int, object
             written.append(u.field)
     nz_of = {n: s[0] for n, s in field_specs.items()}
     h = halo
+    k = time_tile
     bxb = _pick_block(bx, block[0])
     byb = _pick_block(by, block[1])
     grid = (bx // bxb, by // byb)
 
     body = functools.partial(_fused_body, tuple(updates), tuple(in_names),
-                             tuple(written), nz_of, h, bxb, byb, nx, ny)
+                             tuple(written), nz_of, h, k, wrap, bxb, byb,
+                             nx, ny)
     in_specs = [pl.BlockSpec((1, 2), lambda i, j: (0, 0))]
     for name in in_names:
         nz = nz_of[name]
         in_specs.append(element_block_spec(
-            (bxb + 2 * h, byb + 2 * h, nz),
+            (bxb + 2 * k * h, byb + 2 * k * h, nz),
             lambda i, j: (i * bxb, j * byb, 0)))
     out_specs = [pl.BlockSpec((bxb, byb, nz_of[n]), lambda i, j: (i, j, 0))
                  for n in written]

@@ -3,8 +3,9 @@
 The explicit path records a program and lowers every loop body to one fused
 Pallas kernel; this module does the same for *implicit* systems.  The
 operator body recorded inside ``with Operator():`` (see
-:mod:`repro.solver.frontend`) compiles through the identical
-IR-normalization → fused-codegen pipeline (:mod:`repro.compiler`) into one
+:mod:`repro.solver.frontend`) compiles through the engine's single backend
+dispatch (:func:`repro.engine.compile_body` — the identical
+IR-normalization → fused-codegen pipeline of :mod:`repro.compiler`) into one
 ``pallas_call`` per operator application — kernel cache, stats counters and
 logged interpreter fallback included — and the matrix-free iterations of
 :mod:`repro.solver.krylov` run on top of the compiled application.
@@ -30,9 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compiler import LoweringError, Tap, lower_group, try_compile
-from repro.compiler.codegen import compile_group, compile_group_sharded
-from repro.core.program import Program, _group_ops, _interp_step
+from repro.compiler import LoweringError, Tap, lower_group
+from repro.core.program import Program, _group_ops, release_program
 from repro.solver import krylov
 
 METHODS = ("cg", "pipecg", "bicgstab", "chebyshev", "jacobi")
@@ -222,17 +222,6 @@ def _z_window(group, nz: int) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _release(program: Program) -> None:
-    """Deactivate ``program`` if it is the thread-local active recording.
-
-    Builders *consume* a finished recording the way ``make``/``solve`` do,
-    so callers never have to clean up an interface by hand; the program
-    object itself stays usable (e.g. for building a second solver).
-    """
-    from repro.core import program as _pm
-
-    if _pm.current_program() is program:
-        _pm._STATE.program = None
 
 
 def _make_runner(
@@ -300,24 +289,22 @@ def _make_runner(
     return run
 
 
-def _build_step(ops, loop, program: Program, backend: str) -> Callable:
-    """One body application ``env -> env``: fused Pallas kernel when
-    ``backend="pallas"`` (interpreter fallback on LoweringError, counted in
-    ``repro.compiler.stats``), the shared roll interpreter otherwise."""
-    if backend == "pallas":
-        from repro.kernels.ops import _interpret
+def _build_step(
+    ops, loop, program: Program, backend: str, mesh_ctx=None
+) -> Callable:
+    """One body application ``env -> env`` through the engine's single
+    dispatch point (:func:`repro.engine.compile_body`): fused Pallas kernel
+    when ``backend="pallas"`` (interpreter fallback on LoweringError,
+    counted in ``repro.compiler.stats``), the shared roll interpreter
+    otherwise; sharded when ``mesh_ctx`` is given."""
+    from repro.engine import compile_body
 
-        shapes = {n: f.shape for n, f in program.fields.items()}
-        dtypes = {n: f.dtype for n, f in program.fields.items()}
-        step = try_compile(
-            lambda: compile_group(ops, shapes, dtypes, interpret=_interpret()),
-            loop,
-        )
-        if step is not None:
-            return step
-    elif backend != "jit":
+    if backend not in ("jit", "pallas"):
         raise ValueError(f"unknown solver backend {backend!r}")
-    return _interp_step(ops)
+    shapes = {n: f.shape for n, f in program.fields.items()}
+    dtypes = {n: f.dtype for n, f in program.fields.items()}
+    step, _ = compile_body(ops, loop, shapes, dtypes, backend, mesh_ctx=mesh_ctx)
+    return step
 
 
 def operator_fns(program: Program, answer, backend: str = "jit"):
@@ -329,7 +316,7 @@ def operator_fns(program: Program, answer, backend: str = "jit"):
     recorded.  Both are jit-traceable.
     """
     name = _answer_name(program, answer)
-    _release(program)
+    release_program(program)
     (op_loop, op_ops), rhs_group = _split(program, name)
     _lower_operator(op_ops, name)
     op_step = _build_step(op_ops, op_loop, program, backend)
@@ -381,7 +368,7 @@ def make_solver(
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
     name = _answer_name(program, answer)
-    _release(program)
+    release_program(program)
     (op_loop, op_ops), rhs_group = _split(program, name)
     group = _lower_operator(op_ops, name)
     bounds = _resolve_bounds(method, lambda_bounds, group, name)
@@ -458,12 +445,12 @@ def make_sharded_solver(
     jacobi) run with zero collectives per iteration beyond the halo
     exchange.
     """
-    from repro.core.halo import halo_pad, interp_step_sharded, local_moat_mask
+    from repro.core.halo import local_moat_mask
 
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
     name = _answer_name(program, answer)
-    _release(program)
+    release_program(program)
     (op_loop, op_ops), rhs_group = _split(program, name)
     group = _lower_operator(op_ops, name)
     bounds = _resolve_bounds(method, lambda_bounds, group, name)
@@ -472,7 +459,6 @@ def make_sharded_solver(
     ax_x, ax_y = mesh.axis_names[-2], mesh.axis_names[-1]
     mx, my = mesh.shape[ax_x], mesh.shape[ax_y]
     shapes = {n: f.shape for n, f in program.fields.items()}
-    dtypes = {n: f.dtype for n, f in program.fields.items()}
     for n, (nx, ny, _) in shapes.items():
         if nx % mx or ny % my:
             raise ValueError(
@@ -481,30 +467,12 @@ def make_sharded_solver(
     nx, ny, nz = shapes[name]
     bx, by = nx // mx, ny // my
 
-    def build_sharded(ops, loop):
-        if backend == "pallas":
-            from repro.kernels.ops import _interpret
-
-            step = try_compile(
-                lambda: compile_group_sharded(
-                    ops,
-                    shapes,
-                    dtypes,
-                    mesh_xy=(mx, my),
-                    axis_names=(ax_x, ax_y),
-                    interpret=_interpret(),
-                ),
-                loop,
-            )
-            if step is not None:
-                return step
-        elif backend != "jit":
-            raise ValueError(f"unknown solver backend {backend!r}")
-        return interp_step_sharded(ops, ax_x, ax_y, mx, my)
-
-    op_step = build_sharded(op_ops, op_loop)
+    mesh_ctx = (mx, my, ax_x, ax_y)
+    op_step = _build_step(op_ops, op_loop, program, backend, mesh_ctx=mesh_ctx)
     rhs_step = (
-        build_sharded(rhs_group[1], rhs_group[0]) if rhs_group is not None else None
+        _build_step(rhs_group[1], rhs_group[0], program, backend, mesh_ctx=mesh_ctx)
+        if rhs_group is not None
+        else None
     )
     zwin = _z_window(group, nz) if method == "jacobi" else None
 

@@ -114,6 +114,36 @@ print("OK")
     assert "OK" in out
 
 
+def test_wfa_frontend_sharded_time_tiled():
+    """time_tile=k under shard_map: depth-k·h ppermute halo exchange once per
+    k steps; engine stats must show exchanges-per-step dropped k× and the
+    result must ftol-match the untiled oracle."""
+    out = run_py(PREAMBLE + """
+from repro.core import WSE_Interface, WSE_Array, WSE_For_Loop
+from repro.engine import stats, reset_stats
+
+def build(steps):
+    wse = WSE_Interface()
+    c = 0.1; center = 1.0 - 6.0 * c
+    T_n = WSE_Array('T_n', init_data=T0)
+    with WSE_For_Loop('t', steps):
+        T_n[1:-1, 0, 0] = center * T_n[1:-1, 0, 0] + c * (
+            T_n[2:, 0, 0] + T_n[:-2, 0, 0] + T_n[1:-1, 1, 0]
+            + T_n[1:-1, 0, -1] + T_n[1:-1, -1, 0] + T_n[1:-1, 0, 1])
+    return wse, T_n
+
+o = oracle(T0, 0.1, 8)
+reset_stats()
+wse, T_n = build(8)
+a = wse.make(answer=T_n, backend='pallas', mesh=mesh, time_tile=4)
+assert abs(a - o).max() < 2e-3, abs(a - o).max()
+assert stats.exchanges_per_step == 0.25, stats   # ONE exchange per 4 steps
+assert stats.tiles_fused == 2 and stats.max_time_tile == 4, stats
+print("OK")
+""")
+    assert "OK" in out
+
+
 def test_small_mesh_dryrun_and_multipod():
     """A reduced-scale production dry-run (2×2 and 2×2×2 with pod axis)."""
     out = run_py("""

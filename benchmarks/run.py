@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * explicit_scaling    — Fig. 4a / Eq. 6 / Eqs. 4–5
   * implicit_scaling    — Fig. 4b / Eq. 16 / Eqs. 13–15 / §3.2.2 ratio
   * implicit_solve      — wfa.solve: compiled operator + Krylov loop
+  * mg_poisson          — solver convergence: mg vs CG/BiCGSTAB, 3 sizes
   * time_tiling         — engine temporal blocking: k steps per exchange
   * reduction           — Eq. 17 / §3.2.2 dot-product analysis
   * distributed_model   — Table 1 / Table 2 / Eq. 12 / §5 headline speedups
@@ -27,13 +28,14 @@ import platform
 def main() -> None:
     from benchmarks import (distributed_model, explicit_scaling,
                             implicit_scaling, implicit_solve, kernels_bench,
-                            reduction, time_tiling)
+                            mg_poisson, reduction, time_tiling)
     from benchmarks.common import RESULTS
 
     mods = {
         "explicit_scaling": explicit_scaling,
         "implicit_scaling": implicit_scaling,
         "implicit_solve": implicit_solve,
+        "mg_poisson": mg_poisson,
         "time_tiling": time_tiling,
         "reduction": reduction,
         "distributed_model": distributed_model,

@@ -3,8 +3,9 @@ frontend: the operator stencil is *recorded* like an explicit update and
 compiled to one fused Pallas kernel per application; matrix-free iterations
 run on top.
 
-    PYTHONPATH=src python examples/implicit_cg.py
+    PYTHONPATH=src python examples/implicit_cg.py [--n 48] [--steps 5]
 """
+import argparse
 import time
 
 import numpy as np
@@ -15,9 +16,14 @@ from repro.solver import record_btcs
 
 
 def main():
-    cfg = HeatConfig(nx=48, ny=48, nz=48)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=48)
+    ap.add_argument("--steps", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = HeatConfig(nx=args.n, ny=args.n, nz=args.n)
     T0 = make_field(cfg)
-    steps = 5
+    steps = args.steps
 
     results = {}
     for method, maxiter in [

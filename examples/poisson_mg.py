@@ -1,0 +1,83 @@
+"""Geometric multigrid through ``wfa.solve`` — Poisson with flat iterations.
+
+Plain Krylov iteration counts on the Dirichlet Poisson system grow with the
+grid; the compiled multigrid hierarchy (every smoother, residual, transfer
+and re-discretized coarse operator a recorded program lowered through the
+same IR → fused-Pallas path) keeps them flat.  This example solves
+``−∇²u = f`` at two sizes and prints the iteration counts for plain CG,
+standalone mg V-cycles, and mg-preconditioned CG, plus the engine's
+per-level accounting.
+
+    PYTHONPATH=src python examples/poisson_mg.py [--n 33]
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.compiler import reset_stats, stats
+from repro.engine import reset_stats as engine_reset
+from repro.engine import stats as engine_stats
+from repro.solver import poisson_program, solve
+
+
+def source(shape):
+    """A smooth two-blob source term, normalised to unit norm."""
+    x, y, z = np.meshgrid(
+        *[np.linspace(0.0, 1.0, n, dtype=np.float32) for n in shape],
+        indexing="ij",
+    )
+    F = np.exp(-80.0 * ((x - 0.3) ** 2 + (y - 0.4) ** 2 + (z - 0.5) ** 2))
+    F -= np.exp(-80.0 * ((x - 0.7) ** 2 + (y - 0.6) ** 2 + (z - 0.5) ** 2))
+    F[0], F[-1] = 0.0, 0.0
+    F[:, 0], F[:, -1] = 0.0, 0.0
+    F[:, :, 0], F[:, :, -1] = 0.0, 0.0
+    return (F / np.linalg.norm(F)).astype(np.float32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=33)
+    ap.add_argument("--tol", type=float, default=1e-5)
+    args = ap.parse_args()
+
+    sizes = (max(9, (args.n + 1) // 2), args.n)
+    runs = [
+        ("cg", dict(method="cg", maxiter=2000)),
+        ("mg", dict(method="mg", maxiter=60)),
+        ("cg+mg", dict(method="cg", precondition="mg", maxiter=200)),
+    ]
+    for n in sizes:
+        shape = (n, n, n)
+        F = source(shape)
+        print(f"--- Poisson {shape}, tol {args.tol} ---")
+        for label, kwargs in runs:
+            reset_stats()
+            engine_reset()
+            prog = poisson_program(shape, rhs=F)
+            t0 = time.time()
+            x, info = solve(
+                prog,
+                "T",
+                backend="pallas",
+                tol=args.tol,
+                return_info=True,
+                **kwargs,
+            )
+            dt = time.time() - t0
+            extra = ""
+            if engine_stats.mg_levels_built:
+                shapes = [s for s, _, _ in engine_stats.mg_level_log]
+                extra = f"  levels={shapes}"
+            print(
+                f"{label:>6}: iterations={int(info.iterations[0]):4d}  "
+                f"residual={float(info.residual[0]):.2e}  "
+                f"wall={dt:6.2f}s  kernels={stats.kernels_built}"
+                f"{extra}"
+            )
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -19,16 +19,20 @@ every ``ForLoop`` body through
    logged interpreter fallback whenever lowering is unsupported.
 """
 from repro.compiler.codegen import (CompilerStats, clear_cache, compile_group,
-                                    compile_group_sharded, reset_stats, stats,
-                                    try_compile)
-from repro.compiler.ir import (AffineUpdate, LoweredGroup, LoweringError, Tap,
-                               TiledGroup, auto_tile, lower_group,
-                               lower_update, tile_group)
+                                    compile_group_sharded, compile_transfer,
+                                    reset_stats, stats, try_compile)
+from repro.compiler.ir import (AffineUpdate, LoweredGroup, LoweringError,
+                               MGOperator, Tap, TiledGroup, TransferStencil,
+                               auto_tile, coarsen_operator, coarsen_shape,
+                               coarsenable, lower_group, lower_update,
+                               mg_fine_operator, mg_hierarchy, tile_group)
 
 
 __all__ = [
-    "AffineUpdate", "CompilerStats", "LoweredGroup", "LoweringError", "Tap",
-    "TiledGroup", "auto_tile", "clear_cache", "compile_group",
-    "compile_group_sharded", "lower_group", "lower_update", "reset_stats",
-    "stats", "tile_group", "try_compile",
+    "AffineUpdate", "CompilerStats", "LoweredGroup", "LoweringError",
+    "MGOperator", "Tap", "TiledGroup", "TransferStencil", "auto_tile",
+    "clear_cache", "coarsen_operator", "coarsen_shape", "coarsenable",
+    "compile_group", "compile_group_sharded", "compile_transfer",
+    "lower_group", "lower_update", "mg_fine_operator", "mg_hierarchy",
+    "reset_stats", "stats", "tile_group", "try_compile",
 ]

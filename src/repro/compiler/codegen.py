@@ -120,6 +120,37 @@ def _get_kernel(group: LoweredGroup, specs, bx, by, nx, ny, block, interpret,
     return kernel
 
 
+def compile_transfer(kind: str, fine_shape, coarse_shape, dtype,
+                     interpret: bool = False):
+    """Build (and cache) one inter-grid transfer kernel for a level pair.
+
+    ``kind`` is ``"restrict"`` (full-weighting, fine → coarse) or
+    ``"prolong"`` (trilinear, coarse → fine); the canonical form is
+    :class:`repro.compiler.ir.TransferStencil`, which validates the shape
+    pair, and the kernels live in :mod:`repro.kernels.transfer`.  Cached in
+    the same signature-keyed kernel cache as the fused stencil kernels —
+    one entry per (kind, level-pair shapes, dtype).
+    """
+    from repro.compiler.ir import TransferStencil
+    from repro.kernels import transfer as ktransfer
+
+    ts = TransferStencil(kind, tuple(fine_shape), tuple(coarse_shape))
+    sig = ("transfer", ts, jnp.dtype(dtype).name, bool(interpret))
+    hit = _KERNEL_CACHE.get(sig)
+    if hit is not None:
+        stats.cache_hits += 1
+        return hit
+    if kind == "restrict":
+        kernel = ktransfer.build_restrict_call(
+            ts.fine_shape, ts.coarse_shape, dtype, interpret=interpret)
+    else:
+        kernel = ktransfer.build_prolong_call(
+            ts.coarse_shape, ts.fine_shape, dtype, interpret=interpret)
+    stats.kernels_built += 1
+    _KERNEL_CACHE[sig] = kernel
+    return kernel
+
+
 def compile_group(ops, shapes: Dict[str, tuple], dtypes: Dict[str, object],
                   block=(8, 128), interpret: bool = False, *,
                   time_tile: int = 1, group: LoweredGroup = None):

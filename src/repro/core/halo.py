@@ -134,6 +134,21 @@ def run_sharded(program: Program, env: Dict[str, np.ndarray], mesh=None,
     exchange over k steps) or ``jit`` backend and executes it inside one
     ``shard_map``.  Bodies that cannot be lowered fall back to
     :func:`interp_step_sharded` with a logged reason.
+
+    ``env`` maps field names to global ``(X, Y, Z)`` arrays; the returned
+    env holds the final values, gathered back to host NumPy.  With
+    ``mesh=None`` the default mesh covers all available devices (a single
+    device degenerates to one brick, so the same script runs anywhere):
+
+    >>> import numpy as np
+    >>> from repro.core import WSE_Array, WSE_For_Loop, WSE_Interface
+    >>> with WSE_Interface() as wse:
+    ...     T = WSE_Array("T", init_data=np.full((8, 8, 4), 2.0, np.float32))
+    ...     with WSE_For_Loop("time_loop", 2):
+    ...         T[1:-1, 0, 0] = 0.5 * T[1:-1, 0, 0]
+    >>> out = run_sharded(wse.program, {"T": T.init_data})
+    >>> float(out["T"][3, 3, 1])
+    0.5
     """
     from repro.engine import execute, plan
 

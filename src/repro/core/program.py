@@ -172,6 +172,19 @@ class WFAInterface:
         ``mesh=`` runs brick-sharded inside ``shard_map``; ``time_tile=k``
         fuses k steps per kernel launch on ``backend="pallas"`` (one halo
         exchange / wrap pad per tile; ``None`` lets the planner auto-pick).
+
+        Example — three steps of pure decay on the interior (the Moat ring
+        and the unwritten z planes keep their boundary values):
+
+        >>> import numpy as np
+        >>> from repro.core import Field, ForLoop, WFAInterface
+        >>> wse = WFAInterface()
+        >>> T = Field("T", init_data=np.ones((6, 6, 4), np.float32))
+        >>> with ForLoop("time_loop", 3):
+        ...     T[1:-1, 0, 0] = 0.5 * T[1:-1, 0, 0]
+        >>> out = wse.make(answer=T, backend="numpy")
+        >>> float(out[2, 2, 1]), float(out[0, 2, 1])
+        (0.125, 1.0)
         """
         for op in self.program.ops:
             if getattr(op.loop, "role", None) is not None:
@@ -196,10 +209,11 @@ class WFAInterface:
 
         The operator body (recorded inside ``with Operator():``) compiles
         through the same IR → fused-Pallas pipeline as explicit programs;
-        matrix-free Krylov iterations run on top of the compiled
-        application.  See :func:`repro.solver.solve` for the full keyword
-        surface (``steps``, ``tol``, ``maxiter``, ``lambda_bounds``,
-        ``return_info``).
+        matrix-free iterations run on top of the compiled application —
+        Krylov methods, or geometric multigrid via ``method="mg"`` /
+        ``precondition="mg"``.  See :func:`repro.solver.solve` for the full
+        keyword surface (``steps``, ``tol``, ``maxiter``, ``lambda_bounds``,
+        ``precondition``, ``mg_opts``, ``return_info``).
         """
         from repro.solver.api import solve as _solve
         try:

@@ -27,9 +27,11 @@ from repro.engine.executor import execute, run_program
 from repro.engine.plan import (
     BACKENDS,
     ExecutionPlan,
+    LevelSegment,
     Segment,
     compile_body,
     plan,
+    plan_mg_levels,
 )
 from repro.engine.stats import EngineStats, reset_stats, stats
 
@@ -37,10 +39,12 @@ __all__ = [
     "BACKENDS",
     "EngineStats",
     "ExecutionPlan",
+    "LevelSegment",
     "Segment",
     "compile_body",
     "execute",
     "plan",
+    "plan_mg_levels",
     "reset_stats",
     "run_program",
     "stats",

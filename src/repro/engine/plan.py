@@ -143,6 +143,91 @@ def compile_body(
     return interp_step_sharded(ops, ax_x, ax_y, mx, my), False
 
 
+@dataclasses.dataclass
+class LevelSegment:
+    """One multigrid level's scheduled bodies and transfers.
+
+    The multi-level analogue of :class:`Segment`: ``smooth`` and ``resid``
+    are compiled body applications (``env -> env``, fused Pallas kernel or
+    roll interpreter — the same :func:`compile_body` dispatch as every other
+    path), ``restrict``/``prolong`` move arrays to/from the next-coarser
+    level (``None`` on the coarsest).  ``diag`` is the level operator's
+    constant diagonal, which the smoother and coarse solve divide by.
+    """
+
+    level: int
+    shape: Tuple[int, int, int]
+    smooth: Callable
+    resid: Callable
+    smooth_fused: bool
+    resid_fused: bool
+    diag: float
+    restrict: Optional[Callable] = None
+    prolong: Optional[Callable] = None
+
+
+def plan_mg_levels(bodies, backend: str, dtype) -> List[LevelSegment]:
+    """Schedule one multigrid hierarchy: every level body through the
+    engine's single dispatch point, every transfer through the kernel cache.
+
+    ``bodies`` is finest-first; each entry is a dict with ``shape``,
+    ``diag`` and two recorded bodies ``smooth``/``resid`` as ``(ops,
+    shapes, dtypes)`` triples (see :mod:`repro.solver.multigrid`, which
+    records them per level).  ``backend="pallas"`` lowers each body to one
+    fused kernel — one cache entry per level — and the transfers to the
+    restriction/prolongation kernels of :mod:`repro.kernels.transfer`;
+    ``backend="jit"`` uses the roll interpreter and the pure-jnp transfer
+    references.  Per-level outcomes land in ``stats.mg_level_log``.
+    """
+    from repro.compiler.codegen import compile_transfer
+    from repro.kernels.transfer import prolong_ref, restrict_ref
+
+    segments: List[LevelSegment] = []
+    log_entries = []
+    for lvl, body in enumerate(bodies):
+        shape = tuple(body["shape"])
+        s_ops, s_shapes, s_dtypes = body["smooth"]
+        r_ops, r_shapes, r_dtypes = body["resid"]
+        smooth, s_fused = compile_body(s_ops, None, s_shapes, s_dtypes, backend)
+        resid, r_fused = compile_body(r_ops, None, r_shapes, r_dtypes, backend)
+        seg = LevelSegment(
+            level=lvl,
+            shape=shape,
+            smooth=smooth,
+            resid=resid,
+            smooth_fused=s_fused,
+            resid_fused=r_fused,
+            diag=float(body["diag"]),
+        )
+        if lvl + 1 < len(bodies):
+            coarse = tuple(bodies[lvl + 1]["shape"])
+            use_kernels = False
+            if backend == "pallas":
+                from repro.kernels.ops import _interpret
+
+                # Mosaic restricts the transfer kernels' interleave reshapes
+                # (see kernels/transfer.py); on real TPUs fall back to the
+                # jnp references — the documented degradation path — instead
+                # of crashing at first trace.
+                use_kernels = _interpret()
+            if use_kernels:
+                seg.restrict = compile_transfer(
+                    "restrict", shape, coarse, dtype, interpret=True
+                )
+                seg.prolong = compile_transfer(
+                    "prolong", shape, coarse, dtype, interpret=True
+                )
+            else:
+                seg.restrict = restrict_ref
+                seg.prolong = lambda c, n=shape: prolong_ref(c, n)
+        segments.append(seg)
+        log_entries.append((shape, s_fused, r_fused))
+        stats.mg_levels_built += 1
+    stats.mg_hierarchies += 1
+    stats.mg_level_log = tuple(log_entries)
+    return segments
+
+
 def _brick_xy(program: Program, mesh_ctx, group) -> Tuple[int, int]:
     """Per-device brick extent of the fields ``group`` actually touches
     (the whole grid on a single device).  Anchored on the group's first

@@ -22,7 +22,17 @@ from typing import Tuple
 
 @dataclasses.dataclass
 class EngineStats:
-    """Counters for engine planning + execution (reset with ``reset_stats``)."""
+    """Counters for engine planning + execution (reset with ``reset_stats``).
+
+    One live instance is exported as ``repro.engine.stats``; read the
+    counters after a run (and ``reset_stats()`` between runs you want to
+    compare):
+
+    >>> from repro.engine import reset_stats, stats
+    >>> reset_stats()
+    >>> (stats.steps_run, stats.exchanges_per_step, stats.mg_levels_built)
+    (0, 0.0, 0)
+    """
 
     plans_built: int = 0
     bodies_compiled: int = 0  # compile_body calls (every backend dispatch)
@@ -35,6 +45,10 @@ class EngineStats:
     max_time_tile: int = 1  # largest k any segment ran with
     elapsed_s: float = 0.0  # wall time inside execute()
     tile_reasons: Tuple[str, ...] = ()  # why a tile factor was clamped/refused
+    mg_hierarchies: int = 0  # multigrid hierarchies scheduled
+    mg_levels_built: int = 0  # level segments compiled across hierarchies
+    #: (shape, smoother-fused, residual-fused) per level of the last hierarchy
+    mg_level_log: Tuple[Tuple[Tuple[int, int, int], bool, bool], ...] = ()
 
     @property
     def exchanges_per_step(self) -> float:
@@ -66,3 +80,6 @@ def reset_stats() -> None:
     stats.max_time_tile = 1
     stats.elapsed_s = 0.0
     stats.tile_reasons = ()
+    stats.mg_hierarchies = 0
+    stats.mg_levels_built = 0
+    stats.mg_level_log = ()

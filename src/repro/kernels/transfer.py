@@ -1,0 +1,130 @@
+"""Inter-grid transfer kernels: full-weighting restriction + trilinear
+prolongation.
+
+The multigrid subsystem (:mod:`repro.solver.multigrid`) moves residuals down
+and corrections up a hierarchy of grids; each move is one Pallas kernel built
+here and cached by :func:`repro.compiler.codegen.compile_transfer` — the
+inter-grid analogue of the fused per-level stencil kernels.
+
+Alignment is *even vertex-centred*: coarse cell ``I`` sits on fine cell
+``2I``, so a fine extent ``n`` coarsens to ``n//2 + 1`` (Moat planes
+included) for every parity — even extents stay mesh-divisible for the
+sharded path.  Both transfers are separable, so each axis is handled with
+three strided slices (restriction) or an interleave (prolongation):
+
+* restriction — ``coarse[I] = 1/4·fine[2I−1] + 1/2·fine[2I] + 1/4·fine[2I+1]``
+  per axis over the coarse interior; coarse Moat planes are written as zero
+  (the coarse problem is an error equation with homogeneous Dirichlet rows);
+* prolongation — ``fine[2I] = coarse[I]``, ``fine[2I+1] = (coarse[I] +
+  coarse[I+1])/2`` per axis; the fine Moat planes are written as zero so the
+  correction never touches boundary rows.
+
+Both kernels run as one grid cell over the whole level (coarse levels are
+small; the finest transfer is bandwidth-bound either way).  The interleave
+uses reshapes off the minor axis, which Mosaic restricts on real TPUs —
+this container (and CI) executes in interpret mode; blocking the transfers
+for Mosaic is future work tracked in docs/solvers.md.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sl(a, axis: int, start: int, stop: int, step: int = 1):
+    """Static (possibly strided) slice of ``a`` along one axis."""
+    idx = [slice(None)] * a.ndim
+    idx[axis] = slice(start, stop, step)
+    return a[tuple(idx)]
+
+
+def _restrict_axis(a, axis: int, m: int):
+    """Full weighting along ``axis``: fine extent n → coarse interior m.
+
+    ``m = n//2 − 1`` coarse interior cells; coarse cell i (1-based) averages
+    fine cells 2i−1, 2i, 2i+1 with weights 1/4, 1/2, 1/4.
+    """
+    lo = _sl(a, axis, 1, 2 * m, 2)
+    mid = _sl(a, axis, 2, 2 * m + 1, 2)
+    hi = _sl(a, axis, 3, 2 * m + 2, 2)
+    return 0.5 * mid + 0.25 * (lo + hi)
+
+
+def _prolong_axis(c, axis: int, n: int):
+    """Trilinear interpolation along ``axis``: coarse extent n//2+1 → fine n.
+
+    Even fine cells copy the coincident coarse cell, odd fine cells average
+    the two spanning coarse cells; the fine Moat planes are zero (coarse
+    Moat values are zero by construction, and the high plane is dropped).
+    """
+    m = n // 2 - 1
+    odd = 0.5 * (_sl(c, axis, 0, m + 1) + _sl(c, axis, 1, m + 2))
+    even = _sl(c, axis, 1, m + 1)
+    pairs = jnp.stack([_sl(odd, axis, 0, m), even], axis=axis + 1)
+    shape = list(pairs.shape)
+    shape[axis : axis + 2] = [2 * m]
+    seq = jnp.concatenate([pairs.reshape(shape), _sl(odd, axis, m, m + 1)], axis=axis)
+    interior = _sl(seq, axis, 0, n - 2)
+    pad = [(0, 0)] * c.ndim
+    pad[axis] = (1, 1)
+    return jnp.pad(interior, pad)
+
+
+def _restrict_body(ms: Tuple[int, int, int], fine_ref, coarse_ref):
+    a = fine_ref[...]
+    for axis, m in enumerate(ms):
+        a = _restrict_axis(a, axis, m)
+    coarse_ref[...] = jnp.pad(a, ((1, 1), (1, 1), (1, 1)))
+
+
+def _prolong_body(ns: Tuple[int, int, int], coarse_ref, fine_ref):
+    a = coarse_ref[...]
+    for axis, n in enumerate(ns):
+        a = _prolong_axis(a, axis, n)
+    fine_ref[...] = a
+
+
+def _whole_array_call(body, in_shape, out_shape, dtype, interpret):
+    return pl.pallas_call(
+        body,
+        grid=(1,),
+        in_specs=[pl.BlockSpec(tuple(in_shape), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec(tuple(out_shape), lambda i: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(tuple(out_shape), dtype),
+        interpret=interpret,
+    )
+
+
+def restrict_ref(fine):
+    """Pure-jnp full weighting — the ``jit``-backend path and test oracle."""
+    a = fine
+    for axis in range(3):
+        a = _restrict_axis(a, axis, fine.shape[axis] // 2 - 1)
+    return jnp.pad(a, ((1, 1), (1, 1), (1, 1)))
+
+
+def prolong_ref(coarse, fine_shape):
+    """Pure-jnp trilinear interpolation — the ``jit``-backend path."""
+    a = coarse
+    for axis, n in enumerate(fine_shape):
+        a = _prolong_axis(a, axis, int(n))
+    return a
+
+
+def build_restrict_call(fine_shape, coarse_shape, dtype, interpret: bool = False):
+    """``call(fine) -> coarse`` — 27-point full weighting, zero coarse Moat."""
+    ms = tuple(int(n) // 2 - 1 for n in fine_shape)
+    body = functools.partial(_restrict_body, ms)
+    return _whole_array_call(body, fine_shape, coarse_shape, dtype, interpret)
+
+
+def build_prolong_call(coarse_shape, fine_shape, dtype, interpret: bool = False):
+    """``call(coarse) -> fine`` — trilinear interpolation, zero fine Moat."""
+    ns = tuple(int(n) for n in fine_shape)
+    body = functools.partial(_prolong_body, ns)
+    return _whole_array_call(body, coarse_shape, fine_shape, dtype, interpret)

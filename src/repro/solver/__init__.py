@@ -14,10 +14,15 @@ same recorded-program → fused-Pallas pipeline as the explicit path:
    single-device or brick-sharded (``mesh=`` → halo exchange + ONE fused
    ``psum`` per reduction);
 3. :mod:`~repro.solver.krylov` — the iteration kernels (CG, pipelined CG,
-   BiCGSTAB, Chebyshev, Jacobi), shared with the legacy
+   BiCGSTAB, Chebyshev, Jacobi, stationary), shared with the legacy
    :mod:`repro.core.implicit` drivers;
-4. :mod:`~repro.solver.presets` — canonical recorded systems (BTCS heat,
-   variable-coefficient diffusion).
+4. :mod:`~repro.solver.multigrid` — geometric V/W-cycles whose every
+   component (per-level smoother/residual programs, re-discretized coarse
+   operators, restriction/prolongation transfer kernels) lowers through the
+   same IR → codegen path: ``method="mg"`` and ``precondition="mg"`` keep
+   iteration counts flat as grids grow;
+5. :mod:`~repro.solver.presets` — canonical recorded systems (BTCS heat,
+   variable-coefficient diffusion, Dirichlet Poisson).
 """
 
 from repro.solver import krylov
@@ -30,26 +35,34 @@ from repro.solver.api import (
     solve,
 )
 from repro.solver.frontend import Operator, Rhs, SolverMarker
+from repro.solver.multigrid import MGOptions, Multigrid, build_multigrid
 from repro.solver.presets import (
     btcs_program,
+    poisson_program,
     psi,
     record_btcs,
+    record_poisson,
     record_varcoef_btcs,
 )
 
 __all__ = [
+    "MGOptions",
+    "Multigrid",
     "Operator",
     "Rhs",
     "SolveInfo",
     "SolverMarker",
     "btcs_program",
+    "build_multigrid",
     "gershgorin_bounds",
     "krylov",
     "make_sharded_solver",
     "make_solver",
     "operator_fns",
+    "poisson_program",
     "psi",
     "record_btcs",
+    "record_poisson",
     "record_varcoef_btcs",
     "solve",
 ]

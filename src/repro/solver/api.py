@@ -9,6 +9,9 @@ IR-normalization → fused-codegen pipeline of :mod:`repro.compiler`) into one
 ``pallas_call`` per operator application — kernel cache, stats counters and
 logged interpreter fallback included — and the matrix-free iterations of
 :mod:`repro.solver.krylov` run on top of the compiled application.
+``method="mg"`` / ``precondition="mg"`` add geometric multigrid
+(:mod:`repro.solver.multigrid`): a compiled V/W-cycle hierarchy whose
+iteration counts stay flat as grids grow.
 
 Entry points:
 
@@ -25,6 +28,7 @@ Entry points:
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Callable, Optional, Sequence, Tuple
 
 import jax
@@ -35,10 +39,16 @@ from repro.compiler import LoweringError, Tap, lower_group
 from repro.core.program import Program, _group_ops, release_program
 from repro.solver import krylov
 
-METHODS = ("cg", "pipecg", "bicgstab", "chebyshev", "jacobi")
+log = logging.getLogger("repro.solver")
+
+METHODS = ("cg", "pipecg", "bicgstab", "chebyshev", "jacobi", "mg")
 
 #: methods that never touch a dot product — zero collectives per iteration
 REDUCTION_FREE = ("chebyshev", "jacobi")
+
+#: methods that accept ``precondition="mg"`` (CG needs an SPD M; BiCGSTAB
+#: preconditions from the right, so any fixed linear M works)
+PRECONDITIONABLE = ("cg", "bicgstab")
 
 
 @dataclasses.dataclass
@@ -176,6 +186,45 @@ def _check_jacobi(method, group):
         )
 
 
+def _check_precondition(method, precondition):
+    if precondition not in (None, "mg"):
+        raise ValueError(
+            f"unknown preconditioner {precondition!r}; expected None or 'mg'"
+        )
+    if precondition is not None and method not in PRECONDITIONABLE:
+        hint = " (method='mg' is already multigrid)" if method == "mg" else ""
+        raise ValueError(
+            f"precondition='mg' supports methods {PRECONDITIONABLE}; "
+            f"got method={method!r}{hint}"
+        )
+
+
+def _build_mg(method, precondition, group, name, shape, dtype, backend, mg_opts):
+    """Build the multigrid hierarchy when ``method``/``precondition`` asks.
+
+    ``method="mg"`` turns an illegal system (grid not coarsenable,
+    non-affine / variable-coefficient / asymmetric operator) into a clear
+    ``ValueError``; ``precondition="mg"`` degrades gracefully — a logged
+    warning and a fallback to the unpreconditioned method.
+    """
+    if method != "mg" and precondition != "mg":
+        return None
+    from repro.solver.multigrid import build_multigrid
+
+    try:
+        return build_multigrid(group, name, shape, dtype, backend, mg_opts)
+    except LoweringError as e:
+        if method == "mg":
+            raise ValueError(f"method='mg' cannot be built: {e}") from e
+        log.warning(
+            "precondition='mg' unavailable (%s) — falling back to "
+            "unpreconditioned %s",
+            e,
+            method,
+        )
+        return None
+
+
 def _jacobi_diag(group, answer: str, env):
     """Diagonal of the operator: a scalar, or an array for variable
     coefficients (center-tap products only)."""
@@ -239,23 +288,37 @@ def _make_runner(
     bounds,
     group,
     jacobi_mask: Callable,
+    mg=None,
+    M: Optional[Callable] = None,
 ):
     """Shared solve driver: ``run(x0, *coefs) -> (x, (iters, res))``.
 
     Both builders delegate here so the method dispatch and the per-step
     ``Rhs() → Krylov`` loop cannot diverge between the single-device and
     sharded paths; they differ only in the injected ``dot``/``dot2`` (the
-    sharded ones own the ``psum``) and ``jacobi_mask`` (static array vs
-    traced from mesh coordinates inside ``shard_map``).
+    sharded ones own the ``psum``), ``jacobi_mask`` (static array vs traced
+    from mesh coordinates inside ``shard_map``) and ``M`` (the sharded
+    preconditioner gathers/slices around the cycle).  ``mg`` carries the
+    compiled :class:`~repro.solver.multigrid.Multigrid` for
+    ``method="mg"``; ``M`` is the preconditioner action for CG/BiCGSTAB.
     """
 
     def run_method(A, b, x0, envc):
+        if method == "mg":
+            return krylov.stationary(
+                lambda x: mg.cycle(x, b),
+                lambda x: mg.residual_norm2(x, b, dot),
+                x0,
+                tol=tol,
+                maxiter=maxiter,
+                ref2=dot(b, b),
+            )
         if method == "cg":
-            return krylov.cg(A, dot, b, x0, tol=tol, maxiter=maxiter)
+            return krylov.cg(A, dot, b, x0, tol=tol, maxiter=maxiter, M=M)
         if method == "pipecg":
             return krylov.pipecg(A, dot2, b, x0, tol=tol, maxiter=maxiter)
         if method == "bicgstab":
-            return krylov.bicgstab(A, dot, b, x0, tol=tol, maxiter=maxiter)
+            return krylov.bicgstab(A, dot, b, x0, tol=tol, maxiter=maxiter, M=M)
         if method == "chebyshev":
             return krylov.chebyshev(
                 A, b, x0, bounds[0], bounds[1], iters=maxiter, dot=dot
@@ -358,21 +421,38 @@ def make_solver(
     maxiter: int = 500,
     steps: int = 1,
     lambda_bounds: Optional[Tuple[float, float]] = None,
+    precondition: Optional[str] = None,
+    mg_opts=None,
 ) -> Callable:
     """Build a reusable jitted solver ``step_fn(x0) -> (x, (iters, res))``.
 
     Each call advances ``steps`` implicit time steps: per step the ``Rhs()``
     body produces ``b`` from the state (identity if none was recorded) and
-    the Krylov iteration solves ``A x = b`` warm-started at the state.
+    the iteration solves ``A x = b`` warm-started at the state.
+    ``method="mg"`` iterates geometric V/W-cycles; ``precondition="mg"``
+    wraps one cycle from a zero guess around CG/BiCGSTAB (see
+    :mod:`repro.solver.multigrid`; tune with ``mg_opts=MGOptions(...)``).
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+    _check_precondition(method, precondition)
     name = _answer_name(program, answer)
     release_program(program)
     (op_loop, op_ops), rhs_group = _split(program, name)
     group = _lower_operator(op_ops, name)
     bounds = _resolve_bounds(method, lambda_bounds, group, name)
     _check_jacobi(method, group)
+    field = program.fields[name]
+    mg = _build_mg(
+        method,
+        precondition,
+        group,
+        name,
+        field.shape,
+        field.dtype,
+        backend,
+        mg_opts,
+    )
     op_step = _build_step(op_ops, op_loop, program, backend)
     rhs_step = (
         _build_step(rhs_group[1], rhs_group[0], program, backend)
@@ -409,6 +489,8 @@ def make_solver(
         bounds=bounds,
         group=group,
         jacobi_mask=lambda: mask,
+        mg=mg,
+        M=mg.apply if (mg is not None and precondition == "mg") else None,
     )
     jitted = jax.jit(run)
 
@@ -434,6 +516,8 @@ def make_sharded_solver(
     maxiter: int = 500,
     steps: int = 1,
     lambda_bounds: Optional[Tuple[float, float]] = None,
+    precondition: Optional[str] = None,
+    mg_opts=None,
 ):
     """Brick-sharded solver over ``mesh``; returns ``(step_fn, sharding)``.
 
@@ -444,11 +528,21 @@ def make_sharded_solver(
     fused ``psum`` over both mesh axes.  Reduction-free methods (chebyshev,
     jacobi) run with zero collectives per iteration beyond the halo
     exchange.
+
+    Multigrid coarsening halves extents, so below the fine level the grids
+    stop dividing the mesh; the hierarchy therefore runs *gathered* — the
+    classic all-coarse-levels-on-one-tile strategy, here one ``all_gather``
+    per cycle and every device redundantly computing the (cheap) coarse
+    work.  With ``precondition="mg"`` the fine-grid Krylov work (operator
+    applications, fused-psum reductions) stays brick-sharded and only the
+    preconditioner action gathers; with ``method="mg"`` the whole cycle
+    iteration runs on the gathered field.
     """
     from repro.core.halo import local_moat_mask
 
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
+    _check_precondition(method, precondition)
     name = _answer_name(program, answer)
     release_program(program)
     (op_loop, op_ops), rhs_group = _split(program, name)
@@ -467,7 +561,29 @@ def make_sharded_solver(
     nx, ny, nz = shapes[name]
     bx, by = nx // mx, ny // my
 
-    mesh_ctx = (mx, my, ax_x, ax_y)
+    field = program.fields[name]
+    mg = _build_mg(
+        method,
+        precondition,
+        group,
+        name,
+        field.shape,
+        field.dtype,
+        backend,
+        mg_opts,
+    )
+
+    def _gather(v):
+        g = jax.lax.all_gather(v, ax_x, axis=0, tiled=True)
+        return jax.lax.all_gather(g, ax_y, axis=1, tiled=True)
+
+    def _brick(g):
+        cx = jax.lax.axis_index(ax_x) * bx
+        cy = jax.lax.axis_index(ax_y) * by
+        sizes = (bx, by) + tuple(g.shape[2:])
+        return jax.lax.dynamic_slice(g, (cx, cy) + (0,) * (g.ndim - 2), sizes)
+
+    mesh_ctx = None if method == "mg" else (mx, my, ax_x, ax_y)
     op_step = _build_step(op_ops, op_loop, program, backend, mesh_ctx=mesh_ctx)
     rhs_step = (
         _build_step(rhs_group[1], rhs_group[0], program, backend, mesh_ctx=mesh_ctx)
@@ -485,12 +601,18 @@ def make_sharded_solver(
         for n in coef_names
     ]
 
-    def dot(a, b):
+    def _local_dot(a, b):
+        return jnp.sum(a * b, dtype=jnp.float32)
+
+    def _psum_dot(a, b):
         # joint-axis psum: ONE all-reduce over the whole mesh instead of two
         # chained single-axis reductions (§Perf heat-implicit iteration 1)
         return jax.lax.psum(jnp.sum(a * b, dtype=jnp.float32), (ax_x, ax_y))
 
-    def dot2(a, b, c, d):
+    def _local_dot2(a, b, c, d):
+        return _local_dot(a, b), _local_dot(c, d)
+
+    def _psum_dot2(a, b, c, d):
         if backend == "pallas":
             from repro.kernels import ops as kops
 
@@ -505,7 +627,15 @@ def make_sharded_solver(
         part = jax.lax.psum(part, (ax_x, ax_y))  # ONE fused all-reduce
         return part[0], part[1]
 
-    local = _make_runner(
+    # method="mg" iterates on the gathered (replicated) field, so its
+    # residual reduction is a plain local sum — identical on every device
+    dot = _local_dot if method == "mg" else _psum_dot
+    dot2 = _local_dot2 if method == "mg" else _psum_dot2
+    M = None
+    if mg is not None and precondition == "mg":
+        M = lambda r: _brick(mg.apply(_gather(r)))
+
+    run = _make_runner(
         method=method,
         name=name,
         coef_names=coef_names,
@@ -521,7 +651,15 @@ def make_sharded_solver(
         jacobi_mask=lambda: (
             local_moat_mask(bx, by, ax_x, ax_y, mx, my) & jnp.asarray(zwin)
         ),
+        mg=mg,
+        M=M,
     )
+
+    def _mg_local(x, *coef_args):
+        out, aux = run(_gather(x), *[_gather(c) for c in coef_args])
+        return _brick(out), aux
+
+    local = _mg_local if method == "mg" else run
 
     from repro.core.jaxcompat import shard_map
 
@@ -557,6 +695,8 @@ def solve(
     tol: float = 1e-6,
     maxiter: int = 500,
     lambda_bounds: Optional[Tuple[float, float]] = None,
+    precondition: Optional[str] = None,
+    mg_opts=None,
     return_info: bool = False,
 ):
     """Solve the recorded implicit system for ``answer``; returns the
@@ -565,7 +705,22 @@ def solve(
 
     The initial guess is the unknown field's init data (its Moat must carry
     the boundary values, as in the explicit path).  With ``mesh=`` the whole
-    solve runs brick-sharded inside ``shard_map``.
+    solve runs brick-sharded inside ``shard_map``.  ``method="mg"`` iterates
+    geometric multigrid V/W-cycles; ``precondition="mg"`` accelerates
+    CG/BiCGSTAB with one cycle per iteration — both keep iteration counts
+    flat as the grid grows (see docs/solvers.md).
+
+    Example — the paper's BTCS heat system, multigrid-preconditioned::
+
+        >>> import numpy as np
+        >>> from repro.solver import record_btcs
+        >>> T0 = np.full((17, 17, 9), 500.0, np.float32)
+        >>> T0[1:-1, 1:-1, 0] = 300.0
+        >>> wse, T = record_btcs(T0, 0.1)
+        >>> x, info = wse.solve(T, method="cg", precondition="mg",
+        ...                     backend="jit", tol=1e-6, return_info=True)
+        >>> x.shape, bool(info.iterations[0] < 10)
+        ((17, 17, 9), True)
     """
     name = _answer_name(program, answer)
     kwargs = dict(
@@ -575,6 +730,8 @@ def solve(
         maxiter=maxiter,
         steps=steps,
         lambda_bounds=lambda_bounds,
+        precondition=precondition,
+        mg_opts=mg_opts,
     )
     if mesh is not None:
         step_fn, sharding = make_sharded_solver(program, name, mesh, **kwargs)

@@ -47,13 +47,32 @@ class SolverMarker(ForLoop):
 
 class Operator(SolverMarker):
     """Record the matrix-free operator body ``x ↦ A(x)`` (self-updates of
-    the unknown field; linear in the unknown, identity on unwritten cells)."""
+    the unknown field; linear in the unknown, identity on unwritten cells).
+
+    Example — a damped-diffusion operator, solved with compiled CG:
+
+    >>> import numpy as np
+    >>> from repro.core import Field, WFAInterface
+    >>> from repro.solver import Operator, Rhs
+    >>> with WFAInterface() as wse:
+    ...     T = Field("T", init_data=np.full((8, 8, 8), 1.0, np.float32))
+    ...     with Operator():
+    ...         T[1:-1, 0, 0] = T[1:-1, 0, 0] - 0.05 * (
+    ...             T[2:, 0, 0] + T[:-2, 0, 0] + T[1:-1, 1, 0]
+    ...             + T[1:-1, -1, 0] + T[1:-1, 0, 1] + T[1:-1, 0, -1])
+    ...     with Rhs():
+    ...         T[1:-1, 0, 0] = 0.625 * T[1:-1, 0, 0]
+    >>> x = wse.solve(T, method="cg", backend="jit", tol=1e-6)
+    >>> x.shape, bool(np.isfinite(x).all())
+    ((8, 8, 8), True)
+    """
 
     role = "operator"
 
 
 class Rhs(SolverMarker):
     """Record the right-hand-side body ``state ↦ b`` (updates of the unknown
-    field; unwritten cells carry the state value — the identity-row RHS)."""
+    field; unwritten cells carry the state value — the identity-row RHS).
+    See :class:`Operator` for a complete recorded system."""
 
     role = "rhs"

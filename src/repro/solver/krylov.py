@@ -17,7 +17,15 @@ latency term):
   variable-coefficient implicit diffusion);
 * :func:`chebyshev` — reduction-free Chebyshev iteration (needs eigenvalue
   bounds of ``A``);
-* :func:`jacobi`    — reduction-free Jacobi relaxation (needs the diagonal).
+* :func:`jacobi`    — reduction-free Jacobi relaxation (needs the diagonal);
+* :func:`stationary` — generic fixed-point iteration with a residual-norm
+  stop — the driver behind ``method="mg"`` (one step = one V/W-cycle).
+
+:func:`cg` and :func:`bicgstab` accept a preconditioner ``M`` (a linear
+callable approximating ``A⁻¹`` — ``wfa.solve(precondition="mg")`` passes a
+multigrid cycle from a zero guess); CG needs ``M`` symmetric positive
+definite, BiCGSTAB is preconditioned from the right so any fixed linear
+``M`` works.
 """
 
 from __future__ import annotations
@@ -35,30 +43,71 @@ def _nonzero(d):
     return jnp.where(jnp.abs(d) < _TINY, jnp.where(d < 0, -_TINY, _TINY), d)
 
 
-def cg(A: Callable, dot: Callable, b, x0, *, tol: float = 1e-6, maxiter: int = 500):
+def cg(
+    A: Callable,
+    dot: Callable,
+    b,
+    x0,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 500,
+    M: Callable = None,
+):
     """Classic CG.  Two reductions per iteration: (p, Ap) and (r, r) — the
-    paper's benchmarked bottleneck."""
+    paper's benchmarked bottleneck.
+
+    With a preconditioner ``M`` (symmetric positive definite, e.g. one
+    multigrid cycle from a zero guess) this is standard PCG — one extra
+    reduction (r, z) per iteration, stopping still on the *true* residual
+    norm so iteration counts stay comparable to the plain method.
+    """
+    if M is None:
+        r = b - A(x0)
+        p = r
+        rr = dot(r, r)
+
+        def cond(s):
+            x, r, p, rr, i = s
+            return (rr > tol * tol) & (i < maxiter)
+
+        def body(s):
+            x, r, p, rr, i = s
+            Ap = A(p)
+            pAp = dot(p, Ap)  # reduction 1
+            alpha = rr / pAp
+            x = x + alpha * p
+            r = r - alpha * Ap
+            rr_new = dot(r, r)  # reduction 2 (overlaps x-update)
+            beta = rr_new / rr
+            p = r + beta * p
+            return (x, r, p, rr_new, i + 1)
+
+        x, r, p, rr, i = jax.lax.while_loop(cond, body, (x0, r, p, rr, 0))
+        return x, i, jnp.sqrt(rr)
+
     r = b - A(x0)
-    p = r
+    z = M(r)
+    p = z
+    rz = dot(r, z)
     rr = dot(r, r)
 
-    def cond(s):
-        x, r, p, rr, i = s
+    def pcond(s):
+        x, r, p, rz, rr, i = s
         return (rr > tol * tol) & (i < maxiter)
 
-    def body(s):
-        x, r, p, rr, i = s
+    def pbody(s):
+        x, r, p, rz, rr, i = s
         Ap = A(p)
-        pAp = dot(p, Ap)  # reduction 1
-        alpha = rr / pAp
+        alpha = rz / _nonzero(dot(p, Ap))
         x = x + alpha * p
         r = r - alpha * Ap
-        rr_new = dot(r, r)  # reduction 2 (overlaps x-update)
-        beta = rr_new / rr
-        p = r + beta * p
-        return (x, r, p, rr_new, i + 1)
+        z = M(r)
+        rz_new = dot(r, z)
+        beta = rz_new / _nonzero(rz)
+        p = z + beta * p
+        return (x, r, p, rz_new, dot(r, r), i + 1)
 
-    x, r, p, rr, i = jax.lax.while_loop(cond, body, (x0, r, p, rr, 0))
+    x, r, p, rz, rr, i = jax.lax.while_loop(pcond, pbody, (x0, r, p, rz, rr, 0))
     return x, i, jnp.sqrt(rr)
 
 
@@ -132,15 +181,28 @@ def pipecg(
 
 
 def bicgstab(
-    A: Callable, dot: Callable, b, x0, *, tol: float = 1e-6, maxiter: int = 500
+    A: Callable,
+    dot: Callable,
+    b,
+    x0,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 500,
+    M: Callable = None,
 ):
     """van der Vorst BiCGSTAB — matrix-free, no transpose applications.
 
     The paper's workhorse for non-symmetric systems (upwind advection,
     variable-coefficient implicit diffusion).  Two operator applications and
     four reductions per iteration; the ``dot`` callable owns the all-reduce,
-    so the same code runs on 1 chip or a full mesh.
+    so the same code runs on 1 chip or a full mesh.  An optional ``M``
+    preconditions from the *right* (``A M y = b``, ``x = M y``), so the
+    recurrence sees ``A∘M`` while the residual — and the stopping test —
+    stay those of the original system; with ``M = None`` the applications
+    reduce to the textbook method exactly.
     """
+    if M is None:
+        M = lambda v: v
     r = b - A(x0)
     r0 = r
     one = jnp.asarray(1.0, jnp.float32)
@@ -156,21 +218,67 @@ def bicgstab(
         rho_new = dot(r0, r)
         beta = (rho_new / _nonzero(rho)) * (alpha / _nonzero(omega))
         p = r + beta * (p - omega * v)
-        v = A(p)
+        ph = M(p)
+        v = A(ph)
         alpha = rho_new / _nonzero(dot(r0, v))
         sv = r - alpha * v
-        t = A(sv)
+        sh = M(sv)
+        t = A(sh)
         tt = dot(t, t)
         # t == 0 means sv == 0 (converged mid-iteration): take omega = 0 so
         # the update degenerates to the stable half-step.
         omega = jnp.where(tt > 0.0, dot(t, sv) / _nonzero(tt), 0.0)
-        x = x + alpha * p + omega * sv
+        x = x + alpha * ph + omega * sh
         r = sv - omega * t
         return (x, r, p, v, rho_new, alpha, omega, dot(r, r), i + 1)
 
     s0 = (x0, r, zero_v, zero_v, one, one, one, rr, 0)
     out = jax.lax.while_loop(cond, body, s0)
     x, rr, i = out[0], out[7], out[8]
+    return x, i, jnp.sqrt(rr)
+
+
+def stationary(
+    step: Callable,
+    rnorm2: Callable,
+    x0,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 100,
+    ref2=None,
+):
+    """Fixed-point iteration ``x ← step(x)`` with a residual-norm stop.
+
+    The outer driver for ``method="mg"``: ``step`` is one V/W-cycle and
+    ``rnorm2(x)`` the squared fine-level residual norm (whose ``dot`` owns
+    the all-reduce when sharded).  Returns ``(x, iterations, ‖r‖)`` like
+    the Krylov methods, so ``SolveInfo`` reporting is uniform.
+
+    The stop is *relative* — ``‖r‖ ≤ tol·√ref2`` with ``ref2`` the squared
+    norm of the right-hand side (falling back to the entry residual) —
+    because ``rnorm2`` is the true residual recomputed each cycle: an
+    absolute fp32 criterion would stagnate at the rounding floor that
+    Krylov methods sail past on their recurred (drifting) residuals, and a
+    reference to the entry residual would over-demand at warm starts.  A
+    zero reference (all-zero RHS) also falls back to the entry residual so
+    the loop cannot spin to ``maxiter`` on a solved system.
+    """
+    rr0 = rnorm2(x0)
+    if ref2 is None:
+        ref2 = rr0
+    else:
+        ref2 = jnp.where(ref2 > 0.0, ref2, rr0)
+
+    def cond(s):
+        x, rr, i = s
+        return (rr > tol * tol * ref2) & (i < maxiter)
+
+    def body(s):
+        x, rr, i = s
+        x = step(x)
+        return (x, rnorm2(x), i + 1)
+
+    x, rr, i = jax.lax.while_loop(cond, body, (x0, rr0, 0))
     return x, i, jnp.sqrt(rr)
 
 

@@ -65,6 +65,52 @@ def record_btcs(T0: np.ndarray, w: float, name: str = "T"):
     return wse, T
 
 
+def _record_poisson_body(T, F) -> None:
+    """Record A = 6I − S (unit-spacing Dirichlet Laplacian) and b = F."""
+    with Operator():
+        T[1:-1, 0, 0] = 6.0 * T[1:-1, 0, 0] - (
+            T[2:, 0, 0]
+            + T[:-2, 0, 0]
+            + T[1:-1, 1, 0]
+            + T[1:-1, -1, 0]
+            + T[1:-1, 0, 1]
+            + T[1:-1, 0, -1]
+        )
+    with Rhs():
+        T[1:-1, 0, 0] = F[1:-1, 0, 0]
+
+
+def poisson_program(
+    shape: Tuple[int, int, int],
+    rhs: Optional[np.ndarray] = None,
+    init_data: Optional[np.ndarray] = None,
+    name: str = "T",
+) -> Program:
+    """The Dirichlet Poisson system ``−∇²u = f`` (unit spacing) as a
+    recorded :class:`Program` — the canonical stiff elliptic workload for
+    the multigrid solver (``method="mg"`` / ``precondition="mg"``).
+
+    ``init_data``'s Moat carries the boundary values (zero by default);
+    ``rhs`` is the source term ``f`` on the interior.
+    """
+    with scoped_program() as program:
+        T = Field(name, init_data=init_data, shape=shape)
+        F = Field(name + "_rhs", init_data=rhs, shape=shape)
+        _record_poisson_body(T, F)
+    return program
+
+
+def record_poisson(F0: np.ndarray, T0: Optional[np.ndarray] = None, name: str = "T"):
+    """User-facing variant: records the Poisson system into a fresh
+    :class:`WFAInterface`; returns ``(wse, field)`` ready for
+    ``wse.solve(answer=field, method="mg", ...)``."""
+    wse = WFAInterface()
+    T = Field(name, init_data=T0, shape=F0.shape)
+    F = Field(name + "_rhs", init_data=F0)
+    _record_poisson_body(T, F)
+    return wse, T
+
+
 def record_varcoef_btcs(T0: np.ndarray, C0: np.ndarray, w: float, name: str = "T"):
     """Variable-coefficient implicit diffusion: A = I + ωC·(6I − S).
 

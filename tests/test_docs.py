@@ -1,0 +1,65 @@
+"""Docs-as-tests: every documented example must execute.
+
+Two doctest passes keep the documentation from rotting:
+
+* ``docs/*.md`` — each page's ``>>>`` snippets run as a doctest file (the
+  equivalent of ``pytest --doctest-glob='*.md' docs/``, kept inside the
+  tier-1 suite so one command verifies everything);
+* module doctests — the runnable examples in the public-API docstrings
+  (``make``, ``run_sharded``, ``solve``, ``Operator``/``Rhs``, engine
+  stats, the multigrid options).
+
+Examples use tiny grids so the whole pass stays in seconds; state leaking
+between snippets is prevented by running each file/module in a fresh
+doctest namespace (and the frontend releases its program on ``make`` /
+``solve`` / context exit, which the examples exercise on purpose).
+"""
+
+import doctest
+import importlib
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+DOCS = sorted((ROOT / "docs").glob("*.md"))
+
+DOC_MODULES = [
+    "repro.core.halo",
+    "repro.core.program",
+    "repro.engine.stats",
+    "repro.solver.api",
+    "repro.solver.frontend",
+    "repro.solver.multigrid",
+]
+
+FLAGS = doctest.ELLIPSIS | doctest.NORMALIZE_WHITESPACE
+
+
+def test_docs_tree_exists():
+    names = {p.name for p in DOCS}
+    required = {
+        "architecture.md",
+        "solvers.md",
+        "time_tiling.md",
+        "benchmarks.md",
+    }
+    assert required <= names, f"missing docs pages: {required - names}"
+
+
+@pytest.mark.parametrize("path", DOCS, ids=lambda p: p.name)
+def test_docs_examples_run(path, monkeypatch):
+    monkeypatch.chdir(ROOT)  # pages reference repo-root files (BENCH_*.json)
+    result = doctest.testfile(
+        str(path), module_relative=False, optionflags=FLAGS, verbose=False
+    )
+    assert result.failed == 0, f"{path.name}: {result.failed} doctest failures"
+    assert result.attempted > 0, f"{path.name} has no runnable examples"
+
+
+@pytest.mark.parametrize("name", DOC_MODULES)
+def test_module_doctests(name):
+    mod = importlib.import_module(name)
+    result = doctest.testmod(mod, optionflags=FLAGS, verbose=False)
+    assert result.failed == 0, f"{name}: {result.failed} doctest failures"
+    assert result.attempted > 0, f"{name} has no docstring examples"

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.configs.heat3d import HeatConfig, make_field
-from repro.core.explicit import ftcs_solve
+from repro.core.explicit import ftcs_solve, ftcs_solve_repack
 from repro.core.perfmodel import (ftcs_brick_cost, openfoam_explicit_rate,
                                   roofline_time, wse_explicit_rate)
 
@@ -26,11 +26,14 @@ STEPS = 10
 
 
 def run() -> None:
+    us_zr = None  # the 102-cube resident timing, reused for the _repack row
     for nx, ny, nz in [(32, 32, 32), (48, 48, 48), (64, 64, 64),
                        (102, 102, 102)]:
         cfg = HeatConfig(nx=nx, ny=ny, nz=nz)
         T0 = jnp.asarray(make_field(cfg))
         us = time_fn(lambda T: ftcs_solve(T, cfg.omega, STEPS), T0) / STEPS
+        if (nx, ny, nz) == (102, 102, 102):
+            us_zr = us
         cells = cfg.cells
         meas_rate = 1e6 / us
         wse = wse_explicit_rate(cells)          # whole grid on one "tile"
@@ -38,10 +41,24 @@ def run() -> None:
         of = openfoam_explicit_rate(15625, cells)
         tpu = roofline_time(ftcs_brick_cost(nx // 4, ny // 4, nz))
         emit(f"explicit_weak_{nx}x{ny}x{nz}", us,
-             f"cells={cells};meas_it_s={meas_rate:.1f};"
+             f"cells={cells};ns_per_cell={1e3 * us / cells:.3f};"
+             f"meas_it_s={meas_rate:.1f};"
              f"eq6_wse_it_s={wse:.1f};eq5_openfoam_it_s={of:.1f};"
              f"tpu_roofline_it_s={tpu['rate']:.1f};"
              f"tpu_bound={tpu['bound']}")
+
+    # the before/after pair behind the residency PR: the retired repacking
+    # stepper (full pad + z-shift copies per step) vs the zero-repack
+    # stepper, on the paper's 102^3 brick (us_zr, timed above) — committed
+    # per container so the win stays observable in the BENCH trajectory
+    cfg = HeatConfig(nx=102, ny=102, nz=102)
+    T0 = jnp.asarray(make_field(cfg))
+    us_re = time_fn(
+        lambda T: ftcs_solve_repack(T, cfg.omega, STEPS), T0) / STEPS
+    emit("explicit_weak_102x102x102_repack", us_re,
+         f"cells={cfg.cells};ns_per_cell={1e3 * us_re / cfg.cells:.3f};"
+         f"note=pre-residency-reference;"
+         f"resident_speedup={us_re / us_zr:.2f}x")
 
     # per-cell cost flatness across sizes (weak-scaling surrogate)
     base = None

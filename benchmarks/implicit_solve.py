@@ -20,7 +20,7 @@ N = 32
 
 
 def run() -> None:
-    from repro.compiler import reset_stats, stats
+    from benchmarks.common import KernelStatsSnapshot
     from repro.configs.heat3d import HeatConfig, make_field
     from repro.solver import btcs_program, make_solver
     from repro.solver.presets import record_varcoef_btcs
@@ -29,7 +29,7 @@ def run() -> None:
     T0 = make_field(HeatConfig(nx=N, ny=N, nz=N))
 
     for method in ("cg", "pipecg", "bicgstab", "chebyshev", "jacobi"):
-        reset_stats()
+        snap = KernelStatsSnapshot()  # per-row deltas (cache is process-wide)
         prog = btcs_program(shape, 0.1, init_data=T0)
         step = make_solver(
             prog, "T", method=method, backend="pallas", tol=0.0, maxiter=ITERS
@@ -38,15 +38,13 @@ def run() -> None:
         emit(
             f"wfa_solve_{method}_inner_iter",
             us / ITERS,
-            f"cells={N ** 3};fused_kernels={stats.kernels_built};"
-            f"cache_hits={stats.cache_hits};fallbacks={stats.fallbacks};"
-            "launches_per_apply=1",
+            f"cells={N ** 3};{snap.derived()};launches_per_apply=1",
         )
 
     # variable-coefficient (non-symmetric) system — BiCGSTAB workhorse
     rng = np.random.default_rng(0)
     C0 = rng.uniform(0.05, 0.3, size=shape).astype(np.float32)
-    reset_stats()
+    snap = KernelStatsSnapshot()
     wse, T, C = record_varcoef_btcs(T0, C0, 0.1)
     step = make_solver(
         wse.program, "T", method="bicgstab", backend="pallas", tol=0.0, maxiter=ITERS
@@ -55,8 +53,7 @@ def run() -> None:
     emit(
         "wfa_solve_varcoef_bicgstab_inner_iter",
         us / ITERS,
-        f"cells={N ** 3};fused_kernels={stats.kernels_built};"
-        f"fallbacks={stats.fallbacks};note=two-tap-products-fused",
+        f"cells={N ** 3};{snap.derived()};note=two-tap-products-fused",
     )
 
 

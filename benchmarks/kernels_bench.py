@@ -53,7 +53,7 @@ def frontend_compile() -> None:
     iteration (the WFA's fused-RPC count); Mosaic compilation on TPU turns
     that into wall time.
     """
-    from repro.compiler import reset_stats, stats
+    from benchmarks.common import KernelStatsSnapshot
     from repro.core import WSE_Array, WSE_For_Loop, WSE_Interface
 
     n, steps, c = 24, 10, 0.1
@@ -71,15 +71,13 @@ def frontend_compile() -> None:
                 + T[1:-1, 0, -1] + T[1:-1, -1, 0] + T[1:-1, 0, 1])
         return wse.make(answer=T, backend=backend)
 
-    us_jit = time_fn(lambda: make_once("jit"), warmup=1, iters=3)
+    us_jit = time_fn(lambda: make_once("jit"))
     emit("frontend_fig3_interpreter_jit", us_jit,
          f"steps={steps};launches_per_iter=7(one-roll-per-tap)")
-    reset_stats()
-    us_pl = time_fn(lambda: make_once("pallas"), warmup=1, iters=3)
+    snap = KernelStatsSnapshot()  # per-row deltas (cache is process-wide)
+    us_pl = time_fn(lambda: make_once("pallas"))
     emit("frontend_fig3_pallas_compiler", us_pl,
-         f"steps={steps};fused_pallas_calls={stats.kernels_built};"
-         f"launches_per_iter=1;cache_hits={stats.cache_hits};"
-         f"fallbacks={stats.fallbacks};"
+         f"steps={steps};{snap.derived()};launches_per_iter=1;"
          "note=interpret-mode-wall-time(TPU target=mosaic)")
 
 

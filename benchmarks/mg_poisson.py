@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import KernelStatsSnapshot, emit, time_fn
 
 SIZES = (17, 33, 65)
 TOL = 1e-5
@@ -36,7 +36,6 @@ def _rhs(shape):
 
 
 def run() -> None:
-    from repro.compiler import reset_stats, stats
     from repro.engine import reset_stats as engine_reset
     from repro.engine import stats as engine_stats
     from repro.solver import make_solver, poisson_program
@@ -52,20 +51,22 @@ def run() -> None:
         F = _rhs(shape)
         x0 = np.zeros(shape, np.float32)
         for label, kwargs in cases:
-            reset_stats()
             engine_reset()
+            # per-row deltas: the kernel cache is process-wide, so later
+            # cases are served as hits — cumulative counters would report
+            # fused_kernels=0 for them (the old BENCH_mg artifact did)
+            snap = KernelStatsSnapshot()
             prog = poisson_program(shape, rhs=F)
             step = make_solver(prog, "T", backend="pallas", tol=TOL, **kwargs)
             x, (iters, res) = step(x0)
-            us = time_fn(lambda T: step(T)[0], x0, warmup=1, iters=3)
+            us = time_fn(lambda T: step(T)[0], x0)
             emit(
                 f"mg_poisson_{label}_n{n}",
                 us,
                 f"iterations={int(np.asarray(iters)[0])};"
                 f"residual={float(np.asarray(res)[0]):.3e};"
                 f"levels={engine_stats.mg_levels_built};"
-                f"fused_kernels={stats.kernels_built};"
-                f"fallbacks={stats.fallbacks};tol={TOL}",
+                f"{snap.derived()};tol={TOL}",
             )
 
 

@@ -13,20 +13,27 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
 Usage::
 
-    python benchmarks/run.py [--json OUT.json] [case ...]
+    python benchmarks/run.py [--json OUT.json] [--warmup N] [--repeats N]
+                             [--check-fallbacks] [case ...]
 
 ``--json`` additionally writes the emitted rows as a JSON document — the
-perf-trajectory artifact CI uploads per PR.
+perf-trajectory artifact CI uploads per PR.  ``--warmup``/``--repeats``
+override the harness-wide timing counts (rows report *best-of* over the
+repeats — see :mod:`benchmarks.common` for why the median was retired).
+``--check-fallbacks`` exits nonzero if any emitted row reports interpreter
+fallbacks — the CI smoke gate keeping every pallas case on the fused path.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import platform
+import re
+import sys
 
 
 def main() -> None:
-    from benchmarks import (distributed_model, explicit_scaling,
+    from benchmarks import (common, distributed_model, explicit_scaling,
                             implicit_scaling, implicit_solve, kernels_bench,
                             mg_poisson, reduction, time_tiling)
     from benchmarks.common import RESULTS
@@ -44,12 +51,23 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write emitted rows as JSON")
+    ap.add_argument("--warmup", type=int, default=None, metavar="N",
+                    help="untimed calls before timing each row")
+    ap.add_argument("--repeats", type=int, default=None, metavar="N",
+                    help="timed calls per row (best-of reported)")
+    ap.add_argument("--check-fallbacks", action="store_true",
+                    help="fail if any row reports interpreter fallbacks")
     ap.add_argument("cases", nargs="*", metavar="case",
                     help=f"benchmark cases to run (default: all of {list(mods)})")
     args = ap.parse_args()
     unknown = [c for c in args.cases if c not in mods]
     if unknown:
         ap.error(f"unknown case(s) {unknown}; choose from {list(mods)}")
+    if args.warmup is not None and args.warmup < 0:
+        ap.error("--warmup must be >= 0")
+    if args.repeats is not None and args.repeats < 1:
+        ap.error("--repeats must be >= 1")
+    common.configure(warmup=args.warmup, repeats=args.repeats)
 
     print("name,us_per_call,derived")
     for name, mod in mods.items():
@@ -70,6 +88,27 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(doc, f, indent=2)
         print(f"# wrote {len(RESULTS)} rows to {args.json}")
+
+    # gate AFTER the JSON dump: a fallback regression must still leave the
+    # per-row artifact behind — it is what diagnoses which case fell back
+    if args.check_fallbacks:
+        from repro.compiler import stats as compiler_stats
+
+        bad = [r for r in RESULTS
+               for m in [re.search(r"fallbacks=(\d+)", str(r["derived"]))]
+               if m and int(m.group(1)) > 0]
+        for r in bad:
+            print(f"# FALLBACKS in {r['name']}: {r['derived']}",
+                  file=sys.stderr)
+        # rows without a fallbacks= field still count via the process-wide
+        # compiler counter, so un-instrumented cases cannot regress silently
+        if compiler_stats.fallbacks > 0 and not bad:
+            print(f"# FALLBACKS: {compiler_stats.fallbacks} across the run "
+                  f"(reasons: {compiler_stats.fallback_reasons[-3:]})",
+                  file=sys.stderr)
+        if bad or compiler_stats.fallbacks > 0:
+            sys.exit(1)
+        print("# fallbacks=0 in every instrumented row and process-wide")
 
 
 if __name__ == "__main__":

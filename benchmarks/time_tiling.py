@@ -12,7 +12,7 @@ Rocki et al.'s temporal blocking argument).
 
 from __future__ import annotations
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import emit, resolved, time_fn
 from repro.configs.heat3d import HeatConfig, make_field
 from repro.core import WSE_Array, WSE_For_Loop, WSE_Interface
 from repro.engine import reset_stats, stats
@@ -42,14 +42,16 @@ def run() -> None:
     T0 = make_field(cfg)
     for k in (1, 2, 4, 8):
         reset_stats()
-        us = time_fn(lambda: _make_once(T0, STEPS, k), warmup=1, iters=3)
-        runs = 4  # 1 warmup + 3 timed executions since reset_stats()
+        us = time_fn(lambda: _make_once(T0, STEPS, k))
+        warmup, iters = resolved()
+        runs = warmup + iters  # executions since reset_stats()
         emit(
             f"time_tiling_k{k}",
             us / STEPS,
             f"steps={STEPS};exchanges_per_step={stats.exchanges_per_step:.3f};"
             f"tiles_fused_per_run={stats.tiles_fused // runs};"
             f"steps_per_sec={stats.steps_per_sec:.1f};"
+            f"repacks_per_run={stats.repacks // runs};"
             "note=interpret-mode-wall-time(track=exchanges_per_step)",
         )
 

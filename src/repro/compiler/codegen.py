@@ -103,18 +103,18 @@ def _field_specs(group: LoweredGroup, shapes: Dict[str, tuple],
 
 
 def _get_kernel(group: LoweredGroup, specs, bx, by, nx, ny, block, interpret,
-                time_tile, wrap):
+                time_tile, wrap, margin=0):
     from repro.kernels.fused import build_fused_call
     sig = (group, tuple((n, s[0], jnp.dtype(s[1]).name) for n, s in
                         specs.items()), bx, by, nx, ny, tuple(block),
-           bool(interpret), int(time_tile), bool(wrap))
+           bool(interpret), int(time_tile), bool(wrap), int(margin))
     hit = _KERNEL_CACHE.get(sig)
     if hit is not None:
         stats.cache_hits += 1
         return hit
     kernel = build_fused_call(group.updates, specs, group.halo, bx, by,
                               nx, ny, block=block, interpret=interpret,
-                              time_tile=time_tile, wrap=wrap)
+                              time_tile=time_tile, wrap=wrap, margin=margin)
     stats.kernels_built += 1
     _KERNEL_CACHE[sig] = kernel
     return kernel
@@ -153,7 +153,8 @@ def compile_transfer(kind: str, fine_shape, coarse_shape, dtype,
 
 def compile_group(ops, shapes: Dict[str, tuple], dtypes: Dict[str, object],
                   block=(8, 128), interpret: bool = False, *,
-                  time_tile: int = 1, group: LoweredGroup = None):
+                  time_tile: int = 1, group: LoweredGroup = None,
+                  resident: int = 0):
     """Lower + codegen one loop body for single-device execution.
 
     Returns ``step(env) -> env`` fusing all of ``ops`` into one pallas_call;
@@ -162,6 +163,15 @@ def compile_group(ops, shapes: Dict[str, tuple], dtypes: Dict[str, object],
     ``group=`` to reuse a lowering the planner already derived.  Raises
     :class:`LoweringError` when the body cannot be fused (the caller falls
     back to the interpreter and logs the reason).
+
+    ``resident=K`` switches to the halo-resident protocol (the engine's
+    :class:`~repro.engine.layout.HaloLayout`): ``env`` holds ``(nx + 2K,
+    ny + 2K, nz)`` buffers, the step refreshes only the depth-``k·h`` wrap
+    margin in place (:func:`repro.engine.layout.wrap_refresh` — four edge
+    slabs, no full-array repack) and the kernel writes back into the same
+    buffers via ``input_output_aliases``.  Bitwise identical to the
+    repacking step at every precision: the kernel sees the same window
+    values ``jnp.pad(mode="wrap")`` would have built.
     """
     from repro.compiler.ir import tile_group
 
@@ -171,18 +181,45 @@ def compile_group(ops, shapes: Dict[str, tuple], dtypes: Dict[str, object],
     # same brick bound the planner clamps against; direct callers get the
     # validation too (a wrap pad deeper than the grid would be ill-formed)
     tiled = tile_group(group, time_tile, brick_xy=(nx, ny))
-    fused, written = _get_kernel(group, specs, nx, ny, nx, ny, block,
-                                 interpret, time_tile, wrap=True)
     ph = tiled.halo            # k·h margin, paid once per tile
+    if resident and resident < ph:
+        raise LoweringError(
+            f"resident margin {resident} < tiled halo {ph}")
+    fused, written = _get_kernel(group, specs, nx, ny, nx, ny, block,
+                                 interpret, time_tile, wrap=True,
+                                 margin=resident)
     in_names = list(specs)
     coords = jnp.zeros((1, 2), jnp.int32)
     stats.groups_fused += 1
+
+    if resident:
+        from repro.engine.layout import wrap_refresh
+
+        def step(env):
+            env = dict(env)
+            ins = [wrap_refresh(env[n], resident, ph) for n in in_names]
+            # pin the fusion boundary at the kernel inputs: XLA otherwise
+            # fuses the margin producer (refresh here, pad on the legacy
+            # path) into the kernel's first ops, and the differing contexts
+            # can flip FMA contraction — a ~1-ulp resident/legacy divergence.
+            # Both paths barrier, so both compile the kernel identically and
+            # the bitwise-equality guarantee holds at every precision.
+            ins = list(jax.lax.optimization_barrier(tuple(ins)))
+            outs = fused(coords, *ins)
+            for name, inp in zip(in_names, ins):
+                env[name] = inp  # refreshed margins (non-written fields)
+            for name, out in zip(written, outs):
+                env[name] = out
+            return env
+
+        return step
 
     def step(env):
         env = dict(env)
         padded = [env[n] if ph == 0 else
                   jnp.pad(env[n], ((ph, ph), (ph, ph), (0, 0)), mode="wrap")
                   for n in in_names]
+        padded = list(jax.lax.optimization_barrier(tuple(padded)))
         outs = fused(coords, *padded)
         for name, out in zip(written, outs):
             env[name] = out
@@ -194,16 +231,24 @@ def compile_group(ops, shapes: Dict[str, tuple], dtypes: Dict[str, object],
 def compile_group_sharded(ops, shapes: Dict[str, tuple],
                           dtypes: Dict[str, object], *, mesh_xy, axis_names,
                           block=(8, 128), interpret: bool = False,
-                          time_tile: int = 1, group: LoweredGroup = None):
+                          time_tile: int = 1, group: LoweredGroup = None,
+                          resident: int = 0):
     """Lower + codegen one loop body for use *inside* ``shard_map``.
 
     ``shapes`` are the global field shapes; the returned ``step`` operates on
     the per-device brick env (halo-pads it with ppermute — depth ``k·h``
     when ``time_tile=k``, ONE exchange per k steps — then runs the same
     fused kernel with mesh-derived coordinates).
+
+    ``resident=K`` switches to the halo-resident protocol: the brick env
+    holds ``(bx + 2K, by + 2K, nz)`` buffers, the exchange moves only the
+    four depth-``k·h`` margin slabs (:func:`repro.core.halo.halo_refresh` —
+    same ppermute traffic, no concatenated repack) and the kernel writes in
+    place via ``input_output_aliases``.  Bitwise identical to the repacking
+    step at every precision.
     """
     from repro.compiler.ir import tile_group
-    from repro.core.halo import halo_pad
+    from repro.core.halo import halo_pad, halo_refresh
 
     if group is None:
         group = lower_group(ops)
@@ -215,20 +260,45 @@ def compile_group_sharded(ops, shapes: Dict[str, tuple],
             f"global extent ({nx},{ny}) not divisible by mesh ({mx},{my})")
     bx, by = nx // mx, ny // my
     tiled = tile_group(group, time_tile, brick_xy=(bx, by))
-    fused, written = _get_kernel(group, specs, bx, by, nx, ny, block,
-                                 interpret, time_tile, wrap=False)
     ph = tiled.halo
+    if resident and resident < ph:
+        raise LoweringError(
+            f"resident margin {resident} < tiled halo {ph}")
+    fused, written = _get_kernel(group, specs, bx, by, nx, ny, block,
+                                 interpret, time_tile, wrap=False,
+                                 margin=resident)
     in_names = list(specs)
     stats.groups_fused += 1
 
-    def step(env):
-        env = dict(env)
+    def _coords():
         cx = jax.lax.axis_index(ax_x) * bx
         cy = jax.lax.axis_index(ax_y) * by
-        coords = jnp.stack([cx, cy]).astype(jnp.int32).reshape(1, 2)
+        return jnp.stack([cx, cy]).astype(jnp.int32).reshape(1, 2)
+
+    if resident:
+
+        def step(env):
+            env = dict(env)
+            coords = _coords()
+            ins = [halo_refresh(env[n], resident, ph, ax_x, ax_y, mx, my)
+                   for n in in_names]
+            ins = list(jax.lax.optimization_barrier(tuple(ins)))
+            outs = fused(coords, *ins)
+            for name, inp in zip(in_names, ins):
+                env[name] = inp
+            for name, out in zip(written, outs):
+                env[name] = out
+            return env
+
+        return step
+
+    def step(env):
+        env = dict(env)
+        coords = _coords()
         padded = [env[n] if ph == 0 else
                   halo_pad(env[n], ph, ax_x, ax_y, mx, my)
                   for n in in_names]
+        padded = list(jax.lax.optimization_barrier(tuple(padded)))
         outs = fused(coords, *padded)
         for name, out in zip(written, outs):
             env[name] = out

@@ -54,10 +54,53 @@ def ftcs_step(T, w: float, mask=None):
 
 
 @partial(jax.jit, static_argnames=("steps", "w"))
-def ftcs_solve(T0, w: float, steps: int):
+def ftcs_solve_repack(T0, w: float, steps: int):
+    """The pre-residency stepping: one full-grid zero pad + two z-shift
+    copies per step (``ftcs_step`` in a loop).  Kept as the semantic and
+    performance *before* reference for :func:`ftcs_solve` — benchmarks emit
+    both so the zero-repack win stays measurable per container."""
     mask = interior_mask3d(T0.shape)
     return jax.lax.fori_loop(
         0, steps, lambda i, T: ftcs_step(T, w, mask), T0)
+
+
+@partial(jax.jit, static_argnames=("steps", "w"))
+def ftcs_solve(T0, w: float, steps: int):
+    """FTCS time loop with zero-repack stepping (same update as
+    :func:`ftcs_step`, to FMA rounding).
+
+    The repacking step rebuilds three full-grid copies per step: a padded
+    input (``jnp.pad``) and two z-shifted concatenations.  Here the Dirichlet
+    structure makes all three redundant — boundary cells never change, so
+
+    * the two fixed z faces stay *resident*: only the inner (X, Y, Z-2) slab
+      is padded (in X/Y) and stepped, and the z-neighbour terms are plain
+      z-slices of the full array instead of shifted copies;
+    * the X/Y Moat ring is pinned by a broadcast iota mask (no materialized
+      3-D mask array to stream).
+
+    Per step that is one inner-slab pad + one fused stencil pass — on the
+    CPU container this is the ≥25 % ``explicit_weak`` win recorded in
+    BENCH_resident.json, and the same structure XLA:TPU fuses best.
+    """
+    nx, ny, nz = T0.shape
+    if nz < 3:
+        return T0  # no interior z plane: every cell is boundary-pinned
+    row = jax.lax.broadcasted_iota(jnp.int32, (nx, ny, 1), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (nx, ny, 1), 1)
+    mask_xy = (row > 0) & (row < nx - 1) & (col > 0) & (col < ny - 1)
+
+    def step(i, T):
+        Ti = T[:, :, 1:-1]
+        P = jnp.pad(Ti, ((1, 1), (1, 1), (0, 0)))
+        s = (P[:-2, 1:-1, :] + P[2:, 1:-1, :]
+             + P[1:-1, :-2, :] + P[1:-1, 2:, :])
+        zsum = T[:, :, :-2] + T[:, :, 2:]
+        new = (1.0 - 6.0 * w) * Ti + w * (s + zsum)
+        new = jnp.where(mask_xy, new, Ti)
+        return jnp.concatenate([T[:, :, :1], new, T[:, :, -1:]], axis=2)
+
+    return jax.lax.fori_loop(0, steps, step, T0)
 
 
 # ---------------------------------------------------------------------------

@@ -54,6 +54,42 @@ def halo_pad(local, h: int, ax_x: str, ax_y: str, mx: int, my: int):
     return jnp.concatenate([lo_y, local, hi_y], axis=1)
 
 
+def halo_refresh(resident, margin: int, h: int, ax_x: str, ax_y: str,
+                 mx: int, my: int):
+    """Refresh the depth-``h`` margin of a halo-*resident* brick in place.
+
+    ``resident`` is a (bx + 2·margin, by + 2·margin, Z) buffer whose interior
+    holds the brick (see :class:`repro.engine.layout.HaloLayout`).  Instead
+    of rebuilding a padded copy per step (:func:`halo_pad`'s concatenate),
+    only the four margin *slabs* move: two ``ppermute`` edge transfers per
+    axis, each written back with ``dynamic_update_slice`` — the narrow
+    in-place update that keeps fields resident while halos travel.  The slab
+    contents (including corners, and the zero fill on domain-edge bricks)
+    are bitwise identical to what :func:`halo_pad` would have produced, so
+    resident and repacking execution agree exactly.
+    """
+    if h == 0:
+        return resident
+    K = margin
+    bx = resident.shape[0] - 2 * K
+    by = resident.shape[1] - 2 * K
+    upd = jax.lax.dynamic_update_slice
+    # X axis: slabs of the interior's edge rows (full interior Y extent).
+    lo_x = _ppermute_shift(resident[K + bx - h:K + bx, K:K + by, :],
+                           ax_x, mx, +1)
+    resident = upd(resident, lo_x, (K - h, K, 0))
+    hi_x = _ppermute_shift(resident[K:K + h, K:K + by, :], ax_x, mx, -1)
+    resident = upd(resident, hi_x, (K + bx, K, 0))
+    # Y axis: slabs spanning the x-extended rows (fills the corners with the
+    # diagonal neighbour's data, exactly like halo_pad's second concat).
+    lo_y = _ppermute_shift(
+        resident[K - h:K + bx + h, K + by - h:K + by, :], ax_y, my, +1)
+    resident = upd(resident, lo_y, (K - h, K - h, 0))
+    hi_y = _ppermute_shift(
+        resident[K - h:K + bx + h, K:K + h, :], ax_y, my, -1)
+    return upd(resident, hi_y, (K - h, K + by, 0))
+
+
 def local_moat_mask(bx: int, by: int, ax_x: str, ax_y: str, mx: int, my: int):
     """(bx, by, 1) mask, False on global-domain-edge cells of this brick.
 
@@ -125,7 +161,8 @@ def default_mesh2d():
 
 
 def run_sharded(program: Program, env: Dict[str, np.ndarray], mesh=None,
-                use_pallas: bool = False, time_tile=None):
+                use_pallas: bool = False, time_tile=None,
+                resident: bool = True):
     """Execute a recorded WFA program on a 2-D device mesh.
 
     A thin wrapper over the unified engine: plans the program for the
@@ -133,7 +170,11 @@ def run_sharded(program: Program, env: Dict[str, np.ndarray], mesh=None,
     the mapped function, ``time_tile=k`` amortizing one depth-``k·h``
     exchange over k steps) or ``jit`` backend and executes it inside one
     ``shard_map``.  Bodies that cannot be lowered fall back to
-    :func:`interp_step_sharded` with a logged reason.
+    :func:`interp_step_sharded` with a logged reason.  Fused bricks step
+    halo-resident (standing padded brick buffers, margin-slab ppermute
+    refresh via :func:`halo_refresh`, donated entry buffers);
+    ``resident=False`` forces the legacy repacking steps — both are bitwise
+    identical.
 
     ``env`` maps field names to global ``(X, Y, Z)`` arrays; the returned
     env holds the final values, gathered back to host NumPy.  With
@@ -155,5 +196,5 @@ def run_sharded(program: Program, env: Dict[str, np.ndarray], mesh=None,
     if mesh is None:
         mesh = default_mesh2d()
     p = plan(program, backend="pallas" if use_pallas else "jit", mesh=mesh,
-             time_tile=time_tile)
+             time_tile=time_tile, resident=resident)
     return execute(p, env)

@@ -209,8 +209,10 @@ def make_sharded_iteration(mesh, shape, w: float, *, method: str = "cg",
             w, (bx, by, nz), ax_x, ax_y, mx, my, use_kernel=use_kernel)
 
         def dot2(a, b, c, d):
-            if use_kernel:
-                from repro.kernels import ops as kops
+            from repro.kernels import ops as kops
+            # fused dual-dot kernel on Mosaic only: in interpret mode the
+            # extra pallas launch per reduction costs more than it fuses
+            if use_kernel and not kops._interpret():
                 part = kops.dual_dot(a, b, c, d)
             else:
                 part = jnp.stack([jnp.sum(a * b, dtype=jnp.float32),

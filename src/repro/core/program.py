@@ -164,7 +164,8 @@ class WFAInterface:
         return False
 
     # -- execution ---------------------------------------------------------
-    def make(self, answer, backend: str = "jit", mesh=None, time_tile=None):
+    def make(self, answer, backend: str = "jit", mesh=None, time_tile=None,
+             resident: bool = True):
         """Compile and run the recorded program; returns ``answer``'s data.
 
         (the WFA's ``make_WSE``; ``backend='numpy'`` is its validation mode.)
@@ -172,6 +173,10 @@ class WFAInterface:
         ``mesh=`` runs brick-sharded inside ``shard_map``; ``time_tile=k``
         fuses k steps per kernel launch on ``backend="pallas"`` (one halo
         exchange / wrap pad per tile; ``None`` lets the planner auto-pick).
+        Fused runs step on a *halo-resident* field layout (standing padded
+        buffers, in-place margin refresh + kernel outputs, donated entry
+        buffers — see :mod:`repro.engine.layout`); ``resident=False`` forces
+        the legacy repack-per-launch stepping, which is bitwise identical.
 
         Example — three steps of pure decay on the interior (the Moat ring
         and the unwritten z planes keep their boundary values):
@@ -198,7 +203,7 @@ class WFAInterface:
         try:
             from repro.engine import run_program
             out = run_program(self.program, backend=backend, mesh=mesh,
-                              time_tile=time_tile)
+                              time_tile=time_tile, resident=resident)
         finally:
             release_program(self.program)
         return np.asarray(out[answer.name])

@@ -23,7 +23,13 @@ auto-pick; illegal factors clamp with a logged reason, non-lowerable bodies
 fall back to the untiled interpreter exactly as before.
 """
 
-from repro.engine.executor import execute, run_program
+from repro.engine.executor import (
+    execute,
+    run_program,
+    sharded_runner,
+    single_runner,
+)
+from repro.engine.layout import HaloLayout
 from repro.engine.plan import (
     BACKENDS,
     ExecutionPlan,
@@ -39,6 +45,7 @@ __all__ = [
     "BACKENDS",
     "EngineStats",
     "ExecutionPlan",
+    "HaloLayout",
     "LevelSegment",
     "Segment",
     "compile_body",
@@ -47,5 +54,7 @@ __all__ = [
     "plan_mg_levels",
     "reset_stats",
     "run_program",
+    "sharded_runner",
+    "single_runner",
     "stats",
 ]

@@ -10,6 +10,15 @@ One executor serves every backend the planner schedules:
 Time-tiled segments advance ``k`` steps per iteration (``n // k`` tiled
 launches + ``n % k`` untiled remainder launches), which is where the
 communication amortization lands: one halo exchange (or wrap pad) per tile.
+
+Halo residency (:mod:`repro.engine.layout`): when the plan carries a padded
+layout, the traced run *enters* it once (pad every field to the resident
+extent), steps the fused segments on those standing buffers — margin slabs
+refreshed in place, kernel outputs aliased — and *exits* once at the end;
+interpreter segments inside a mixed plan are bracketed by exit/enter so
+their roll semantics see plain arrays.  Both jitted executors **donate**
+their entry buffers (``donate_argnums``), so with an all-fused plan the
+whole step loop runs without allocating or repacking a single field copy.
 The executor also derives the engine's static communication accounting from
 the plan (see :mod:`repro.engine.stats`).
 """
@@ -41,13 +50,78 @@ def _apply_segment(seg: Segment, env):
     return jax.lax.fori_loop(0, n, lambda i, e: seg.step(e), env)
 
 
+def _layout_schedule(plan: ExecutionPlan):
+    """The plan's step/conversion event stream: ``"enter"``/``"exit"``
+    markers interleaved with segments.  Fused segments run on the layout's
+    padded buffers; interpreter segments (mixed plans, lowering fallbacks)
+    are bracketed by exit/enter so both step kinds see the env form they
+    were compiled for.  With an all-fused plan this is exactly one enter
+    and one exit per run.  Both the tracer and the repack accounting
+    consume this one stream, so they cannot drift apart.
+    """
+    padded = False
+    for seg in plan.segments:
+        if seg.kind == "fused":
+            if not padded:
+                yield "enter"
+                padded = True
+        elif padded:
+            yield "exit"
+            padded = False
+        yield seg
+    if padded:
+        yield "exit"
+
+
+def _trace_plan(plan: ExecutionPlan, env):
+    """Trace the whole plan: resident fused segments, plain interp segments
+    (see :func:`_layout_schedule` for the conversion bracketing)."""
+    layout = plan.layout
+    if layout is None or layout.pad == 0:
+        for seg in plan.segments:
+            env = _apply_segment(seg, env)
+        return env
+    for ev in _layout_schedule(plan):
+        if ev == "enter":
+            env = layout.enter(env)
+        elif ev == "exit":
+            env = layout.exit(env)
+        else:
+            env = _apply_segment(ev, env)
+    return env
+
+
+def fresh_buffer(v):
+    """Device array safe to donate: never aliases a caller-owned buffer.
+
+    Copies unconditionally: ``jnp.asarray`` is a no-op for device arrays,
+    and on CPU backends it may *zero-copy* an aligned host numpy array —
+    either way the jitted runners would donate (invalidate, then reuse)
+    memory the caller still holds."""
+    return jnp.array(v, copy=True)
+
+
 def _account(plan: ExecutionPlan) -> None:
     """Static communication accounting for one execution of ``plan``.
 
     Fused segments pay one pad/exchange per kernel launch (none when the
     body is halo-free); interpreter segments pad per op, per step.  Single-
     device ``jit``/``numpy`` interpretation rolls in place — no pad events.
+    On a resident plan the fused "exchange" is the in-place margin-slab
+    refresh (same count, a fraction of the bytes) and the only repacking
+    conversions are the layout enter/exit events — two for an all-fused
+    plan, plus a pair around each interpreter segment in a mixed plan.
     """
+    resident = (
+        plan.layout is not None
+        and plan.layout.pad > 0
+        and any(seg.kind == "fused" for seg in plan.segments)
+    )
+    if resident:
+        stats.resident_runs += 1
+        stats.repacks += sum(
+            1 for ev in _layout_schedule(plan) if isinstance(ev, str)
+        )
     for seg in plan.segments:
         n, k = seg.n_steps, seg.time_tile
         stats.steps_run += n
@@ -58,10 +132,13 @@ def _account(plan: ExecutionPlan) -> None:
             stats.tiles_fused += tiled
             if seg.halo > 0:
                 stats.exchanges += launches
+                if not resident:
+                    stats.repacks += launches  # full pad/concat per launch
         else:
             stats.launches += n
             if plan.mesh is not None:
                 stats.exchanges += n * len(seg.ops)
+                stats.repacks += n * len(seg.ops)
 
 
 def _run_numpy(plan: ExecutionPlan, env: Dict[str, np.ndarray]):
@@ -74,19 +151,31 @@ def _run_numpy(plan: ExecutionPlan, env: Dict[str, np.ndarray]):
     return env
 
 
-def _run_single(plan: ExecutionPlan, env):
-    env = {k: jnp.asarray(v) for k, v in env.items()}
+def single_runner(plan: ExecutionPlan):
+    """The jitted single-device runner for ``plan`` (entry env donated).
 
-    @jax.jit
+    Exposed for the residency tests: ``runner.lower(env)`` shows the
+    donation markers and ``runner(env)`` consumes its argument buffers.
+    """
+
     def run(env):
-        for seg in plan.segments:
-            env = _apply_segment(seg, env)
-        return env
+        return _trace_plan(plan, env)
 
-    return jax.device_get(run(env))
+    return jax.jit(run, donate_argnums=0)
 
 
-def _run_sharded(plan: ExecutionPlan, env):
+def _run_single(plan: ExecutionPlan, env):
+    env = {k: fresh_buffer(v) for k, v in env.items()}
+    return jax.device_get(single_runner(plan)(env))
+
+
+def sharded_runner(plan: ExecutionPlan, names=None):
+    """The jitted ``shard_map`` runner for ``plan`` (entry env donated).
+
+    Returns ``(runner, sharding)``; the layout enter/exit happens *inside*
+    the mapped function, so resident buffers are per-brick and the margin
+    refresh is pure neighbour ppermute.
+    """
     from jax.sharding import PartitionSpec as P
 
     from repro.core.jaxcompat import shard_map
@@ -95,17 +184,21 @@ def _run_sharded(plan: ExecutionPlan, env):
     _, _, ax_x, ax_y = plan.mesh_ctx
     spec = P(ax_x, ax_y, None)
     sharding = jax.sharding.NamedSharding(mesh, spec)
-    genv = {k: jax.device_put(jnp.asarray(v), sharding) for k, v in env.items()}
-    specs = {k: spec for k in genv}
+    specs = {k: spec for k in (plan.program.fields if names is None else names)}
 
     def local(env):
-        for seg in plan.segments:
-            env = _apply_segment(seg, env)
-        return env
+        return _trace_plan(plan, env)
 
     stepped = jax.jit(
-        shard_map(local, mesh=mesh, in_specs=(specs,), out_specs=specs, check=False)
+        shard_map(local, mesh=mesh, in_specs=(specs,), out_specs=specs, check=False),
+        donate_argnums=0,
     )
+    return stepped, sharding
+
+
+def _run_sharded(plan: ExecutionPlan, env):
+    stepped, sharding = sharded_runner(plan, names=list(env))
+    genv = {k: jax.device_put(fresh_buffer(v), sharding) for k, v in env.items()}
     out = stepped(genv)
     return {k: np.asarray(jax.device_get(v)) for k, v in out.items()}
 
@@ -131,11 +224,17 @@ def run_program(
     backend: str = "jit",
     mesh=None,
     time_tile=None,
+    resident: bool = True,
 ):
-    """plan + execute in one call (the ``WFAInterface.make`` entry point)."""
+    """plan + execute in one call (the ``WFAInterface.make`` entry point).
+
+    ``resident=False`` forces the legacy repack-per-launch stepping (the
+    bitwise reference for the halo-resident layout)."""
     from repro.engine.plan import plan as _plan
 
-    p = _plan(program, backend=backend, mesh=mesh, time_tile=time_tile)
+    p = _plan(
+        program, backend=backend, mesh=mesh, time_tile=time_tile, resident=resident
+    )
     if env is None:
         env = {n: f.init_data for n, f in program.fields.items()}
     return execute(p, env)

@@ -1,0 +1,107 @@
+"""Halo-resident field layout: fields stay put, halos move.
+
+The WFA's two-orders-of-magnitude win comes from keeping every field
+resident in PE-local memory for the whole run — only halo cells travel
+(Rocki et al., arXiv:2010.03660).  The engine's analogue is this module:
+instead of rebuilding a padded copy of every field per kernel launch
+(``jnp.pad(mode="wrap")`` on one device, ``halo_pad``'s concatenates under
+``shard_map``), each stenciled field is stored **once** at its run-wide
+padded extent ``(nx + 2K, ny + 2K, nz)``, where ``K`` is the largest halo
+window any scheduled segment needs (``max k·h`` over the plan, computed at
+:func:`repro.engine.plan.plan` time).
+
+Execution then touches memory three ways, none of which repacks a field:
+
+* **enter/exit** — one conversion at each *program boundary* (start and end
+  of one ``execute``), never inside the step loop;
+* **margin refresh** — before a kernel launch reads a depth-``ph`` window,
+  only the four edge *slabs* are rewritten in place
+  (``dynamic_update_slice`` of wrap slabs on one device,
+  :func:`repro.core.halo.halo_refresh`'s ``ppermute`` slabs on a mesh);
+* **in-place outputs** — the fused kernels write back into the resident
+  buffers via ``pl.pallas_call(..., input_output_aliases=...)`` (see
+  :func:`repro.kernels.fused.build_fused_call`), and the executors donate
+  the entry buffers (``jax.jit(..., donate_argnums=...)``), so the step
+  loop allocates nothing per step.
+
+Margin contents are *transient*: they are refreshed to depth ``ph`` right
+before each launch that reads them and are dead in between, so segments
+with different halo depths share one resident buffer safely.
+
+>>> import numpy as np
+>>> lay = HaloLayout(pad=2, shapes={"T": (4, 4, 3)})
+>>> env = {"T": np.arange(48.0, dtype=np.float32).reshape(4, 4, 3)}
+>>> padded = lay.enter(env)
+>>> padded["T"].shape
+(8, 8, 3)
+>>> bool((lay.exit(padded)["T"] == env["T"]).all())
+True
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloLayout:
+    """Resident padded layout of one plan's fields.
+
+    ``pad`` is the run-wide margin ``K`` (0 disables residency — enter and
+    exit degrade to identity).  ``shapes`` records the *global* interior
+    extents the plan was built from, as metadata for introspection only:
+    enter/exit pad and slice whatever env they receive, which under
+    ``shard_map`` is the per-device brick, not these shapes.
+    """
+
+    pad: int
+    shapes: Dict[str, Tuple[int, int, int]]
+
+    def enter(self, env):
+        """Pad every field to the resident extent (margins start zero; they
+        are refreshed before any kernel reads them)."""
+        if self.pad == 0:
+            return dict(env)
+        K = self.pad
+        return {
+            n: jnp.pad(jnp.asarray(v), ((K, K), (K, K), (0, 0)))
+            for n, v in env.items()
+        }
+
+    def exit(self, env):
+        """Slice every field's interior back out of the resident buffers."""
+        if self.pad == 0:
+            return dict(env)
+        K = self.pad
+        return {n: v[K:-K, K:-K, :] for n, v in env.items()}
+
+
+def wrap_refresh(resident, margin: int, h: int):
+    """Refresh the depth-``h`` wrap margin of a resident array in place.
+
+    The single-device analogue of :func:`repro.core.halo.halo_refresh`:
+    reproduces exactly what ``jnp.pad(interior, h, mode="wrap")`` would have
+    built — the periodic margins the roll interpreter's semantics demand —
+    but as four ``dynamic_update_slice`` edge slabs into the standing buffer
+    instead of a fresh padded copy of the whole field.  X slabs come from
+    the interior's edge rows; Y slabs span the x-extended rows so corners
+    wrap in both axes, matching ``jnp.pad``'s corner rule bitwise.
+    """
+    if h == 0:
+        return resident
+    K = margin
+    nx = resident.shape[0] - 2 * K
+    ny = resident.shape[1] - 2 * K
+    upd = jax.lax.dynamic_update_slice
+    lo_x = resident[K + nx - h : K + nx, K : K + ny, :]
+    resident = upd(resident, lo_x, (K - h, K, 0))
+    hi_x = resident[K : K + h, K : K + ny, :]
+    resident = upd(resident, hi_x, (K + nx, K, 0))
+    lo_y = resident[K - h : K + nx + h, K + ny - h : K + ny, :]
+    resident = upd(resident, lo_y, (K - h, K - h, 0))
+    hi_y = resident[K - h : K + nx + h, K : K + h, :]
+    return upd(resident, hi_y, (K - h, K + ny, 0))

@@ -63,12 +63,21 @@ class Segment:
 
 @dataclasses.dataclass
 class ExecutionPlan:
-    """Scheduled execution of one recorded program."""
+    """Scheduled execution of one recorded program.
+
+    ``layout`` is the halo-resident field layout the executor runs under
+    (see :mod:`repro.engine.layout`): fused segments step on buffers padded
+    once to the plan-wide margin ``layout.pad`` (= max ``k·h`` over the
+    fused segments), with enter/exit conversions only at the program
+    boundaries.  ``layout.pad == 0`` (interpreter plans, halo-free bodies,
+    or ``resident=False``) degrades to the repacking path.
+    """
 
     program: Program
     backend: str  # normalized: "numpy" | "jit" | "pallas"
     mesh: Optional[object]
     segments: List[Segment]
+    layout: "HaloLayout" = None
 
     @property
     def mesh_ctx(self) -> Optional[Tuple[int, int, str, str]]:
@@ -93,6 +102,7 @@ def compile_body(
     mesh_ctx: Optional[Tuple[int, int, str, str]] = None,
     time_tile: int = 1,
     group=None,
+    resident: int = 0,
 ) -> Tuple[Callable, bool]:
     """Build one body application ``env -> env`` — THE backend dispatch.
 
@@ -104,6 +114,12 @@ def compile_body(
     (ppermute halo exchange); without, on the global array.  Explicit
     program execution, ``run_sharded`` and the solver's operator/rhs
     applications all obtain their steps here.
+
+    ``resident=K`` (fused paths only) makes the step operate on the
+    halo-resident layout of :mod:`repro.engine.layout`: env buffers carry a
+    standing margin ``K >= time_tile·h``, refreshed in place per launch,
+    with kernel outputs aliased into the same buffers.  Interpreter steps
+    ignore it (the executor converts at segment boundaries).
     """
     stats.bodies_compiled += 1
     if backend == "pallas":
@@ -117,6 +133,7 @@ def compile_body(
                 interpret=_interpret(),
                 time_tile=time_tile,
                 group=group,
+                resident=resident,
             )
         else:
             mx, my, ax_x, ax_y = mesh_ctx
@@ -129,6 +146,7 @@ def compile_body(
                 interpret=_interpret(),
                 time_tile=time_tile,
                 group=group,
+                resident=resident,
             )
         step = try_compile(fn, loop)
         if step is not None:
@@ -268,8 +286,20 @@ def plan(
     backend: str = "jit",
     mesh=None,
     time_tile: Optional[int] = None,
+    resident: bool = True,
 ) -> ExecutionPlan:
-    """Schedule a recorded program: group ops once, pick a strategy per body."""
+    """Schedule a recorded program: group ops once, pick a strategy per body.
+
+    Planning is two-pass so fields can be laid out *halo-resident*: pass one
+    lowers every loop body and picks its tile factor, which fixes the
+    run-wide margin ``K = max k·h``; pass two compiles each body against
+    that layout (margin refresh in place + aliased kernel outputs — see
+    :mod:`repro.engine.layout`).  ``resident=False`` forces the legacy
+    repack-per-launch steps (the bitwise reference the residency tests
+    compare against).
+    """
+    from repro.engine.layout import HaloLayout
+
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
     if backend == "shard_map":
@@ -292,11 +322,9 @@ def plan(
                     f"field {n} shape ({nx},{ny}) not divisible by mesh ({mx},{my})"
                 )
 
-    segments: List[Segment] = []
+    # pass one: lower + pick tile factors; the margin K is their max window
+    scheduled = []
     for loop, ops in _group_ops(program):
-        if backend == "numpy":
-            segments.append(Segment(loop=loop, ops=tuple(ops), kind="eager"))
-            continue
         group = None
         k, reason = 1, ""
         if backend == "pallas":
@@ -308,7 +336,7 @@ def plan(
                 k, reason = _pick_tile(
                     group, loop, time_tile, _brick_xy(program, mesh_ctx, group)
                 )
-        elif time_tile is not None and time_tile != 1:
+        elif backend != "numpy" and time_tile is not None and time_tile != 1:
             # an explicit tile request on an interpreter backend is dropped,
             # not honoured — say so instead of silently running untiled
             reason = (
@@ -316,6 +344,33 @@ def plan(
                 "fused kernels to tile (use backend='pallas')"
             )
             log.warning("%s", reason)
+        scheduled.append((loop, ops, group, k, reason))
+    pad = 0
+    if resident and backend == "pallas":
+        from repro.kernels.ops import _interpret
+
+        # In-place outputs are only safe where the kernel evaluates blocks
+        # functionally (interpret mode, this container's correctness path):
+        # on Mosaic the grid runs sequentially over an aliased HBM buffer,
+        # so a block's halo window would read the in-place outputs of the
+        # neighbouring blocks already executed in the same launch (a
+        # read-after-write Gauss–Seidel contamination).  Until the resident
+        # path double-buffers block outputs on TPU, Mosaic plans keep the
+        # legacy repacking steps — the same documented degradation rule as
+        # the multigrid transfer kernels (engine.plan_mg_levels).
+        if _interpret():
+            pad = max(
+                (k * g.halo for _, _, g, k, _ in scheduled if g is not None),
+                default=0,
+            )
+    layout = HaloLayout(pad=pad, shapes=shapes)
+
+    # pass two: compile each body against the layout
+    segments: List[Segment] = []
+    for loop, ops, group, k, reason in scheduled:
+        if backend == "numpy":
+            segments.append(Segment(loop=loop, ops=tuple(ops), kind="eager"))
+            continue
         step, fused = compile_body(
             ops,
             loop,
@@ -325,6 +380,7 @@ def plan(
             mesh_ctx=mesh_ctx,
             time_tile=k,
             group=group,
+            resident=pad,
         )
         if not fused:
             k = 1
@@ -347,6 +403,7 @@ def plan(
                 mesh_ctx=mesh_ctx,
                 time_tile=1,
                 group=group,
+                resident=pad,
             )
         if reason:
             stats.note_tile_reason(reason)
@@ -360,4 +417,10 @@ def plan(
     stats.max_time_tile = max(
         stats.max_time_tile, max((s.time_tile for s in segments), default=1)
     )
-    return ExecutionPlan(program=program, backend=backend, mesh=mesh, segments=segments)
+    return ExecutionPlan(
+        program=program,
+        backend=backend,
+        mesh=mesh,
+        segments=segments,
+        layout=layout,
+    )

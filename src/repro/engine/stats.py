@@ -40,8 +40,13 @@ class EngineStats:
     segments_interp: int = 0  # loop bodies routed to the roll interpreter
     steps_run: int = 0  # logical time steps executed
     launches: int = 0  # kernel / interpreter-step invocations
-    exchanges: int = 0  # halo exchanges or wrap pads performed
+    exchanges: int = 0  # halo exchanges, wrap pads or margin refreshes
     tiles_fused: int = 0  # k>1 tiled launches (k steps per launch)
+    resident_runs: int = 0  # executions stepping on a halo-resident layout
+    #: full-field pad/copy conversions: one per fused launch on the legacy
+    #: path; on a resident run only the layout enter/exit events (2 for an
+    #: all-fused plan, +2 around each interpreter segment in a mixed plan)
+    repacks: int = 0
     max_time_tile: int = 1  # largest k any segment ran with
     elapsed_s: float = 0.0  # wall time inside execute()
     tile_reasons: Tuple[str, ...] = ()  # why a tile factor was clamped/refused
@@ -77,6 +82,8 @@ def reset_stats() -> None:
     stats.launches = 0
     stats.exchanges = 0
     stats.tiles_fused = 0
+    stats.resident_runs = 0
+    stats.repacks = 0
     stats.max_time_tile = 1
     stats.elapsed_s = 0.0
     stats.tile_reasons = ()

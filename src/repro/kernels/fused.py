@@ -139,7 +139,8 @@ def _fused_body(updates, in_names, written, nz_of, h, k, wrap, bxb, byb,
 def build_fused_call(updates: Sequence, field_specs: Dict[str, Tuple[int, object]],
                      halo: int, bx: int, by: int, nx: int, ny: int,
                      block=(8, 128), interpret: bool = False,
-                     time_tile: int = 1, wrap: bool = False):
+                     time_tile: int = 1, wrap: bool = False,
+                     margin: int = 0):
     """Build the fused kernel for one loop body.
 
     ``updates``     — :class:`repro.compiler.ir.AffineUpdate`s, program order.
@@ -150,11 +151,21 @@ def build_fused_call(updates: Sequence, field_specs: Dict[str, Tuple[int, object
     ``time_tile``   — sub-steps fused per launch (k); inputs carry ``k·halo``
                       margins.  ``wrap`` marks wrap-pad margins (single
                       device) so the per-sub-step Moat mask wraps coordinates.
+    ``margin``      — halo-resident mode: inputs arrive at the *run-wide*
+                      padded extent (bx + 2·margin, by + 2·margin, nz) with
+                      ``margin >= k·halo`` (the engine's
+                      :class:`~repro.engine.layout.HaloLayout`), the kernel
+                      reads its depth-``k·halo`` window from inside that
+                      margin, and every written field is emitted **in place**
+                      into its own input buffer via ``input_output_aliases``
+                      — outputs keep the resident extent and zero new
+                      buffers are allocated on the step path.
 
-    Returns ``call(coords, *padded) -> tuple(new_full_fields)`` where
-    ``padded`` are the (bx + 2·k·halo, by + 2·k·halo, nz) inputs in
-    ``field_specs`` order and the outputs are the written fields' full
-    (bx, by, nz) arrays, in first-written order.
+    Returns ``call(coords, *padded) -> tuple(new_fields)`` where ``padded``
+    are the (bx + 2·k·halo, by + 2·k·halo, nz) inputs (resident extent when
+    ``margin`` is set) in ``field_specs`` order and the outputs are the
+    written fields, in first-written order — full (bx, by, nz) arrays, or
+    the updated resident buffers when ``margin`` is set.
     """
     in_names = list(field_specs)
     written = []
@@ -164,6 +175,8 @@ def build_fused_call(updates: Sequence, field_specs: Dict[str, Tuple[int, object
     nz_of = {n: s[0] for n, s in field_specs.items()}
     h = halo
     k = time_tile
+    if margin and margin < k * h:
+        raise ValueError(f"resident margin {margin} < window halo {k * h}")
     bxb = _pick_block(bx, block[0])
     byb = _pick_block(by, block[1])
     grid = (bx // bxb, by // byb)
@@ -171,16 +184,35 @@ def build_fused_call(updates: Sequence, field_specs: Dict[str, Tuple[int, object
     body = functools.partial(_fused_body, tuple(updates), tuple(in_names),
                              tuple(written), nz_of, h, k, wrap, bxb, byb,
                              nx, ny)
+    # window origin inside the input: the kernel always consumes a
+    # (bxb + 2kh, byb + 2kh) window; with a resident margin that window sits
+    # `margin - kh` cells inside the buffer edge (legacy inputs arrive
+    # already window-aligned — their whole extent IS the padded window).
+    off = margin - k * h if margin else 0
     in_specs = [pl.BlockSpec((1, 2), lambda i, j: (0, 0))]
     for name in in_names:
         nz = nz_of[name]
         in_specs.append(element_block_spec(
             (bxb + 2 * k * h, byb + 2 * k * h, nz),
-            lambda i, j: (i * bxb, j * byb, 0)))
-    out_specs = [pl.BlockSpec((bxb, byb, nz_of[n]), lambda i, j: (i, j, 0))
-                 for n in written]
-    out_shape = [jax.ShapeDtypeStruct((bx, by, nz_of[n]), field_specs[n][1])
-                 for n in written]
+            lambda i, j, off=off: (off + i * bxb, off + j * byb, 0)))
+    if margin:
+        # in-place outputs: each written field aliases its own input buffer
+        # (full resident extent); the grid writes only the interior blocks,
+        # margins keep their pre-launch values (refreshed before each read).
+        out_specs = [element_block_spec(
+            (bxb, byb, nz_of[n]),
+            lambda i, j: (margin + i * bxb, margin + j * byb, 0))
+            for n in written]
+        out_shape = [jax.ShapeDtypeStruct(
+            (bx + 2 * margin, by + 2 * margin, nz_of[n]), field_specs[n][1])
+            for n in written]
+        aliases = {1 + in_names.index(n): o for o, n in enumerate(written)}
+    else:
+        out_specs = [pl.BlockSpec((bxb, byb, nz_of[n]), lambda i, j: (i, j, 0))
+                     for n in written]
+        out_shape = [jax.ShapeDtypeStruct((bx, by, nz_of[n]), field_specs[n][1])
+                     for n in written]
+        aliases = {}
 
     call = pl.pallas_call(
         body,
@@ -188,6 +220,7 @@ def build_fused_call(updates: Sequence, field_specs: Dict[str, Tuple[int, object
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
+        input_output_aliases=aliases,
         interpret=interpret,
     )
 

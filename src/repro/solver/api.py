@@ -314,7 +314,9 @@ def _make_runner(
                 ref2=dot(b, b),
             )
         if method == "cg":
-            return krylov.cg(A, dot, b, x0, tol=tol, maxiter=maxiter, M=M)
+            return krylov.cg(
+                A, dot, b, x0, tol=tol, maxiter=maxiter, M=M, dot2=dot2
+            )
         if method == "pipecg":
             return krylov.pipecg(A, dot2, b, x0, tol=tol, maxiter=maxiter)
         if method == "bicgstab":
@@ -353,20 +355,32 @@ def _make_runner(
 
 
 def _build_step(
-    ops, loop, program: Program, backend: str, mesh_ctx=None
+    ops, loop, program: Program, backend: str, mesh_ctx=None, resident: int = 0
 ) -> Callable:
     """One body application ``env -> env`` through the engine's single
     dispatch point (:func:`repro.engine.compile_body`): fused Pallas kernel
     when ``backend="pallas"`` (interpreter fallback on LoweringError,
     counted in ``repro.compiler.stats``), the shared roll interpreter
-    otherwise; sharded when ``mesh_ctx`` is given."""
+    otherwise; sharded when ``mesh_ctx`` is given.
+
+    ``resident=K`` compiles the application against the engine's
+    halo-resident layout (standing margin-``K`` buffers, in-place refresh +
+    aliased outputs — :mod:`repro.engine.layout`).  The Krylov drivers keep
+    their vectors unpadded — each operator application is a single launch,
+    so the pad it saves is bought back by interior re-slicing in every dot
+    product — but the parameter keeps the solver on the same codegen
+    surface as the explicit executors; the solve-loop allocations are
+    instead eliminated by donating the jitted run's entry buffers
+    (``donate_argnums``) and XLA's in-place ``while_loop`` carries."""
     from repro.engine import compile_body
 
     if backend not in ("jit", "pallas"):
         raise ValueError(f"unknown solver backend {backend!r}")
     shapes = {n: f.shape for n, f in program.fields.items()}
     dtypes = {n: f.dtype for n, f in program.fields.items()}
-    step, _ = compile_body(ops, loop, shapes, dtypes, backend, mesh_ctx=mesh_ctx)
+    step, _ = compile_body(
+        ops, loop, shapes, dtypes, backend, mesh_ctx=mesh_ctx, resident=resident
+    )
     return step
 
 
@@ -468,9 +482,13 @@ def make_solver(
         return jnp.sum(a * b, dtype=jnp.float32)
 
     def dot2(a, b, c, d):
-        if backend == "pallas":
-            from repro.kernels import ops as kops
+        from repro.kernels import ops as kops
 
+        # the fused dual-dot kernel is a Mosaic win (one operand sweep); in
+        # interpret mode (this CPU container) a pallas launch per reduction
+        # only adds overhead — the BENCH_resident run caught PCG paying it
+        # per iteration — so the correctness path keeps the jnp reductions
+        if backend == "pallas" and not kops._interpret():
             part = kops.dual_dot(a, b, c, d)  # one fused operand sweep
             return part[0], part[1]
         return dot(a, b), dot(c, d)
@@ -492,10 +510,15 @@ def make_solver(
         mg=mg,
         M=mg.apply if (mg is not None and precondition == "mg") else None,
     )
-    jitted = jax.jit(run)
+    # donate the state: its buffer seeds the while_loop carry in place (the
+    # rest of the iteration is already allocation-free — XLA aliases the
+    # carry); step_fn hands in a buffer the caller never owned.
+    jitted = jax.jit(run, donate_argnums=0)
 
     def step_fn(x0):
-        return jitted(jnp.asarray(x0), *coefs)
+        from repro.engine.executor import fresh_buffer
+
+        return jitted(fresh_buffer(x0), *coefs)
 
     return step_fn
 
@@ -613,9 +636,10 @@ def make_sharded_solver(
         return _local_dot(a, b), _local_dot(c, d)
 
     def _psum_dot2(a, b, c, d):
-        if backend == "pallas":
-            from repro.kernels import ops as kops
+        from repro.kernels import ops as kops
 
+        # see make_solver's dot2: fused kernel on Mosaic only
+        if backend == "pallas" and not kops._interpret():
             part = kops.dual_dot(a, b, c, d)  # fused local pass
         else:
             part = jnp.stack(
@@ -670,11 +694,14 @@ def make_sharded_solver(
             in_specs=(spec,) * (1 + len(coef_names)),
             out_specs=(spec, (rspec, rspec)),
             check=False,
-        )
+        ),
+        donate_argnums=0,  # the state buffer seeds the Krylov carry in place
     )
 
     def step_fn(x_global):
-        return mapped(x_global, *coefs)
+        from repro.engine.executor import fresh_buffer
+
+        return mapped(jax.device_put(fresh_buffer(x_global), sharding), *coefs)
 
     return step_fn, sharding
 

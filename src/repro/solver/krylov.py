@@ -52,14 +52,21 @@ def cg(
     tol: float = 1e-6,
     maxiter: int = 500,
     M: Callable = None,
+    dot2: Callable = None,
 ):
     """Classic CG.  Two reductions per iteration: (p, Ap) and (r, r) — the
     paper's benchmarked bottleneck.
 
     With a preconditioner ``M`` (symmetric positive definite, e.g. one
-    multigrid cycle from a zero guess) this is standard PCG — one extra
-    reduction (r, z) per iteration, stopping still on the *true* residual
-    norm so iteration counts stay comparable to the plain method.
+    multigrid cycle from a zero guess) this is standard PCG, stopping still
+    on the *true* residual norm so iteration counts stay comparable to the
+    plain method.  The two M-side reductions (r, z) and (r, r) are fused
+    through ``dot2(a, b, c, d) -> (a·b, c·d)`` when the caller provides it
+    (sharded backends: ONE ``psum`` instead of two — the Eq. 16 latency
+    term), falling back to two ``dot`` calls otherwise.  All loop state
+    lives in the ``while_loop`` carry, which XLA buffer-aliases in place —
+    callers donate their entry buffers (``jax.jit(...,
+    donate_argnums=...)``) so the whole iteration is allocation-free.
     """
     if M is None:
         r = b - A(x0)
@@ -85,11 +92,12 @@ def cg(
         x, r, p, rr, i = jax.lax.while_loop(cond, body, (x0, r, p, rr, 0))
         return x, i, jnp.sqrt(rr)
 
+    if dot2 is None:
+        dot2 = lambda a, b_, c, d: (dot(a, b_), dot(c, d))  # noqa: E731
     r = b - A(x0)
     z = M(r)
     p = z
-    rz = dot(r, z)
-    rr = dot(r, r)
+    rz, rr = dot2(r, z, r, r)
 
     def pcond(s):
         x, r, p, rz, rr, i = s
@@ -102,10 +110,10 @@ def cg(
         x = x + alpha * p
         r = r - alpha * Ap
         z = M(r)
-        rz_new = dot(r, z)
+        rz_new, rr_new = dot2(r, z, r, r)  # ONE fused reduction
         beta = rz_new / _nonzero(rz)
         p = z + beta * p
-        return (x, r, p, rz_new, dot(r, r), i + 1)
+        return (x, r, p, rz_new, rr_new, i + 1)
 
     x, r, p, rz, rr, i = jax.lax.while_loop(pcond, pbody, (x0, r, p, rz, rr, 0))
     return x, i, jnp.sqrt(rr)

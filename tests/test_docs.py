@@ -27,6 +27,7 @@ DOCS = sorted((ROOT / "docs").glob("*.md"))
 DOC_MODULES = [
     "repro.core.halo",
     "repro.core.program",
+    "repro.engine.layout",
     "repro.engine.stats",
     "repro.solver.api",
     "repro.solver.frontend",

@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * reduction           — Eq. 17 / §3.2.2 dot-product analysis
   * distributed_model   — Table 1 / Table 2 / Eq. 12 / §5 headline speedups
   * kernels_bench       — Fig. 3 fused-RPC comparison + Pallas kernels
+  * service_throughput  — serving layer: requests/sec, tail latency,
+                          cache-hit rate, fault restore-and-continue
 
 Usage::
 
@@ -35,7 +37,8 @@ import sys
 def main() -> None:
     from benchmarks import (common, distributed_model, explicit_scaling,
                             implicit_scaling, implicit_solve, kernels_bench,
-                            mg_poisson, reduction, time_tiling)
+                            mg_poisson, reduction, service_throughput,
+                            time_tiling)
     from benchmarks.common import RESULTS
 
     mods = {
@@ -47,6 +50,7 @@ def main() -> None:
         "reduction": reduction,
         "distributed_model": distributed_model,
         "kernels_bench": kernels_bench,
+        "service_throughput": service_throughput,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,

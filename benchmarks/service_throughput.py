@@ -1,0 +1,124 @@
+"""Serving-layer throughput: request rate, tail latency, cache hits.
+
+Boots a :class:`repro.service.SimulationService` with a warmed 3-signature
+manifest and replays a concurrent mixed stream, reporting requests/sec,
+p50/p95 request latency and the plan-cache hit rate — the serving analogue
+of the per-kernel rows: after warm-up the stream must run with zero kernel
+compiles (``fallbacks=0`` keeps the CI gate honest).  A second row replays
+a burst on one signature (the scheduler's signature-grouping fast path),
+and a third runs the fault drill: an injected mid-flight fault served
+through checkpoint restore-and-continue, reported by its retry/restore
+counts rather than its wall time.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+from benchmarks.common import KernelStatsSnapshot, emit
+
+SHAPE = (24, 24, 6)
+STEPS = 24
+
+
+def _signatures():
+    from repro.service import PlanSignature
+
+    nx, ny, nz = SHAPE
+    return [
+        PlanSignature("heat3d", (nx, ny, nz)),
+        PlanSignature("advdiff", (nx - 4, ny - 4, nz)),
+        PlanSignature("jacobi3d", (nx - 8, ny - 8, nz), time_tile=2),
+    ]
+
+
+def _drain(tickets):
+    return [t.result(timeout=600) for t in tickets]
+
+
+def _latency_ms(tickets, q: float) -> float:
+    lat = sorted(t.stats.latency_s for t in tickets)
+    return lat[min(len(lat) - 1, int(q * len(lat)))] * 1e3
+
+
+def _stream(svc, sigs, n):
+    from repro.service import StepRequest
+
+    t0 = time.perf_counter()
+    tickets = [
+        svc.submit(StepRequest(sigs[i % len(sigs)], steps=STEPS))
+        for i in range(n)
+    ]
+    _drain(tickets)
+    return tickets, time.perf_counter() - t0
+
+
+def run() -> None:
+    from repro.engine import reset_stats
+    from repro.engine.stats import stats as estats
+    from repro.runtime.fault import FaultInjector
+    from repro.service import SimulationService, StepRequest
+
+    reset_stats()
+    whole_run = KernelStatsSnapshot()
+    sigs = _signatures()
+    ckpt_root = tempfile.mkdtemp(prefix="repro-bench-service-")
+    svc = SimulationService(
+        workers=4, capacity=1024, manifest=sigs, ckpt_root=ckpt_root,
+        default_chunk=STEPS // 3,
+    ).start()
+    try:
+        snap = KernelStatsSnapshot()
+        n = 48
+        tickets, dt = _stream(svc, sigs, n)
+        hits = sum(t.stats.plan_cache_hit for t in tickets)
+        emit(
+            "service_mixed48",
+            dt / n * 1e6,
+            f"rps={n / dt:.1f};p50_ms={_latency_ms(tickets, 0.50):.1f};"
+            f"p95_ms={_latency_ms(tickets, 0.95):.1f};"
+            f"plan_cache_hit_rate={hits / n:.2f};"
+            f"signatures={len(sigs)};steps={STEPS};" + snap.derived(),
+        )
+
+        snap = KernelStatsSnapshot()
+        tickets, dt = _stream(svc, sigs[:1], n)
+        emit(
+            "service_burst_single_sig",
+            dt / n * 1e6,
+            f"rps={n / dt:.1f};p50_ms={_latency_ms(tickets, 0.50):.1f};"
+            f"p95_ms={_latency_ms(tickets, 0.95):.1f};" + snap.derived(),
+        )
+
+        snap = KernelStatsSnapshot()
+        req = StepRequest(sigs[0], steps=STEPS, ckpt_every=STEPS // 3)
+        t0 = time.perf_counter()
+        with FaultInjector(
+            fail_at=[2 * (STEPS // 3)], match_tag=req.request_id
+        ):
+            ticket = svc.submit(req)
+            ticket.result(timeout=600)
+        dt = time.perf_counter() - t0
+        st = ticket.stats
+        emit(
+            "service_fault_restore",
+            dt * 1e6,
+            f"retries={st.retries};restores={st.restores};"
+            f"checkpoints={st.checkpoints};degraded={int(st.degraded)};"
+            + snap.derived(),
+        )
+    finally:
+        svc.stop()
+    # the serving-tier counters end-to-end (requests_completed covers all
+    # three rows; mean queue wait is the scheduler's contribution)
+    emit(
+        "service_counters",
+        0.0,
+        f"completed={estats.requests_completed};"
+        f"retries={estats.request_retries};"
+        f"restores={estats.service_restores};"
+        f"mean_queue_wait_ms="
+        f"{estats.queue_wait_s / max(1, estats.requests_admitted) * 1e3:.1f};"
+        + whole_run.derived(),
+    )

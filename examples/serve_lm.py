@@ -1,4 +1,7 @@
-"""Serving example: batched prefill + decode with a KV cache.
+"""Legacy LM serving example: batched prefill + decode with a KV cache.
+
+Exercises the mesh/sharding launch path only — for serving simulations
+use ``python -m repro.service --smoke`` (see docs/service.md).
 
     PYTHONPATH=src python examples/serve_lm.py --arch qwen3-0.6b \
         --batch 4 --prompt-len 32 --gen 32

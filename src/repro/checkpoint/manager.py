@@ -27,15 +27,36 @@ import numpy as np
 SEP = "/"
 
 
-def _flatten(tree) -> dict:
-    flat = {}
+def _flatten(tree) -> tuple:
+    """(arrays, dtypes): npz-safe arrays + the *original* dtype per key.
+
+    npz has no native bf16 encoding, so bf16 leaves are stored as their
+    exact fp32 upcast — but the original dtype goes into the sidecar
+    metadata so :meth:`CheckpointManager.restore` can cast back.  Without
+    it a restore into a dtype-less target (or a differently-typed one)
+    silently keeps the fp32 widening, and the round trip stops being the
+    identity the caller saved.
+    """
+    flat, dtypes = {}, {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = SEP.join(_path_str(p) for p in path)
         arr = np.asarray(jax.device_get(leaf))
+        dtypes[key] = arr.dtype.name
         if arr.dtype.name == "bfloat16":   # npz has no native bf16 encoding
-            arr = arr.astype(np.float32)
+            arr = arr.astype(np.float32)   # exact: fp32 ⊃ bf16
         flat[key] = arr
-    return flat
+    return flat, dtypes
+
+
+def _lookup_dtype(name: str) -> np.dtype:
+    """Resolve a saved dtype name, including the ml_dtypes extension types
+    numpy cannot name on its own (``bfloat16``)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import jax.numpy as jnp
+
+        return np.dtype(getattr(jnp, name))
 
 
 def _path_str(p) -> str:
@@ -59,8 +80,8 @@ class CheckpointManager:
     def save(self, step: int, tree: Any, *, blocking: bool = True,
              extra: Optional[dict] = None) -> None:
         self.wait()
-        flat = _flatten(tree)          # host snapshot (synchronous, cheap)
-        meta = {"step": int(step), "extra": extra or {}}
+        flat, dtypes = _flatten(tree)  # host snapshot (synchronous, cheap)
+        meta = {"step": int(step), "extra": extra or {}, "dtypes": dtypes}
 
         def write():
             tmp = os.path.join(self.dir, f"tmp-{step}")
@@ -109,21 +130,31 @@ class CheckpointManager:
         ``target`` may hold arrays or ShapeDtypeStructs with ``.sharding`` —
         each loaded leaf is device_put to that sharding (elastic restore).
         Returns (tree, step, extra).
+
+        Each array is first cast back to the dtype it was *saved* with
+        (recorded in the sidecar metadata — bf16 round-trips through its
+        exact fp32 npz encoding), then to the target leaf's dtype; so a
+        bf16 checkpoint restores bitwise into a bf16 target and never
+        smuggles fp32 widening into a dtype-mismatched one.
         """
+        self.wait()  # before listing: an async writer may still be renaming
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        self.wait()
         d = os.path.join(self.dir, f"step-{step:09d}")
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)
         arrays = np.load(os.path.join(d, "arrays.npz"))
+        saved_dtypes = meta.get("dtypes", {})  # absent in pre-fix checkpoints
 
         paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(target)
         out = []
         for path, leaf in paths_leaves:
             key = SEP.join(_path_str(p) for p in path)
             arr = arrays[key]
+            saved = saved_dtypes.get(key)
+            if saved is not None and arr.dtype.name != saved:
+                arr = arr.astype(_lookup_dtype(saved))
             dtype = np.dtype(leaf.dtype)   # bf16 restores via ml_dtypes cast
             if arr.dtype != dtype:
                 arr = arr.astype(dtype)

@@ -39,7 +39,7 @@ from repro.engine.plan import (
     plan,
     plan_mg_levels,
 )
-from repro.engine.stats import EngineStats, reset_stats, stats
+from repro.engine.stats import EngineStats, reset_stats, service_stats, stats
 
 __all__ = [
     "BACKENDS",
@@ -54,6 +54,7 @@ __all__ = [
     "plan_mg_levels",
     "reset_stats",
     "run_program",
+    "service_stats",
     "sharded_runner",
     "single_runner",
     "stats",

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.program import _apply_op
+from repro.engine.hooks import fire_step_hook
 from repro.engine.plan import ExecutionPlan, Segment
 from repro.engine.stats import stats
 
@@ -205,7 +206,13 @@ def _run_sharded(plan: ExecutionPlan, env):
 
 def execute(plan: ExecutionPlan, env: Dict[str, np.ndarray]):
     """Run the plan from ``env`` (name -> (X, Y, Z) array); returns the final
-    env as host NumPy arrays.  Updates :data:`repro.engine.stats`."""
+    env as host NumPy arrays.  Updates :data:`repro.engine.stats`.
+
+    Fires the engine's step hook (:mod:`repro.engine.hooks`) before any
+    state advances, so an installed fault injector interrupts the run where
+    a dead device would — before this execution, after the previous one.
+    """
+    fire_step_hook(stats.steps_run, tag="execute")
     t0 = time.perf_counter()
     if plan.backend == "numpy":
         out = _run_numpy(plan, env)

@@ -1,0 +1,59 @@
+"""Executor + planner instrumentation hooks (fault injection, tracing).
+
+Two optional callbacks the engine consults at its natural failure
+boundaries, so a fault injector (``repro.runtime.fault.FaultInjector``) can
+drive the *real* degradation paths instead of simulating them from outside:
+
+* the **step hook** fires before the engine advances state — once per
+  :func:`repro.engine.execute` call, and once per chunk on the service's
+  chunked stepping path — with a monotonically increasing logical step
+  counter.  Raising makes the run fail exactly where a dead device would
+  (after the previous chunk's checkpoint, before the next one); sleeping
+  models a straggler;
+* the **compile hook** fires inside the compile attempt of
+  :func:`repro.engine.plan.compile_body`'s pallas branch.  Raising
+  :class:`repro.compiler.LoweringError` routes the body through
+  ``try_compile``'s existing catch — counted, logged, interpreter fallback —
+  which is precisely the degraded mode a real Mosaic compile failure takes.
+
+Hooks are process-global (matching the engine's global stats); install and
+remove them through :class:`repro.runtime.fault.FaultInjector`'s context
+manager rather than setting them ad hoc.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+_step_hook: Optional[Callable[[int, str], None]] = None
+_compile_hook: Optional[Callable[[Optional[str]], None]] = None
+
+
+def set_step_hook(fn: Optional[Callable[[int, str], None]]):
+    """Install ``fn(step, tag)`` as the pre-step hook; returns the previous
+    hook so installers can restore it."""
+    global _step_hook
+    prev, _step_hook = _step_hook, fn
+    return prev
+
+
+def set_compile_hook(fn: Optional[Callable[[Optional[str]], None]]):
+    """Install ``fn(loop_name)`` inside the pallas compile attempt; returns
+    the previous hook."""
+    global _compile_hook
+    prev, _compile_hook = _compile_hook, fn
+    return prev
+
+
+def fire_step_hook(step: int, tag: str = "") -> None:
+    """Called by the executor (and the service's chunk loop) before
+    advancing state; exceptions propagate to the caller's retry logic."""
+    if _step_hook is not None:
+        _step_hook(step, tag)
+
+
+def fire_compile_hook(loop_name: Optional[str]) -> None:
+    """Called inside the pallas compile attempt; a raised ``LoweringError``
+    becomes a counted, logged interpreter fallback."""
+    if _compile_hook is not None:
+        _compile_hook(loop_name)

@@ -123,31 +123,43 @@ def compile_body(
     """
     stats.bodies_compiled += 1
     if backend == "pallas":
+        from repro.engine.hooks import fire_compile_hook
         from repro.kernels.ops import _interpret
 
         if mesh_ctx is None:
-            fn = lambda: compile_group(  # noqa: E731
-                ops,
-                shapes,
-                dtypes,
-                interpret=_interpret(),
-                time_tile=time_tile,
-                group=group,
-                resident=resident,
-            )
+
+            def fn():
+                # the hook can raise LoweringError — the injectable stand-in
+                # for a real Mosaic compile failure; try_compile catches it
+                # into the counted, logged interpreter fallback
+                fire_compile_hook(getattr(loop, "name", None))
+                return compile_group(
+                    ops,
+                    shapes,
+                    dtypes,
+                    interpret=_interpret(),
+                    time_tile=time_tile,
+                    group=group,
+                    resident=resident,
+                )
+
         else:
             mx, my, ax_x, ax_y = mesh_ctx
-            fn = lambda: compile_group_sharded(  # noqa: E731
-                ops,
-                shapes,
-                dtypes,
-                mesh_xy=(mx, my),
-                axis_names=(ax_x, ax_y),
-                interpret=_interpret(),
-                time_tile=time_tile,
-                group=group,
-                resident=resident,
-            )
+
+            def fn():
+                fire_compile_hook(getattr(loop, "name", None))
+                return compile_group_sharded(
+                    ops,
+                    shapes,
+                    dtypes,
+                    mesh_xy=(mx, my),
+                    axis_names=(ax_x, ax_y),
+                    interpret=_interpret(),
+                    time_tile=time_tile,
+                    group=group,
+                    resident=resident,
+                )
+
         step = try_compile(fn, loop)
         if step is not None:
             return step, True

@@ -55,6 +55,21 @@ class EngineStats:
     #: (shape, smoother-fused, residual-fused) per level of the last hierarchy
     mg_level_log: Tuple[Tuple[Tuple[int, int, int], bool, bool], ...] = ()
 
+    # -- serving tier (updated by repro.service under its stats lock) -------
+    requests_admitted: int = 0  # requests accepted into the bounded queue
+    requests_rejected: int = 0  # admission-control rejections (queue full)
+    requests_expired: int = 0  # dropped at dispatch: deadline already passed
+    requests_completed: int = 0  # requests that returned a result
+    requests_failed: int = 0  # requests that exhausted their retries
+    requests_degraded: int = 0  # served via the interpreter fallback path
+    request_retries: int = 0  # restore-and-continue attempts across requests
+    plan_builds: int = 0  # service plan-cache misses (compile paid)
+    plan_cache_hits: int = 0  # requests served from a warm plan
+    service_checkpoints: int = 0  # resident-state snapshots written
+    service_restores: int = 0  # checkpoints restored (mid-flight resume)
+    service_stragglers: int = 0  # HeartbeatMonitor flags across workers
+    queue_wait_s: float = 0.0  # summed submit -> dispatch wait
+
     @property
     def exchanges_per_step(self) -> float:
         """Halo exchanges (or wrap pads) per logical time step."""
@@ -90,3 +105,66 @@ def reset_stats() -> None:
     stats.mg_hierarchies = 0
     stats.mg_levels_built = 0
     stats.mg_level_log = ()
+    stats.requests_admitted = 0
+    stats.requests_rejected = 0
+    stats.requests_expired = 0
+    stats.requests_completed = 0
+    stats.requests_failed = 0
+    stats.requests_degraded = 0
+    stats.request_retries = 0
+    stats.plan_builds = 0
+    stats.plan_cache_hits = 0
+    stats.service_checkpoints = 0
+    stats.service_restores = 0
+    stats.service_stragglers = 0
+    stats.queue_wait_s = 0.0
+
+
+def service_stats() -> dict:
+    """Service-level summary the benchmark and CI smoke gate on.
+
+    Combines the serving-tier counters above with the kernel-pipeline
+    counters of :data:`repro.compiler.stats` (the fallback count is the
+    "unexpected interpreter fallbacks" gate on a no-fault run).
+
+    >>> from repro.engine import reset_stats
+    >>> from repro.engine.stats import service_stats
+    >>> reset_stats()
+    >>> s = service_stats()
+    >>> (s["requests"]["completed"], s["plans"]["cache_hits"], s["faults"]["retries"])
+    (0, 0, 0)
+    """
+    from repro.compiler import stats as kstats
+
+    admitted = stats.requests_admitted
+    return {
+        "requests": {
+            "admitted": admitted,
+            "rejected": stats.requests_rejected,
+            "expired": stats.requests_expired,
+            "completed": stats.requests_completed,
+            "failed": stats.requests_failed,
+            "degraded": stats.requests_degraded,
+            "mean_queue_wait_s": (
+                stats.queue_wait_s / admitted if admitted else 0.0
+            ),
+        },
+        "plans": {
+            "builds": stats.plan_builds,
+            "cache_hits": stats.plan_cache_hits,
+        },
+        "kernels": {
+            "built": kstats.kernels_built,
+            "cache_hits": kstats.cache_hits,
+            "fallbacks": kstats.fallbacks,
+            "launches": stats.launches,
+        },
+        "faults": {
+            "retries": stats.request_retries,
+            "checkpoints": stats.service_checkpoints,
+            "restores": stats.service_restores,
+            "stragglers": stats.service_stragglers,
+        },
+        "steps_run": stats.steps_run,
+        "repacks": stats.repacks,
+    }

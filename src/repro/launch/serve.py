@@ -1,6 +1,14 @@
-"""Serving driver: batched prefill + decode over the mesh.
+"""Legacy LM demo: batched prefill + decode over the mesh.
 
-CPU demo:
+This module predates the field-equation focus of the repo — it serves a
+toy transformer, not the PDE stack, and is kept only as a sharding /
+mesh-launch exercise (``examples/serve_lm.py`` smoke-tests it in CI).
+The supported serving path for simulations is ``repro.service``::
+
+    PYTHONPATH=src python -m repro.service --smoke
+
+See ``docs/service.md``.  CPU demo of this legacy driver:
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
         --batch 4 --prompt-len 32 --gen 16
 """

@@ -1,0 +1,59 @@
+"""Simulation-as-a-service: async serving over the unified engine.
+
+Quickstart (the full story is in ``docs/service.md``)::
+
+    from repro.service import (
+        PlanSignature, SimulationService, StepRequest,
+    )
+
+    svc = SimulationService(workers=2).start()
+    sig = PlanSignature("heat3d", (32, 32, 8))
+    ticket = svc.submit(StepRequest(sig, steps=50))
+    field = ticket.result(timeout=60)   # and ticket.stats for observability
+    svc.stop()
+
+Run the end-to-end smoke (mixed signatures, fault injection, degraded
+mode) with ``python -m repro.service --smoke``.
+"""
+
+from repro.engine.stats import service_stats
+from repro.service.requests import (
+    DeadlineExceeded,
+    PlanSignature,
+    RequestFailed,
+    RequestStats,
+    ServiceOverloaded,
+    SolveRequest,
+    StepRequest,
+    Ticket,
+)
+from repro.service.scheduler import SignatureScheduler
+from repro.service.service import SimulationService
+from repro.service.workloads import (
+    WORKLOADS,
+    CompiledWorkload,
+    WorkloadSpec,
+    build_workload,
+    get_workload,
+    register_workload,
+)
+
+__all__ = [
+    "CompiledWorkload",
+    "DeadlineExceeded",
+    "PlanSignature",
+    "RequestFailed",
+    "RequestStats",
+    "ServiceOverloaded",
+    "SignatureScheduler",
+    "SimulationService",
+    "SolveRequest",
+    "StepRequest",
+    "Ticket",
+    "WORKLOADS",
+    "WorkloadSpec",
+    "build_workload",
+    "get_workload",
+    "register_workload",
+    "service_stats",
+]

@@ -1,0 +1,501 @@
+"""The simulation service: async request serving over the unified engine.
+
+``SimulationService`` is the always-on front end the ROADMAP's serving item
+describes: a bounded admission queue feeding a pool of worker threads whose
+plans (and therefore fused-kernel cache entries) are **pre-warmed** from a
+persisted signature manifest, so steady-state requests never pay compile
+latency — the serving-tier analogue of the WFA's amortized ``make_WSE``
+workflow.
+
+Request lifecycle (see ``docs/service.md`` for the narrated version)::
+
+    submit ──admission──▶ queue ──signature group──▶ worker
+                                                       │ plan cache (warm)
+                                                       ▼
+                            chunked resident stepping / Krylov solve
+                              │ checkpoint every ckpt_every steps
+                              │ fault ⇒ restore last snapshot, retry
+                              ▼
+                            ticket resolves (result + RequestStats)
+
+Fault tolerance is layered exactly as :mod:`repro.runtime.fault` frames it:
+the engine's step hook is where injected (or real) faults surface; the
+worker restores the newest resident-state snapshot and continues with
+bounded retries and exponential backoff; a :class:`HeartbeatMonitor` per
+worker flags straggling chunks; and a body whose pallas compile fails is
+served through the *logged* interpreter degraded mode — flagged on every
+ticket it serves, never silent.
+"""
+
+from __future__ import annotations
+
+import json
+import logging
+import os
+import threading
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.engine.hooks import fire_step_hook
+from repro.engine.stats import service_stats as _engine_service_stats
+from repro.engine.stats import stats as estats
+from repro.runtime.fault import HeartbeatMonitor
+from repro.service.requests import (
+    DeadlineExceeded,
+    PlanSignature,
+    RequestFailed,
+    SolveRequest,
+    StepRequest,
+    Ticket,
+)
+from repro.service.scheduler import SignatureScheduler
+from repro.service.workloads import (
+    CompiledWorkload,
+    build_workload,
+    get_workload,
+)
+
+log = logging.getLogger("repro.service")
+
+#: exceptions that retrying cannot fix (bad request, unknown workload)
+_PERMANENT = (ValueError, KeyError, TypeError)
+
+
+class SimulationService:
+    """Async simulation serving over the compile-and-execute engine.
+
+    ``workers`` threads serve signature-grouped requests from a bounded
+    queue (``capacity``); ``manifest`` (a path or an iterable of
+    :class:`PlanSignature`) pre-compiles the hot signatures at
+    :meth:`start`; ``ckpt_root`` hosts per-request resident-state
+    snapshots; ``default_chunk`` is the steps-per-launch granule requests
+    are chunked into when they don't checkpoint.
+
+    >>> svc = SimulationService(workers=1, capacity=8).start()
+    >>> sig = PlanSignature("heat3d", (8, 8, 6))
+    >>> t = svc.submit(StepRequest(sig, steps=4))
+    >>> out = t.result(timeout=120)
+    >>> out.shape, t.stats.retries
+    ((8, 8, 6), 0)
+    >>> svc.stop()
+    """
+
+    def __init__(
+        self,
+        workers: int = 2,
+        capacity: int = 256,
+        group_max: int = 16,
+        manifest: Union[str, Iterable[PlanSignature], None] = None,
+        ckpt_root: Optional[str] = None,
+        default_chunk: int = 8,
+        max_retries: int = 3,
+        backoff_base: float = 0.02,
+        backoff_cap: float = 1.0,
+        straggler_threshold: float = 4.0,
+        mesh=None,
+    ):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1; got {workers}")
+        if default_chunk < 1:
+            raise ValueError(f"default_chunk must be >= 1; got {default_chunk}")
+        self.default_chunk = default_chunk
+        self.max_retries = max_retries
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.straggler_threshold = straggler_threshold
+        self.ckpt_root = ckpt_root
+        self.mesh = mesh
+        self.scheduler = SignatureScheduler(capacity=capacity, group_max=group_max)
+        self._nworkers = workers
+        self._threads: List[threading.Thread] = []
+        self._plans: Dict[str, CompiledWorkload] = {}
+        self._plans_lock = threading.Lock()
+        self._slock = threading.Lock()  # guards the shared engine counters
+        self._manifest_sigs = self._load_manifest(manifest)
+        self._seen: Dict[str, PlanSignature] = {
+            s.key(): s for s in self._manifest_sigs
+        }
+        self._started = False
+        self._t_start: Optional[float] = None
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "SimulationService":
+        """Warm the manifest signatures, then open the worker pool."""
+        if self._started:
+            return self
+        self.warm(self._manifest_sigs)
+        for wid in range(self._nworkers):
+            th = threading.Thread(
+                target=self._worker_loop, args=(wid,),
+                name=f"sim-worker-{wid}", daemon=True,
+            )
+            th.start()
+            self._threads.append(th)
+        self._started = True
+        self._t_start = time.monotonic()
+        return self
+
+    def stop(self, wait: bool = True) -> None:
+        """Close admission and (optionally) drain + join the workers."""
+        self.scheduler.close()
+        if wait:
+            for th in self._threads:
+                th.join()
+        self._threads = []
+        self._started = False
+
+    def __enter__(self) -> "SimulationService":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.stop()
+        return False
+
+    # -- manifest ------------------------------------------------------------
+    @staticmethod
+    def _load_manifest(manifest) -> List[PlanSignature]:
+        if manifest is None:
+            return []
+        if isinstance(manifest, (str, os.PathLike)):
+            if not os.path.exists(manifest):
+                return []
+            with open(manifest) as f:
+                doc = json.load(f)
+            return [PlanSignature.from_json(d) for d in doc["signatures"]]
+        return list(manifest)
+
+    def save_manifest(self, path: str) -> None:
+        """Persist every signature this service has seen (submitted or
+        warmed), so the next instance pre-compiles the same hot set."""
+        doc = {"signatures": [s.to_json() for s in self._seen.values()]}
+        tmp = f"{path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1)
+        os.replace(tmp, path)
+
+    # -- plan cache ----------------------------------------------------------
+    def warm(self, signatures: Sequence[PlanSignature]) -> None:
+        """Pre-compile ``signatures``: build plan + kernels, then trace and
+        run one default-chunk advance (or one solve) so even the XLA
+        executable is hot before the first request lands."""
+        for sig in signatures:
+            cw = self._get_workload(sig, ticket=None)
+            if cw.spec.kind == "step":
+                m = self.default_chunk
+                env = cw.advance(m)(cw.initial_env(None))
+                jax.block_until_ready(list(env.values()))
+            else:
+                x = cw.solver("cg", 1e-6, 200)(
+                    cw.spec.default_init(sig.shape, np.dtype(sig.dtype))
+                )[0]
+                jax.block_until_ready(x)
+            log.info("warmed %s in %.3fs", sig.key(), cw.build_s)
+
+    def _get_workload(self, sig: PlanSignature, ticket: Optional[Ticket]):
+        with self._plans_lock:
+            cw = self._plans.get(sig.key())
+            if cw is not None:
+                with self._slock:
+                    estats.plan_cache_hits += 1
+                if ticket is not None:
+                    ticket.stats.plan_cache_hit = True
+                return cw
+            cw = build_workload(sig, mesh=self.mesh)
+            self._plans[sig.key()] = cw
+        if cw.degraded:
+            log.warning(
+                "signature %s serves DEGRADED via the interpreter: %s",
+                sig.key(), cw.degraded_reason,
+            )
+        if ticket is not None:
+            ticket.stats.compile_s = cw.build_s
+        return cw
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, request: Union[StepRequest, SolveRequest]) -> Ticket:
+        """Admit a request; returns its :class:`Ticket` or raises
+        :class:`~repro.service.requests.ServiceOverloaded` when the bounded
+        queue is full (admission control — shed load at the door)."""
+        get_workload(request.signature.workload)  # unknown name fails here
+        if not self._started:
+            raise RuntimeError("service not started; call start() first")
+        ticket = Ticket(request)
+        try:
+            self.scheduler.submit(ticket)
+        except Exception:
+            with self._slock:
+                estats.requests_rejected += 1
+            raise  # ServiceOverloaded: the bounded queue is full
+        with self._slock:
+            estats.requests_admitted += 1
+        self._seen.setdefault(request.signature.key(), request.signature)
+        return ticket
+
+    # -- workers -------------------------------------------------------------
+    def _worker_loop(self, wid: int) -> None:
+        # one monitor per signature: chunk durations are only comparable
+        # within a compiled workload, and the monitor's start/end pairing
+        # is single-threaded, so monitors live with the worker
+        monitors: Dict[str, HeartbeatMonitor] = {}
+
+        def monitor_for(sig: PlanSignature) -> HeartbeatMonitor:
+            key = sig.key()
+            if key not in monitors:
+                monitors[key] = HeartbeatMonitor(
+                    threshold=self.straggler_threshold,
+                    on_straggler=lambda step, ratio: self._note_straggler(
+                        wid, step, ratio
+                    ),
+                )
+            return monitors[key]
+
+        while True:
+            group = self.scheduler.get_group(timeout=0.25)
+            if not group:
+                if self.scheduler._closed and not len(self.scheduler):
+                    return
+                self._collect_expired()
+                continue
+            for ticket in group:
+                self._serve(ticket, wid, monitor_for(ticket.request.signature))
+            self._collect_expired()
+
+    def _collect_expired(self) -> None:
+        with self._slock:
+            n = len(self.scheduler.expired)
+            if n:
+                estats.requests_expired += n
+                self.scheduler.expired.clear()
+
+    def _note_straggler(self, wid: int, step: int, ratio: float) -> None:
+        with self._slock:
+            estats.service_stragglers += 1
+        log.warning(
+            "worker %d straggling at step %d (%.1fx trailing median)",
+            wid, step, ratio,
+        )
+
+    def _serve(self, ticket: Ticket, wid: int, monitor: HeartbeatMonitor):
+        req = ticket.request
+        st = ticket.stats
+        st.worker = wid
+        st.started_s = time.monotonic()
+        st.queue_wait_s = st.started_s - st.submitted_s
+        with self._slock:
+            estats.queue_wait_s += st.queue_wait_s
+        if (
+            req.deadline_s is not None
+            and st.queue_wait_s > req.deadline_s
+        ):
+            st.finished_s = time.monotonic()
+            with self._slock:
+                estats.requests_expired += 1
+            ticket._fail(
+                DeadlineExceeded(
+                    f"request {req.request_id} expired after "
+                    f"{st.queue_wait_s:.3f}s in queue"
+                )
+            )
+            return
+        try:
+            cw = self._get_workload(req.signature, ticket)
+        except _PERMANENT as e:
+            self._finish_fail(ticket, e)
+            return
+        if cw.degraded:
+            st.degraded = True
+            st.degraded_reason = cw.degraded_reason
+        attempt = 0
+        while True:
+            try:
+                if isinstance(req, StepRequest):
+                    value = self._run_step(cw, req, ticket, monitor)
+                else:
+                    value = self._run_solve(cw, req, ticket)
+                break
+            except _PERMANENT as e:
+                self._finish_fail(ticket, e)
+                return
+            except Exception as e:  # transient: restore-and-continue
+                attempt += 1
+                st.retries += 1
+                with self._slock:
+                    estats.request_retries += 1
+                if attempt > self.max_retries:
+                    self._finish_fail(
+                        ticket,
+                        RequestFailed(
+                            f"request {req.request_id} failed after "
+                            f"{self.max_retries} retries: {e!r}"
+                        ),
+                    )
+                    return
+                backoff = min(
+                    self.backoff_cap, self.backoff_base * (2 ** (attempt - 1))
+                )
+                log.warning(
+                    "request %s attempt %d failed (%r); retrying in %.3fs",
+                    req.request_id, attempt, e, backoff,
+                )
+                time.sleep(backoff)
+        st.finished_s = time.monotonic()
+        st.exec_s = st.finished_s - st.started_s
+        with self._slock:
+            estats.requests_completed += 1
+            if st.degraded:
+                estats.requests_degraded += 1
+        ticket._resolve(value)
+
+    def _finish_fail(self, ticket: Ticket, error: BaseException) -> None:
+        ticket.stats.finished_s = time.monotonic()
+        with self._slock:
+            estats.requests_failed += 1
+        log.error("request %s failed: %s", ticket.request.request_id, error)
+        ticket._fail(error)
+
+    # -- step requests -------------------------------------------------------
+    def _ckpt_manager(self, req: StepRequest) -> Optional[CheckpointManager]:
+        if req.ckpt_every <= 0:
+            return None
+        root = self.ckpt_root or os.path.join(".", "service_ckpt")
+        return CheckpointManager(
+            os.path.join(root, req.ckpt_key or req.request_id), keep=2
+        )
+
+    def _restore_env(self, cw: CompiledWorkload, mgr: CheckpointManager):
+        """Rebuild the chunk-loop state from the newest snapshot: the
+        standing padded buffers (single device) or the sharded global
+        arrays (mesh), plus the step counter they were taken at."""
+        sig = cw.signature
+        pad = 0 if cw.mesh is not None else cw.layout.pad
+        dtype = np.dtype(sig.dtype)
+        target = {}
+        for n, f in cw.program.fields.items():
+            nx, ny, nz = f.shape
+            shape = (nx + 2 * pad, ny + 2 * pad, nz)
+            if cw.mesh is not None:
+                target[n] = jax.ShapeDtypeStruct(
+                    shape, dtype, sharding=cw.sharding()
+                )
+            else:
+                target[n] = jax.ShapeDtypeStruct(shape, dtype)
+        env, step, extra = mgr.restore(target)
+        if extra.get("signature") != sig.key():
+            raise ValueError(
+                f"checkpoint belongs to {extra.get('signature')!r}, "
+                f"not {sig.key()!r}"
+            )
+        return env, int(extra["step"])
+
+    def _run_step(
+        self,
+        cw: CompiledWorkload,
+        req: StepRequest,
+        ticket: Ticket,
+        monitor: HeartbeatMonitor,
+    ) -> np.ndarray:
+        st = ticket.stats
+        mgr = self._ckpt_manager(req)
+        step = 0
+        env = None
+        if mgr is not None and (req.resume or st.retries > 0):
+            if mgr.latest_step() is not None:
+                env, step = self._restore_env(cw, mgr)
+                st.restores += 1
+                with self._slock:
+                    estats.service_restores += 1
+                log.info(
+                    "request %s restored at step %d", req.request_id, step
+                )
+        if env is None:
+            env = cw.initial_env(req.init)
+        chunk = req.ckpt_every if req.ckpt_every > 0 else self.default_chunk
+        # Temporal blocking is tile-boundary sensitive (a k-step fused
+        # launch differs from k untiled launches by ~1 ulp), so chunk
+        # boundaries — and therefore checkpoints — are snapped to
+        # multiples of the tile factor; the launch sequence then matches
+        # an uninterrupted run exactly and resume stays bitwise.
+        seg = cw.segment
+        k = seg.time_tile if seg.kind == "fused" else 1
+        if k > 1:
+            chunk = max(k, (chunk // k) * k)
+        while step < req.steps:
+            m = min(chunk, req.steps - step)
+            # the injectable failure boundary: after the previous chunk's
+            # checkpoint, before this chunk advances any state — inside the
+            # heartbeat window so injected slowdowns read as slow chunks
+            monitor.start_step(step)
+            fire_step_hook(step, tag=req.request_id)
+            env = cw.advance(m)(env)
+            jax.block_until_ready(list(env.values()))
+            monitor.end_step()
+            step += m
+            st.chunks += 1
+            st.steps += m
+            launches, exchanges = cw.chunk_accounting(m)
+            st.launches += launches
+            st.exchanges += exchanges
+            if cw.mesh is not None:
+                st.repacks += 2  # enter/exit per chunk inside shard_map
+            with self._slock:
+                estats.steps_run += m
+                estats.launches += launches
+                estats.exchanges += exchanges
+            if mgr is not None:
+                mgr.save(
+                    step,
+                    env,
+                    extra={
+                        "signature": cw.signature.key(),
+                        "step": step,
+                        "pad": 0 if cw.mesh is not None else cw.layout.pad,
+                    },
+                )
+                st.checkpoints += 1
+                with self._slock:
+                    estats.service_checkpoints += 1
+        if cw.mesh is None and cw.layout.pad > 0:
+            st.repacks += 2  # one enter + one exit per resident request
+            with self._slock:
+                estats.repacks += 2
+                estats.resident_runs += 1
+        return cw.finalize(env)
+
+    # -- solve requests ------------------------------------------------------
+    def _run_solve(
+        self, cw: CompiledWorkload, req: SolveRequest, ticket: Ticket
+    ) -> np.ndarray:
+        fire_step_hook(0, tag=req.request_id)
+        solver = cw.solver(req.method, req.tol, req.maxiter)
+        x0 = (
+            np.asarray(req.init, dtype=req.signature.dtype)
+            if req.init is not None
+            else cw.spec.default_init(
+                req.signature.shape, np.dtype(req.signature.dtype)
+            )
+        )
+        x, (iters, _res) = solver(x0)
+        jax.block_until_ready(x)
+        ticket.stats.iterations = int(np.sum(np.asarray(iters)))
+        ticket.stats.steps = 1
+        return np.asarray(jax.device_get(x))
+
+    # -- observability -------------------------------------------------------
+    def service_stats(self) -> dict:
+        """The service-level summary (see
+        :func:`repro.engine.stats.service_stats`) plus this instance's live
+        state: worker count, queue depth, plan-cache size, uptime."""
+        out = _engine_service_stats()
+        out["service"] = {
+            "workers": self._nworkers,
+            "queue_depth": len(self.scheduler),
+            "plan_cache": sorted(self._plans),
+            "uptime_s": (
+                time.monotonic() - self._t_start if self._t_start else 0.0
+            ),
+        }
+        return out

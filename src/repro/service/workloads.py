@@ -1,0 +1,428 @@
+"""Workload registry + compiled plans for the simulation service.
+
+A *workload* is a named recipe for recording a WFA program at a requested
+``(shape, dtype)`` — the service's analogue of a model architecture in an
+inference server.  A :class:`PlanSignature` names one workload at one
+specialization, and :func:`build_workload` turns it into a
+:class:`CompiledWorkload`: the recorded program, its
+:func:`repro.engine.plan` schedule, the halo-resident layout, and a cache
+of jitted *chunk runners* ``advance(env, m)`` that step resident buffers
+``m`` logical steps per call.
+
+Chunked stepping is what makes serving checkpointable: the service holds
+the standing padded buffers between chunks (single device) and snapshots
+them at chunk boundaries, so a fault between chunks resumes from the last
+snapshot instead of step 0.  Chunking is bitwise-invariant — margins are
+transient (refreshed to the full read depth before every launch), so
+``advance(·, k)`` then ``advance(·, n−k)`` equals ``advance(·, n)`` exactly,
+at every precision (the checkpoint tests pin this at fp64) — with one
+caveat for temporal blocking: a ``k``-step fused launch is ~1 ulp away
+from ``k`` untiled launches, so on tiled plans the invariance holds when
+every chunk boundary lands on a multiple of the tile factor (the service
+snaps its chunk granule accordingly; see ``SimulationService._run_step``).
+
+Registered workloads (three distinct stencil families, so a mixed request
+stream exercises distinct plan signatures):
+
+* ``heat3d``   — the paper's explicit FTCS heat body (7-point, affine);
+* ``advdiff``  — advection–diffusion with off-axis diagonal taps;
+* ``jacobi3d`` — weighted-Jacobi Poisson sweeps against a fixed RHS field
+  (two fields: only the sweep field is written);
+* ``btcs_heat`` — the implicit BTCS system (``Operator``/``Rhs``), served
+  through :func:`repro.solver.api.make_solver` (``SolveRequest`` only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.field import Field
+from repro.core.program import ForLoop, scoped_program
+from repro.engine.plan import plan as build_plan
+from repro.engine.executor import fresh_buffer
+from repro.service.requests import PlanSignature
+
+Shape = Tuple[int, int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """One registered workload: how to record it and how to initialize it."""
+
+    name: str
+    kind: str  # "step" | "solve"
+    record: Callable  # (shape, dtype, n_steps) -> (program, answer_name)
+    default_init: Callable[[Shape, object], np.ndarray]
+    description: str = ""
+
+
+WORKLOADS: Dict[str, WorkloadSpec] = {}
+
+
+def register_workload(spec: WorkloadSpec) -> WorkloadSpec:
+    WORKLOADS[spec.name] = spec
+    return spec
+
+
+def get_workload(name: str) -> WorkloadSpec:
+    if name not in WORKLOADS:
+        raise KeyError(
+            f"unknown workload {name!r}; registered: {sorted(WORKLOADS)}"
+        )
+    return WORKLOADS[name]
+
+
+# ---------------------------------------------------------------------------
+# registered workloads
+# ---------------------------------------------------------------------------
+
+
+def _hot_plate(shape: Shape, dtype) -> np.ndarray:
+    T = np.full(shape, 500.0, dtype)
+    T[1:-1, 1:-1, 0] = 300.0
+    T[1:-1, 1:-1, -1] = 400.0
+    return T
+
+
+def _smooth_noise(shape: Shape, dtype) -> np.ndarray:
+    rng = np.random.default_rng(7)
+    return rng.uniform(0.0, 1.0, size=shape).astype(dtype)
+
+
+def _record_heat3d(shape: Shape, dtype, n_steps: int):
+    c = 0.1
+    center = 1.0 - 6.0 * c
+    with scoped_program() as program:
+        T = Field("T", init_data=_hot_plate(shape, dtype), dtype=dtype)
+        with ForLoop("service_heat", n_steps):
+            T[1:-1, 0, 0] = center * T[1:-1, 0, 0] + c * (
+                T[2:, 0, 0]
+                + T[:-2, 0, 0]
+                + T[1:-1, 1, 0]
+                + T[1:-1, -1, 0]
+                + T[1:-1, 0, 1]
+                + T[1:-1, 0, -1]
+            )
+    return program, "T"
+
+
+def _record_advdiff(shape: Shape, dtype, n_steps: int):
+    with scoped_program() as program:
+        T = Field("T", init_data=_smooth_noise(shape, dtype), dtype=dtype)
+        with ForLoop("service_advdiff", n_steps):
+            T[1:-1, 0, 0] = (
+                T[1:-1, 0, 0]
+                + 0.05
+                * (
+                    T[2:, 0, 0]
+                    + T[:-2, 0, 0]
+                    + T[1:-1, 1, 0]
+                    + T[1:-1, -1, 0]
+                    + T[1:-1, 0, 1]
+                    + T[1:-1, 0, -1]
+                    - 6.0 * T[1:-1, 0, 0]
+                )
+                - 0.1 * (T[1:-1, 0, 0] - T[1:-1, -1, 0])
+                - 0.07 * (T[1:-1, 0, 0] - T[1:-1, 0, -1])
+                + 0.02 * (T[1:-1, 1, 1] + T[1:-1, -1, -1] - 2.0 * T[1:-1, 0, 0])
+            )
+    return program, "T"
+
+
+def _record_jacobi3d(shape: Shape, dtype, n_steps: int):
+    w = 6.0 / 7.0  # weighted-Jacobi damping (the multigrid smoother's omega)
+    with scoped_program() as program:
+        U = Field("U", init_data=np.zeros(shape, dtype), dtype=dtype)
+        F = Field("F", init_data=_smooth_noise(shape, dtype), dtype=dtype)
+        with ForLoop("service_jacobi", n_steps):
+            U[1:-1, 0, 0] = (1.0 - w) * U[1:-1, 0, 0] + (w / 6.0) * (
+                U[2:, 0, 0]
+                + U[:-2, 0, 0]
+                + U[1:-1, 1, 0]
+                + U[1:-1, -1, 0]
+                + U[1:-1, 0, 1]
+                + U[1:-1, 0, -1]
+                - F[1:-1, 0, 0]
+            )
+    return program, "U"
+
+
+def _record_btcs_heat(shape: Shape, dtype, n_steps: int):
+    from repro.solver import Operator, Rhs
+
+    wpsi, psi = 0.05, 0.625
+    with scoped_program() as program:
+        T = Field("T", init_data=_hot_plate(shape, dtype), dtype=dtype)
+        with Operator():
+            T[1:-1, 0, 0] = T[1:-1, 0, 0] - wpsi * (
+                T[2:, 0, 0]
+                + T[:-2, 0, 0]
+                + T[1:-1, 1, 0]
+                + T[1:-1, -1, 0]
+                + T[1:-1, 0, 1]
+                + T[1:-1, 0, -1]
+            )
+        with Rhs():
+            T[1:-1, 0, 0] = psi * T[1:-1, 0, 0]
+    return program, "T"
+
+
+register_workload(
+    WorkloadSpec(
+        "heat3d", "step", _record_heat3d, _hot_plate,
+        "explicit FTCS heat (paper Fig. 3 body)",
+    )
+)
+register_workload(
+    WorkloadSpec(
+        "advdiff", "step", _record_advdiff, _smooth_noise,
+        "advection-diffusion with off-axis taps",
+    )
+)
+register_workload(
+    WorkloadSpec(
+        "jacobi3d", "step", _record_jacobi3d,
+        lambda shape, dtype: np.zeros(shape, dtype),
+        "weighted-Jacobi Poisson sweeps against a fixed RHS field",
+    )
+)
+register_workload(
+    WorkloadSpec(
+        "btcs_heat", "solve", _record_btcs_heat, _hot_plate,
+        "implicit BTCS heat system (Operator/Rhs, Krylov solve)",
+    )
+)
+
+
+# ---------------------------------------------------------------------------
+# compiled workloads
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CompiledWorkload:
+    """One signature's compiled execution state, shared by every request.
+
+    ``plan``/``layout`` come straight from the engine planner; ``advance``
+    runners are built lazily per chunk length and memoized, so steady-state
+    chunk sizes are traced exactly once per signature.  ``degraded`` is set
+    when the pallas backend fell back to the interpreter (forced compile
+    failure, non-lowerable body) — requests served through it are counted
+    and flagged, never silent.
+    """
+
+    signature: PlanSignature
+    spec: WorkloadSpec
+    program: object
+    answer: str
+    plan: Optional[object] = None  # ExecutionPlan (step workloads)
+    mesh: Optional[object] = None
+    build_s: float = 0.0
+    degraded: bool = False
+    degraded_reason: str = ""
+    _advance: Dict[int, Callable] = dataclasses.field(default_factory=dict)
+    _solvers: Dict[tuple, Callable] = dataclasses.field(default_factory=dict)
+    _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+
+    # -- step workloads ------------------------------------------------------
+    @property
+    def layout(self):
+        return self.plan.layout
+
+    @property
+    def segment(self):
+        return self.plan.segments[0]
+
+    def field_names(self):
+        return list(self.program.fields)
+
+    def initial_env(self, init: Optional[np.ndarray]) -> dict:
+        """Fresh device env (resident form on a single device)."""
+        env = {
+            n: fresh_buffer(f.init_data) for n, f in self.program.fields.items()
+        }
+        if init is not None:
+            env[self.answer] = fresh_buffer(
+                np.asarray(init, dtype=self.signature.dtype)
+            )
+        if self.mesh is None:
+            env = self.layout.enter(env)
+        else:
+            sharding = self.sharding()
+            env = {n: jax.device_put(v, sharding) for n, v in env.items()}
+        return env
+
+    def finalize(self, env: dict) -> np.ndarray:
+        """Answer field back on the host (interior slice on a single device)."""
+        if self.mesh is None:
+            env = self.layout.exit(env)
+        return np.asarray(jax.device_get(env[self.answer]))
+
+    def advance(self, m: int) -> Callable:
+        """The jitted chunk runner for ``m`` logical steps (memoized).
+
+        Single device: steps the *resident padded* env in place (entry
+        donated — zero allocation in steady state).  Mesh: steps the global
+        unpadded env under ``shard_map`` (enter/exit per chunk, per brick).
+        """
+        with self._lock:
+            hit = self._advance.get(m)
+            if hit is not None:
+                return hit
+            fn = (
+                self._advance_single(m)
+                if self.mesh is None
+                else self._advance_sharded(m)
+            )
+            self._advance[m] = fn
+            return fn
+
+    def _trace_chunk(self, env: dict, m: int) -> dict:
+        seg = self.segment
+        k = seg.time_tile if seg.kind == "fused" else 1
+        if k > 1:
+            env = jax.lax.fori_loop(0, m // k, lambda i, e: seg.step(e), env)
+            if m % k:
+                # the planner compiled step_rem because the workload's
+                # nominal trip count is k+1 (see build_workload)
+                env = jax.lax.fori_loop(
+                    0, m % k, lambda i, e: seg.step_rem(e), env
+                )
+            return env
+        return jax.lax.fori_loop(0, m, lambda i, e: seg.step(e), env)
+
+    def _advance_single(self, m: int) -> Callable:
+        def run(env):
+            return self._trace_chunk(env, m)
+
+        return jax.jit(run, donate_argnums=0)
+
+    def _advance_sharded(self, m: int) -> Callable:
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.jaxcompat import shard_map
+
+        mesh = self.mesh
+        _, _, ax_x, ax_y = self.plan.mesh_ctx
+        spec = P(ax_x, ax_y, None)
+        specs = {n: spec for n in self.program.fields}
+        layout = self.layout
+
+        def local(env):
+            return layout.exit(self._trace_chunk(layout.enter(env), m))
+
+        return jax.jit(
+            shard_map(
+                local, mesh=mesh, in_specs=(specs,), out_specs=specs,
+                check=False,
+            ),
+            donate_argnums=0,
+        )
+
+    def sharding(self):
+        from jax.sharding import PartitionSpec as P
+
+        _, _, ax_x, ax_y = self.plan.mesh_ctx
+        return jax.sharding.NamedSharding(self.mesh, P(ax_x, ax_y, None))
+
+    def chunk_accounting(self, m: int) -> Tuple[int, int]:
+        """Static (launches, exchanges) one ``m``-step chunk pays."""
+        seg = self.segment
+        if seg.kind != "fused":
+            launches = m
+            exchanges = m * len(seg.ops) if self.mesh is not None else 0
+            return launches, exchanges
+        k = seg.time_tile
+        launches = (m // k) + (m % k) if k > 1 else m
+        return launches, launches if seg.halo > 0 else 0
+
+    # -- solve workloads -----------------------------------------------------
+    def solver(self, method: str, tol: float, maxiter: int) -> Callable:
+        """Memoized jitted solver ``x0 -> (x, (iters, res))`` per request
+        parameters (the operator kernel itself is shared via the global
+        kernel cache, so new parameter combinations reuse it)."""
+        key = (method, float(tol), int(maxiter))
+        with self._lock:
+            hit = self._solvers.get(key)
+            if hit is not None:
+                return hit
+            from repro.solver.api import make_solver
+
+            fn = make_solver(
+                self.program,
+                self.answer,
+                method=method,
+                backend=self.signature.backend,
+                tol=tol,
+                maxiter=maxiter,
+            )
+            self._solvers[key] = fn
+            return fn
+
+
+def build_workload(
+    signature: PlanSignature, mesh=None
+) -> CompiledWorkload:
+    """Record + plan one signature (the service's plan-cache miss path).
+
+    Step workloads are recorded with a nominal trip count of
+    ``time_tile + 1`` so the planner compiles both the tiled step and the
+    untiled remainder step — the chunk runners can then advance *any* step
+    count, not just multiples of the tile factor.  Raises ``ValueError``
+    for solve workloads on a mesh (served single-device for now) and for
+    multi-loop programs (chunked checkpointing needs one loop body).
+    """
+    from repro.compiler import stats as kstats
+    from repro.engine.stats import stats as estats
+
+    spec = get_workload(signature.workload)
+    t0 = time.perf_counter()
+    nominal = signature.time_tile + 1 if signature.time_tile > 1 else 2
+    program, answer = spec.record(
+        signature.shape, np.dtype(signature.dtype), nominal
+    )
+    cw = CompiledWorkload(
+        signature=signature, spec=spec, program=program, answer=answer,
+        mesh=mesh,
+    )
+    fallbacks_before = kstats.fallbacks
+    if spec.kind == "step":
+        cw.plan = build_plan(
+            program,
+            backend=signature.backend,
+            mesh=mesh,
+            time_tile=signature.time_tile,
+        )
+        if len(cw.plan.segments) != 1:
+            raise ValueError(
+                f"workload {spec.name!r} records {len(cw.plan.segments)} "
+                "loop bodies; the service's chunked stepping needs exactly 1"
+            )
+        seg = cw.plan.segments[0]
+        if signature.backend == "pallas" and seg.kind != "fused":
+            cw.degraded = True
+            cw.degraded_reason = (
+                kstats.fallback_reasons[-1]
+                if kstats.fallbacks > fallbacks_before
+                else "body not fused"
+            )
+    else:
+        if mesh is not None:
+            raise ValueError(
+                f"solve workload {spec.name!r} is served single-device; "
+                "submit without a mesh"
+            )
+        # build the default solver now so warm-up pays the operator compile
+        cw.solver("cg", 1e-6, 200)
+        if kstats.fallbacks > fallbacks_before:
+            cw.degraded = True
+            cw.degraded_reason = kstats.fallback_reasons[-1]
+    cw.build_s = time.perf_counter() - t0
+    estats.plan_builds += 1
+    return cw

@@ -1,0 +1,234 @@
+"""Checkpoint/restore: dtype-exact round trips + bitwise resume.
+
+Two acceptance surfaces:
+
+* the manager round-trips every dtype exactly — in particular bf16, which
+  npz cannot store natively: it travels as its exact fp32 upcast with the
+  original dtype in the sidecar metadata, so a bf16 target restores bitwise
+  and a dtype-less target no longer keeps the silent fp32 widening;
+* interrupted simulation equals uninterrupted simulation **bitwise**: run k
+  steps with checkpointing, kill the service, restore in a fresh service
+  instance and run the remaining n−k — identical to n straight steps (fp32
+  in-process; fp64 and the sharded mesh in subprocesses).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from test_residency import run_py
+
+
+# -- manager basics -----------------------------------------------------------
+
+
+def test_save_restore_roundtrip_and_retention(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {
+        "field": rng.normal(size=(6, 5, 4)).astype(np.float32),
+        "nested": {"z": np.arange(10, dtype=np.int32)},
+    }
+    for step in (2, 4, 6):
+        mgr.save(step, tree, extra={"tag": step})
+    assert mgr.steps() == [4, 6]  # keep=2 dropped step 2
+    assert mgr.latest_step() == 6
+    out, step, extra = mgr.restore(tree)
+    assert step == 6 and extra == {"tag": 6}
+    assert (np.asarray(out["field"]) == tree["field"]).all()
+    assert np.asarray(out["nested"]["z"]).dtype == np.int32
+
+
+def test_bf16_roundtrip_is_bitwise(tmp_path, rng):
+    """The satellite fix: bf16 leaves restore bit-for-bit into a bf16
+    target instead of coming back as their fp32 npz encoding."""
+    x = rng.normal(size=(8, 6)).astype(np.float32)
+    tree = {"p": jnp.asarray(x, dtype=jnp.bfloat16)}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    target = {"p": jax.ShapeDtypeStruct((8, 6), jnp.bfloat16)}
+    out, _, _ = mgr.restore(target)
+    assert out["p"].dtype == jnp.bfloat16
+    assert (
+        np.asarray(out["p"]).view(np.uint16)
+        == np.asarray(tree["p"]).view(np.uint16)
+    ).all()
+
+
+def test_bf16_dtype_recorded_in_sidecar(tmp_path):
+    tree = {"p": jnp.ones((3,), jnp.bfloat16), "q": jnp.ones((3,), jnp.float32)}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, tree)
+    with open(os.path.join(str(tmp_path), "step-000000005", "meta.json")) as f:
+        meta = json.load(f)
+    assert meta["dtypes"] == {"p": "bfloat16", "q": "float32"}
+
+
+def test_bf16_restore_into_fp32_target_has_no_extra_precision(tmp_path, rng):
+    """A widening restore must go bf16 -> fp32 (exact), not keep the raw
+    fp32 npz payload as if the checkpoint had fp32 precision."""
+    x = rng.normal(size=(16,)).astype(np.float32)
+    tree = {"p": jnp.asarray(x, dtype=jnp.bfloat16)}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    out, _, _ = mgr.restore({"p": jax.ShapeDtypeStruct((16,), np.float32)})
+    assert out["p"].dtype == np.float32
+    ref = np.asarray(tree["p"]).astype(np.float32)  # exact upcast
+    assert (np.asarray(out["p"]) == ref).all()
+
+
+def test_async_save_then_restore(tmp_path, rng):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"a": rng.normal(size=(32,)).astype(np.float32)}
+    mgr.save(3, tree, blocking=False)
+    out, step, _ = mgr.restore(tree)  # restore() waits for the writer
+    assert step == 3
+    assert (np.asarray(out["a"]) == tree["a"]).all()
+
+
+def test_restore_empty_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        CheckpointManager(str(tmp_path)).restore({})
+
+
+# -- interrupted == uninterrupted (service level) -----------------------------
+
+
+def _serve_steps(svc, sig, steps, **kw):
+    from repro.service import StepRequest
+
+    return svc.submit(StepRequest(sig, steps=steps, **kw)).result(timeout=300)
+
+
+def test_kill_restore_continue_is_bitwise_fp32(tmp_path):
+    """k steps + checkpoint + service death + restore + (n-k) steps must
+    equal n uninterrupted steps exactly — chunking, checkpointing and the
+    restore path may not perturb a single bit."""
+    from repro.service import PlanSignature, SimulationService, StepRequest
+
+    sig = PlanSignature("heat3d", (12, 10, 6))
+    n, k = 11, 4
+
+    svc = SimulationService(
+        workers=1, ckpt_root=str(tmp_path), default_chunk=3
+    ).start()
+    try:
+        ref = _serve_steps(svc, sig, n)  # uninterrupted
+        # phase 1: run only k steps, checkpointing under a stable key
+        t = svc.submit(
+            StepRequest(sig, steps=k, ckpt_every=2, ckpt_key="run")
+        )
+        t.result(timeout=300)
+        assert t.stats.checkpoints == 2
+    finally:
+        svc.stop()  # the "kill": worker pool and plan cache are gone
+
+    svc2 = SimulationService(
+        workers=1, ckpt_root=str(tmp_path), default_chunk=3
+    ).start()
+    try:
+        t = svc2.submit(
+            StepRequest(
+                sig, steps=n, ckpt_every=2, ckpt_key="run", resume=True
+            )
+        )
+        out = t.result(timeout=300)
+        assert t.stats.restores == 1
+        assert t.stats.steps == n - k  # only the remainder was re-run
+    finally:
+        svc2.stop()
+    assert out.dtype == ref.dtype
+    assert (out == ref).all()
+
+
+def test_restore_rejects_signature_mismatch(tmp_path):
+    from repro.service import PlanSignature, SimulationService, StepRequest
+
+    sig_a = PlanSignature("heat3d", (10, 10, 4))
+    sig_b = PlanSignature("advdiff", (10, 10, 4))
+    svc = SimulationService(workers=1, ckpt_root=str(tmp_path)).start()
+    try:
+        svc.submit(
+            StepRequest(sig_a, steps=2, ckpt_every=2, ckpt_key="shared")
+        ).result(timeout=300)
+        t = svc.submit(
+            StepRequest(
+                sig_b, steps=4, ckpt_every=2, ckpt_key="shared", resume=True
+            )
+        )
+        with pytest.raises(ValueError, match="checkpoint belongs to"):
+            t.result(timeout=300)
+    finally:
+        svc.stop()
+
+
+# -- fp64 + sharded variants (subprocesses) -----------------------------------
+
+SERVICE_HELPERS = """
+import numpy as np
+from repro.service import PlanSignature, SimulationService, StepRequest
+
+def serve(svc, sig, steps, **kw):
+    t = svc.submit(StepRequest(sig, steps=steps, **kw))
+    out = t.result(timeout=300)
+    return out, t.stats
+"""
+
+
+def test_kill_restore_continue_is_bitwise_fp64(tmp_path):
+    out = run_py(SERVICE_HELPERS + f"""
+root = {str(tmp_path)!r}
+# time_tile=2: the service snaps chunk/checkpoint boundaries to tile
+# multiples, so the kill point (6) sits on a tile boundary and the launch
+# sequence matches the uninterrupted run exactly
+sig = PlanSignature("advdiff", (10, 12, 6), dtype="float64", time_tile=2)
+n, k = 13, 6
+
+svc = SimulationService(workers=1, ckpt_root=root, default_chunk=4).start()
+ref, _ = serve(svc, sig, n)
+assert ref.dtype == np.float64, ref.dtype
+serve(svc, sig, k, ckpt_every=3, ckpt_key="run")  # granule snaps 3 -> 2
+svc.stop()
+
+svc = SimulationService(workers=1, ckpt_root=root, default_chunk=4).start()
+out, st = serve(svc, sig, n, ckpt_every=3, ckpt_key="run", resume=True)
+svc.stop()
+assert st.restores == 1 and st.steps == n - k, vars(st)
+assert (out == ref).all()
+print("OK")
+""", x64=True)
+    assert "OK" in out
+
+
+def test_kill_restore_continue_is_bitwise_sharded(tmp_path):
+    out = run_py(SERVICE_HELPERS + f"""
+from repro.core.jaxcompat import make_mesh
+
+root = {str(tmp_path)!r}
+mesh = make_mesh((2, 2), ("x", "y"))
+sig = PlanSignature("heat3d", (12, 12, 6), dtype="float64")
+n, k = 10, 4
+
+svc = SimulationService(workers=1, ckpt_root=root, mesh=mesh).start()
+ref, _ = serve(svc, sig, n)
+serve(svc, sig, k, ckpt_every=2, ckpt_key="run")
+svc.stop()
+
+svc = SimulationService(workers=1, ckpt_root=root, mesh=mesh).start()
+out, st = serve(svc, sig, n, ckpt_every=2, ckpt_key="run", resume=True)
+svc.stop()
+assert st.restores == 1 and st.steps == n - k, vars(st)
+assert (out == ref).all()
+
+# and the sharded stream equals the single-device stream bitwise
+svc = SimulationService(workers=1, ckpt_root=root).start()
+single, _ = serve(svc, sig, n)
+svc.stop()
+assert (single == ref).all()
+print("OK")
+""", devices=4, x64=True)
+    assert "OK" in out

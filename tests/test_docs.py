@@ -29,6 +29,7 @@ DOC_MODULES = [
     "repro.core.program",
     "repro.engine.layout",
     "repro.engine.stats",
+    "repro.service.service",
     "repro.solver.api",
     "repro.solver.frontend",
     "repro.solver.multigrid",
@@ -44,6 +45,7 @@ def test_docs_tree_exists():
         "solvers.md",
         "time_tiling.md",
         "benchmarks.md",
+        "service.md",
     }
     assert required <= names, f"missing docs pages: {required - names}"
 

@@ -1,0 +1,235 @@
+"""Fault-tolerance primitives: heartbeat, resilient loop, injector, remesh.
+
+Pins the behaviors the serving layer leans on: the straggler threshold is a
+strict boundary (exactly ``threshold × median`` does not flag), the
+resilient loop's failure budget resets on success and restores before
+re-raising, the fault injector fires each armed fault exactly once (so a
+retry makes progress) and restores the previous hooks on exit, and a
+1-device remesh round-trips state bitwise.
+"""
+
+import numpy as np
+import pytest
+
+from repro.compiler import LoweringError
+from repro.engine import hooks
+from repro.runtime.elastic import remesh, shrink_plan
+from repro.runtime.fault import (
+    FaultInjector,
+    HeartbeatMonitor,
+    InjectedFault,
+    ResilientLoop,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# -- HeartbeatMonitor ---------------------------------------------------------
+
+
+def _run_steps(mon, clock, durations):
+    for i, dt in enumerate(durations):
+        mon.start_step(i)
+        clock.advance(dt)
+        mon.end_step()
+
+
+def test_heartbeat_threshold_is_a_strict_boundary():
+    clock = FakeClock()
+    flags = []
+    mon = HeartbeatMonitor(
+        threshold=3.0, on_straggler=lambda s, r: flags.append((s, r)),
+        clock=clock,
+    )
+    # history of 1.0s steps, then exactly 3.0x the median: NOT flagged
+    _run_steps(mon, clock, [1.0, 1.0, 1.0, 3.0])
+    assert mon.flagged == [] and flags == []
+    # strictly above the boundary: flagged, with the ratio reported
+    mon.start_step(4)
+    clock.advance(3.5)
+    mon.end_step()
+    assert mon.flagged == [4]
+    assert flags == [(4, pytest.approx(3.5))]
+
+
+def test_heartbeat_first_step_never_flags():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(threshold=1.01, clock=clock)
+    _run_steps(mon, clock, [1000.0])  # no history yet -> no median to trail
+    assert mon.flagged == []
+
+
+def test_heartbeat_median_window_slides():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(threshold=2.0, window=4, clock=clock)
+    # slow history ages out of the window; a 1.0s step against a 0.1s
+    # recent median is a straggler even though the *global* median is not
+    _run_steps(mon, clock, [5.0, 5.0, 5.0, 5.0, 0.1, 0.1, 0.1, 0.1])
+    assert mon.flagged == []
+    mon.start_step(8)
+    clock.advance(1.0)
+    mon.end_step()
+    assert mon.flagged == [8]
+
+
+def test_heartbeat_end_without_start_is_a_noop():
+    mon = HeartbeatMonitor(clock=FakeClock())
+    mon.end_step()
+    assert mon.durations == []
+
+
+# -- ResilientLoop ------------------------------------------------------------
+
+
+class _Dataset:
+    def next_batch(self):
+        return None
+
+
+def _resilient(step_fn, max_failures=3, ckpt_every=2):
+    saves = []
+    restores = []
+
+    def save_fn(step, state):
+        saves.append((step, state))
+
+    def restore_fn():
+        restores.append(True)
+        return (saves[-1][1], saves[-1][0]) if saves else (0, 0)
+
+    loop = ResilientLoop(
+        step_fn, save_fn, restore_fn, _Dataset(),
+        ckpt_every=ckpt_every, max_failures=max_failures,
+    )
+    return loop, saves, restores
+
+
+def test_resilient_loop_restores_and_continues():
+    calls = []
+
+    def step_fn(state, batch):
+        calls.append(state)
+        if state == 3 and calls.count(3) == 1:  # fail once at step 3
+            raise RuntimeError("injected")
+        return state + 1, {"loss": state}
+
+    loop, saves, restores = _resilient(step_fn)
+    state, step, metrics = loop.run(0, 0, 6)
+    assert (state, step) == (6, 6)
+    assert restores == [True]  # exactly one restore for one failure
+    assert saves[0][0] == 2  # checkpointed before the failure
+    assert loop.failures == 0  # success reset the consecutive-failure count
+
+
+def test_resilient_loop_failure_budget_resets_on_success():
+    """2 failures, success, 2 failures stays under max_failures=2 because
+    the counter is *consecutive*; 3 in a row without progress raises."""
+    script = iter([False, True, True, False, True, True, False])
+
+    def step_fn(state, batch):
+        if next(script, False):
+            raise RuntimeError("flaky")
+        return state + 1, None
+
+    loop, _, _ = _resilient(step_fn, max_failures=2, ckpt_every=1)
+    state, step, _ = loop.run(0, 0, 3)
+    assert (state, step) == (3, 3)
+
+    def always_fail(state, batch):
+        raise RuntimeError("dead")
+
+    loop, _, _ = _resilient(always_fail, max_failures=2, ckpt_every=1)
+    with pytest.raises(RuntimeError, match="dead"):
+        loop.run(0, 0, 1)
+    assert loop.failures == 3  # max_failures consecutive, then the raise
+
+
+# -- FaultInjector ------------------------------------------------------------
+
+
+def test_injector_step_fault_fires_exactly_once():
+    with FaultInjector(fail_at=[2]) as inj:
+        hooks.fire_step_hook(0)
+        hooks.fire_step_hook(1)
+        with pytest.raises(InjectedFault):
+            hooks.fire_step_hook(2)
+        hooks.fire_step_hook(2)  # the retry: armed step already consumed
+    assert inj.fired == [("step", 2, "")]
+
+
+def test_injector_match_tag_scopes_the_fault():
+    with FaultInjector(fail_at=[0], match_tag="victim") as inj:
+        hooks.fire_step_hook(0, tag="bystander")
+        with pytest.raises(InjectedFault):
+            hooks.fire_step_hook(0, tag="victim")
+    assert inj.fired == [("step", 0, "victim")]
+
+
+def test_injector_compile_fault_raises_lowering_error_once():
+    with FaultInjector(fail_compile=["body"]) as inj:
+        hooks.fire_compile_hook("other")  # not armed
+        with pytest.raises(LoweringError, match="injected compile failure"):
+            hooks.fire_compile_hook("body")
+        hooks.fire_compile_hook("body")  # consumed
+    assert inj.fired == [("compile", "body")]
+
+
+def test_injector_restores_previous_hooks():
+    seen = []
+    prev = hooks.set_step_hook(lambda step, tag="": seen.append(step))
+    try:
+        with FaultInjector(fail_at=[99]):
+            pass
+        hooks.fire_step_hook(7)
+        assert seen == [7]  # the pre-injector hook is back
+    finally:
+        hooks.set_step_hook(prev)
+
+
+def test_injector_slowdown_is_recorded():
+    with FaultInjector(slow_at={1: 0.0}) as inj:
+        hooks.fire_step_hook(1)
+        hooks.fire_step_hook(1)  # consumed: no second record
+    assert inj.fired == [("slow", 1, "")]
+
+
+# -- elastic remesh -----------------------------------------------------------
+
+
+def test_remesh_roundtrip_on_single_device_mesh(rng):
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.jaxcompat import make_mesh
+
+    mesh = make_mesh((1, 1), ("data", "model"))
+    tree = {
+        "w": rng.normal(size=(4, 6)).astype(np.float32),
+        "b": rng.normal(size=(6,)).astype(np.float32),
+    }
+    specs = {"w": P("data", "model"), "b": P(None)}
+    placed = remesh(tree, specs, mesh)
+    again = remesh(placed, specs, mesh)  # remesh of a remesh: still exact
+    for k, v in tree.items():
+        assert (np.asarray(jax.device_get(again[k])) == v).all()
+        assert placed[k].sharding.mesh.shape == mesh.shape
+
+
+def test_shrink_plan_preserves_global_batch_semantics():
+    plan = shrink_plan(
+        old_dp=8, new_dp=4, global_batch=64, num_microbatches=2
+    )
+    # option A: same tokens/step via more microbatches
+    assert plan["keep_global_batch"]["num_microbatches"] == 4
+    # option B: smaller global batch with the LR rescale factor
+    assert plan["keep_microbatches"]["global_batch"] == 32
+    assert plan["keep_microbatches"]["lr_scale"] == pytest.approx(0.5)

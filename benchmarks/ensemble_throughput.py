@@ -1,0 +1,100 @@
+"""Ensemble throughput: members/sec vs batch width through the service.
+
+The batched-execution PR's headline measurement: 64 identical scenario
+requests served at micro-batch widths B ∈ {1, 8, 64}.  At B=1 every member
+pays the full per-request cost (dispatch, env build, finalize, ticket
+bookkeeping) around a tiny stencil workload; coalescing B members into one
+batched plan pays those costs once per *launch*, so members/sec must rise
+steeply — the acceptance gate requires **B=64 ≥ 5× B=1** on this container.
+
+Compile discipline is gated too: the three batch widths are three plan
+signatures, each warmed exactly once from the manifest; the measured
+streams must then run with **zero** new fused-kernel compiles and zero
+interpreter fallbacks (``fallbacks=0`` keeps the CI smoke honest).
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import KernelStatsSnapshot, emit
+
+SHAPE = (8, 8, 4)
+STEPS = 8
+TOTAL = 64  # members per measured stream, at every width
+WIDTHS = (1, 8, 64)
+REPEATS = 3
+SPEEDUP_GATE = 5.0
+
+
+def _stream(svc, sig, n):
+    from repro.service import StepRequest
+
+    tickets = [svc.submit(StepRequest(sig, steps=STEPS)) for _ in range(n)]
+    for t in tickets:
+        t.result(timeout=600)
+    return tickets
+
+
+def _measure(width: int) -> tuple:
+    """Best-of members/sec serving TOTAL members at micro-batch ``width``."""
+    from repro.service import PlanSignature, SimulationService
+
+    sig = PlanSignature("heat3d", SHAPE)
+    warm_sig = sig if width == 1 else PlanSignature("heat3d", SHAPE, batch=width)
+    build = KernelStatsSnapshot()
+    svc = SimulationService(
+        workers=1,
+        capacity=4 * TOTAL,
+        group_max=max(16, width),
+        micro_batch=width,
+        manifest=[warm_sig],
+    ).start()
+    try:
+        _stream(svc, sig, TOTAL)  # warm-up stream (jit executables get hot)
+        compiles = KernelStatsSnapshot()
+        best, widths = 0.0, set()
+        for _ in range(REPEATS):
+            t0 = time.perf_counter()
+            tickets = _stream(svc, sig, TOTAL)
+            best = max(best, TOTAL / (time.perf_counter() - t0))
+            widths.update(t.stats.batch for t in tickets)
+    finally:
+        svc.stop()
+    return best, max(widths), build, compiles
+
+
+def run() -> None:
+    rates = {}
+    for width in WIDTHS:
+        rate, served_width, build, compiles = _measure(width)
+        rates[width] = rate
+        built = compiles._stats.kernels_built - compiles.built
+        if built != 0:
+            raise RuntimeError(
+                f"width {width}: {built} fused-kernel compiles during the "
+                "measured stream — the warmed signature must cover it"
+            )
+        emit(
+            f"ensemble_b{width}",
+            1e6 / rate,  # us per member
+            f"members_per_s={rate:.1f};members={TOTAL};steps={STEPS};"
+            f"served_width={served_width};"
+            f"stream_compiles={built};" + build.derived(),
+        )
+    speedup = rates[64] / rates[1]
+    if speedup < SPEEDUP_GATE:
+        raise RuntimeError(
+            f"ensemble speedup gate failed: B=64 is {speedup:.2f}x B=1 "
+            f"(gate {SPEEDUP_GATE}x)"
+        )
+    emit(
+        "ensemble_speedup",
+        0.0,
+        f"b64_vs_b1={speedup:.2f}x;b8_vs_b1={rates[8] / rates[1]:.2f}x;"
+        f"gate={SPEEDUP_GATE}x",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * kernels_bench       — Fig. 3 fused-RPC comparison + Pallas kernels
   * service_throughput  — serving layer: requests/sec, tail latency,
                           cache-hit rate, fault restore-and-continue
+  * ensemble_throughput — batched ensemble execution: members/sec at
+                          micro-batch widths 1/8/64 (gates the B=64 ≥ 5×
+                          speedup and zero steady-state compiles)
 
 Usage::
 
@@ -35,10 +38,10 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (common, distributed_model, explicit_scaling,
-                            implicit_scaling, implicit_solve, kernels_bench,
-                            mg_poisson, reduction, service_throughput,
-                            time_tiling)
+    from benchmarks import (common, distributed_model, ensemble_throughput,
+                            explicit_scaling, implicit_scaling, implicit_solve,
+                            kernels_bench, mg_poisson, reduction,
+                            service_throughput, time_tiling)
     from benchmarks.common import RESULTS
 
     mods = {
@@ -51,6 +54,7 @@ def main() -> None:
         "distributed_model": distributed_model,
         "kernels_bench": kernels_bench,
         "service_throughput": service_throughput,
+        "ensemble_throughput": ensemble_throughput,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,

@@ -1,0 +1,76 @@
+"""repro — the WFA field-equation interface, batched to ensemble scale.
+
+The curated public surface of the stack (``import repro as wfa``):
+
+* **Frontend** — :class:`Field`, :class:`ForLoop`, :class:`WFAInterface`
+  record a field program (the paper's Fig. 3 API);
+* **Execution** — :func:`make` runs an explicit program, :func:`solve` a
+  recorded implicit system, :func:`run_sharded` a 2-D device mesh; every
+  policy knob (backend, mesh, time tiling, halo residency, ensemble batch)
+  travels as one frozen :class:`RunOptions`;
+* **Implicit systems** — :class:`Operator` / :class:`Rhs` mark the groups
+  ``solve`` consumes; :class:`SolveInfo` reports convergence;
+* **Ensembles** — :class:`Ensemble` stacks B scenarios behind one program;
+  ``make``/``solve`` accept it transparently and advance all members per
+  kernel launch (:mod:`repro.core.ensemble`).
+
+>>> import numpy as np
+>>> import repro as wfa
+>>> wse = wfa.WFAInterface()
+>>> T = wfa.Field("T", init_data=np.ones((6, 6, 4), np.float32))
+>>> with wfa.ForLoop("t", 2):
+...     T[1:-1, 0, 0] = 0.5 * T[1:-1, 0, 0]
+>>> out = wfa.make(wse, T, options=wfa.RunOptions(backend="numpy"))
+>>> float(out[2, 2, 1])
+0.25
+
+Everything else (engine internals, kernels, service tier) stays importable
+under its own module path; attributes here resolve lazily (PEP 562) so
+``import repro`` is cheap and cycle-free.
+"""
+
+from __future__ import annotations
+
+__all__ = [
+    "Ensemble",
+    "Field",
+    "ForLoop",
+    "Operator",
+    "Rhs",
+    "RunOptions",
+    "SolveInfo",
+    "WFAInterface",
+    "make",
+    "run_sharded",
+    "solve",
+]
+
+_EXPORTS = {
+    "Ensemble": ("repro.core.ensemble", "Ensemble"),
+    "Field": ("repro.core.field", "Field"),
+    "ForLoop": ("repro.core.program", "ForLoop"),
+    "Operator": ("repro.solver.frontend", "Operator"),
+    "Rhs": ("repro.solver.frontend", "Rhs"),
+    "RunOptions": ("repro.engine.options", "RunOptions"),
+    "SolveInfo": ("repro.solver.api", "SolveInfo"),
+    "WFAInterface": ("repro.core.program", "WFAInterface"),
+    "make": ("repro.core.ensemble", "make"),
+    "run_sharded": ("repro.core.halo", "run_sharded"),
+    "solve": ("repro.core.ensemble", "solve"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}") from None
+    import importlib
+
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value  # cache: next access skips this hook
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -42,16 +42,18 @@ def halo_pad(local, h: int, ax_x: str, ax_y: str, mx: int, my: int):
     Edge bricks receive zeros in the out-of-domain halo; those cells are
     never read by interior updates because domain-boundary cells are stored
     *inside* the edge bricks (the Moat), matching the paper's layout.
+    Leading (batch) axes pass through: a ``(B, bx, by, Z)`` ensemble brick
+    moves all B members' halo planes in the same ``ppermute``.
     """
     if h == 0:
         return local
     # X axis: receive the high plane of the -x neighbour, low plane of +x.
-    lo_x = _ppermute_shift(local[-h:, :, :], ax_x, mx, +1)
-    hi_x = _ppermute_shift(local[:h, :, :], ax_x, mx, -1)
-    local = jnp.concatenate([lo_x, local, hi_x], axis=0)
-    lo_y = _ppermute_shift(local[:, -h:, :], ax_y, my, +1)
-    hi_y = _ppermute_shift(local[:, :h, :], ax_y, my, -1)
-    return jnp.concatenate([lo_y, local, hi_y], axis=1)
+    lo_x = _ppermute_shift(local[..., -h:, :, :], ax_x, mx, +1)
+    hi_x = _ppermute_shift(local[..., :h, :, :], ax_x, mx, -1)
+    local = jnp.concatenate([lo_x, local, hi_x], axis=-3)
+    lo_y = _ppermute_shift(local[..., -h:, :], ax_y, my, +1)
+    hi_y = _ppermute_shift(local[..., :h, :], ax_y, my, -1)
+    return jnp.concatenate([lo_y, local, hi_y], axis=-2)
 
 
 def halo_refresh(resident, margin: int, h: int, ax_x: str, ax_y: str,
@@ -66,28 +68,30 @@ def halo_refresh(resident, margin: int, h: int, ax_x: str, ax_y: str,
     in-place update that keeps fields resident while halos travel.  The slab
     contents (including corners, and the zero fill on domain-edge bricks)
     are bitwise identical to what :func:`halo_pad` would have produced, so
-    resident and repacking execution agree exactly.
+    resident and repacking execution agree exactly.  Leading (batch) axes
+    pass through — one slab transfer refreshes every ensemble member.
     """
     if h == 0:
         return resident
     K = margin
-    bx = resident.shape[0] - 2 * K
-    by = resident.shape[1] - 2 * K
+    bx = resident.shape[-3] - 2 * K
+    by = resident.shape[-2] - 2 * K
+    lead = (0,) * (resident.ndim - 3)
     upd = jax.lax.dynamic_update_slice
     # X axis: slabs of the interior's edge rows (full interior Y extent).
-    lo_x = _ppermute_shift(resident[K + bx - h:K + bx, K:K + by, :],
+    lo_x = _ppermute_shift(resident[..., K + bx - h:K + bx, K:K + by, :],
                            ax_x, mx, +1)
-    resident = upd(resident, lo_x, (K - h, K, 0))
-    hi_x = _ppermute_shift(resident[K:K + h, K:K + by, :], ax_x, mx, -1)
-    resident = upd(resident, hi_x, (K + bx, K, 0))
+    resident = upd(resident, lo_x, lead + (K - h, K, 0))
+    hi_x = _ppermute_shift(resident[..., K:K + h, K:K + by, :], ax_x, mx, -1)
+    resident = upd(resident, hi_x, lead + (K + bx, K, 0))
     # Y axis: slabs spanning the x-extended rows (fills the corners with the
     # diagonal neighbour's data, exactly like halo_pad's second concat).
     lo_y = _ppermute_shift(
-        resident[K - h:K + bx + h, K + by - h:K + by, :], ax_y, my, +1)
-    resident = upd(resident, lo_y, (K - h, K - h, 0))
+        resident[..., K - h:K + bx + h, K + by - h:K + by, :], ax_y, my, +1)
+    resident = upd(resident, lo_y, lead + (K - h, K - h, 0))
     hi_y = _ppermute_shift(
-        resident[K - h:K + bx + h, K:K + h, :], ax_y, my, -1)
-    return upd(resident, hi_y, (K - h, K + by, 0))
+        resident[..., K - h:K + bx + h, K:K + h, :], ax_y, my, -1)
+    return upd(resident, hi_y, lead + (K - h, K + by, 0))
 
 
 def local_moat_mask(bx: int, by: int, ax_x: str, ax_y: str, mx: int, my: int):
@@ -161,8 +165,8 @@ def default_mesh2d():
 
 
 def run_sharded(program: Program, env: Dict[str, np.ndarray], mesh=None,
-                use_pallas: bool = False, time_tile=None,
-                resident: bool = True):
+                use_pallas=None, time_tile=None, resident=None, *,
+                options=None):
     """Execute a recorded WFA program on a 2-D device mesh.
 
     A thin wrapper over the unified engine: plans the program for the
@@ -190,11 +194,28 @@ def run_sharded(program: Program, env: Dict[str, np.ndarray], mesh=None,
     >>> out = run_sharded(wse.program, {"T": T.init_data})
     >>> float(out["T"][3, 3, 1])
     0.5
+
+    Execution policy can equivalently travel as one frozen bundle,
+    ``options=RunOptions(...)`` — the legacy ``use_pallas=`` / ``time_tile=``
+    / ``resident=`` keywords are deprecation shims that warn once and
+    forward (``use_pallas=True`` maps to ``backend="pallas"``).
     """
     from repro.engine import execute, plan
+    from repro.engine.options import UNSET, _warn_once, resolve_options
 
+    options = resolve_options(
+        options,
+        "run_sharded",
+        time_tile=UNSET if time_tile is None else time_tile,
+        resident=UNSET if resident is None else resident,
+    )
+    if use_pallas is not None:
+        _warn_once("run_sharded", "use_pallas", "backend='pallas'")
+        options = options.replace(backend="pallas" if use_pallas else "jit")
     if mesh is None:
-        mesh = default_mesh2d()
-    p = plan(program, backend="pallas" if use_pallas else "jit", mesh=mesh,
-             time_tile=time_tile, resident=resident)
+        mesh = options.mesh if options.mesh is not None else default_mesh2d()
+    options = options.replace(
+        backend=options.resolved_backend("jit"), mesh=mesh
+    )
+    p = plan(program, options)
     return execute(p, env)

@@ -21,6 +21,7 @@ module keeps the historical driver surface:
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 
 import jax
@@ -48,19 +49,28 @@ bicgstab_solve = krylov.bicgstab
 chebyshev_solve = krylov.chebyshev
 jacobi_solve = krylov.jacobi
 
+#: legacy entry points that already warned this process (warn once each)
+_DEPRECATION_WARNED = set()
+
+
+def _warn_legacy(fn: str) -> None:
+    if fn in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(fn)
+    warnings.warn(
+        f"repro.core.implicit.{fn} is deprecated; record the system through "
+        "the WFA frontend (repro.solver presets) and call wfa.solve — "
+        "repro.solver.solve / WFAInterface.solve — instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
 
 # ---------------------------------------------------------------------------
 # operators
 # ---------------------------------------------------------------------------
 
-def make_operator(w: float, shape):
-    """Single-device masked BTCS operator and rhs builder.
-
-    The operator body is recorded through the WFA frontend and applied with
-    the shared program step (``repro.solver.api.operator_fns``), so this
-    hand-callable path and the compiled ``wfa.solve`` path execute the same
-    recorded stencil.
-    """
+def _make_operator(w: float, shape):
     A, rhs = operator_fns(btcs_program(shape, w), "T", backend="jit")
     mask = interior_mask3d(shape)
 
@@ -68,6 +78,21 @@ def make_operator(w: float, shape):
         return jnp.sum(a * b, dtype=jnp.float32)
 
     return A, rhs, dot, mask
+
+
+def make_operator(w: float, shape):
+    """Single-device masked BTCS operator and rhs builder.
+
+    .. deprecated:: use ``wfa.solve`` (or :func:`repro.solver.operator_fns`
+       for raw applications) — this shim warns once and forwards.
+
+    The operator body is recorded through the WFA frontend and applied with
+    the shared program step (``repro.solver.api.operator_fns``), so this
+    hand-callable path and the compiled ``wfa.solve`` path execute the same
+    recorded stencil.
+    """
+    _warn_legacy("make_operator")
+    return _make_operator(w, shape)
 
 
 def make_brick_operator(w: float, brick_shape, ax_x, ax_y, mx, my,
@@ -128,10 +153,9 @@ def chebyshev_bounds(w: float):
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("w", "steps", "method", "tol", "maxiter"))
-def btcs_solve(T0, w: float, steps: int, method: str = "cg",
-               tol: float = 1e-6, maxiter: int = 500):
-    """Advance `steps` BTCS time steps on a single device."""
-    A, rhs, dot, mask = make_operator(w, T0.shape)
+def _btcs_solve_impl(T0, w: float, steps: int, method: str = "cg",
+                     tol: float = 1e-6, maxiter: int = 500):
+    A, rhs, dot, mask = _make_operator(w, T0.shape)
 
     def dot2(a, b, c, d):
         return dot(a, b), dot(c, d)
@@ -161,16 +185,34 @@ def btcs_solve(T0, w: float, steps: int, method: str = "cg",
     return T, aux
 
 
+def btcs_solve(T0, w: float, steps: int, method: str = "cg",
+               tol: float = 1e-6, maxiter: int = 500):
+    """Advance `steps` BTCS time steps on a single device.
+
+    .. deprecated:: record the system (``repro.solver.record_btcs``) and
+       call ``wfa.solve`` — same kernels, full method/preconditioner
+       surface, ensemble batching.  This shim warns once and forwards.
+    """
+    _warn_legacy("btcs_solve")
+    return _btcs_solve_impl(T0, w, steps, method=method, tol=tol,
+                            maxiter=maxiter)
+
+
 def make_sharded_implicit(mesh, shape, w: float, *, method: str = "cg",
                           tol: float = 1e-6, maxiter: int = 500,
                           use_kernel: bool = False, steps: int = 1):
     """Brick-sharded BTCS solver over ``mesh``; returns (step_fn, sharding).
+
+    .. deprecated:: use ``wfa.solve(..., mesh=...)`` /
+       :func:`repro.solver.make_sharded_solver` — this shim warns once and
+       forwards.
 
     Routed through ``repro.solver.make_sharded_solver``: the recorded BTCS
     body compiles to one fused Pallas kernel per operator application when
     ``use_kernel`` (the PR-1 compiler path, inside shard_map) or runs on the
     shared roll interpreter otherwise; reductions are one fused ``psum``.
     """
+    _warn_legacy("make_sharded_implicit")
     backend = "pallas" if use_kernel else "jit"
     step, sharding = make_sharded_solver(
         btcs_program(shape, w), "T", mesh, method=method, backend=backend,

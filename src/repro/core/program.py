@@ -164,15 +164,24 @@ class WFAInterface:
         return False
 
     # -- execution ---------------------------------------------------------
-    def make(self, answer, backend: str = "jit", mesh=None, time_tile=None,
-             resident: bool = True):
+    def make(self, answer, backend=None, mesh=None, time_tile=None,
+             resident=None, *, options=None, env=None):
         """Compile and run the recorded program; returns ``answer``'s data.
 
-        (the WFA's ``make_WSE``; ``backend='numpy'`` is its validation mode.)
+        (the WFA's ``make_WSE``; backend ``'numpy'`` is its validation mode.)
         Dispatches through the unified engine (:mod:`repro.engine`):
-        ``mesh=`` runs brick-sharded inside ``shard_map``; ``time_tile=k``
-        fuses k steps per kernel launch on ``backend="pallas"`` (one halo
-        exchange / wrap pad per tile; ``None`` lets the planner auto-pick).
+        execution policy travels as one frozen ``options=RunOptions(...)``
+        bundle (a bare string is accepted as the backend).  ``mesh=`` runs
+        brick-sharded inside ``shard_map``; ``time_tile=k`` fuses k steps
+        per kernel launch on the ``pallas`` backend (one halo exchange /
+        wrap pad per tile; ``None`` lets the planner auto-pick); and
+        ``batch=B`` advances a B-member ensemble per launch — every field
+        stacks to ``(B, X, Y, Z)`` and ``make`` returns the stacked answer
+        (see :class:`repro.core.ensemble.Ensemble` for per-member values,
+        which arrive through ``env=``).  The legacy ``backend=`` / ``mesh=``
+        / ``time_tile=`` / ``resident=`` keywords are deprecation shims
+        that warn once and forward into the bundle.
+
         Fused runs step on a *halo-resident* field layout (standing padded
         buffers, in-place margin refresh + kernel outputs, donated entry
         buffers — see :mod:`repro.engine.layout`); ``resident=False`` forces
@@ -183,14 +192,24 @@ class WFAInterface:
 
         >>> import numpy as np
         >>> from repro.core import Field, ForLoop, WFAInterface
+        >>> from repro.engine import RunOptions
         >>> wse = WFAInterface()
         >>> T = Field("T", init_data=np.ones((6, 6, 4), np.float32))
         >>> with ForLoop("time_loop", 3):
         ...     T[1:-1, 0, 0] = 0.5 * T[1:-1, 0, 0]
-        >>> out = wse.make(answer=T, backend="numpy")
+        >>> out = wse.make(answer=T, options=RunOptions(backend="numpy"))
         >>> float(out[2, 2, 1]), float(out[0, 2, 1])
         (0.125, 1.0)
         """
+        from repro.engine.options import UNSET, resolve_options
+
+        options = resolve_options(
+            options, "make",
+            backend=UNSET if backend is None else backend,
+            mesh=UNSET if mesh is None else mesh,
+            time_tile=UNSET if time_tile is None else time_tile,
+            resident=UNSET if resident is None else resident,
+        )
         for op in self.program.ops:
             if getattr(op.loop, "role", None) is not None:
                 # deactivate like every other exit path from make(); the
@@ -202,13 +221,12 @@ class WFAInterface:
                     "instead of make")
         try:
             from repro.engine import run_program
-            out = run_program(self.program, backend=backend, mesh=mesh,
-                              time_tile=time_tile, resident=resident)
+            out = run_program(self.program, env=env, options=options)
         finally:
             release_program(self.program)
         return np.asarray(out[answer.name])
 
-    def solve(self, answer, method: str = "cg", backend: str = "pallas",
+    def solve(self, answer, method: str = "cg", backend=None,
               mesh=None, **kwargs):
         """Solve the recorded implicit system ``A(x) = b`` for ``answer``.
 
@@ -216,9 +234,12 @@ class WFAInterface:
         through the same IR → fused-Pallas pipeline as explicit programs;
         matrix-free iterations run on top of the compiled application —
         Krylov methods, or geometric multigrid via ``method="mg"`` /
-        ``precondition="mg"``.  See :func:`repro.solver.solve` for the full
-        keyword surface (``steps``, ``tol``, ``maxiter``, ``lambda_bounds``,
-        ``precondition``, ``mg_opts``, ``return_info``).
+        ``precondition="mg"``.  Policy travels as ``options=RunOptions(...)``
+        (backend defaults to ``"pallas"``; ``batch=B`` solves a B-member
+        ensemble in one masked loop).  See :func:`repro.solver.solve` for
+        the full keyword surface (``steps``, ``tol``, ``maxiter``,
+        ``lambda_bounds``, ``precondition``, ``mg_opts``, ``return_info``,
+        ``member_env``).
         """
         from repro.solver.api import solve as _solve
         try:

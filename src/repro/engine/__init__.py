@@ -30,6 +30,7 @@ from repro.engine.executor import (
     single_runner,
 )
 from repro.engine.layout import HaloLayout
+from repro.engine.options import UNSET, RunOptions, resolve_options
 from repro.engine.plan import (
     BACKENDS,
     ExecutionPlan,
@@ -47,12 +48,15 @@ __all__ = [
     "ExecutionPlan",
     "HaloLayout",
     "LevelSegment",
+    "RunOptions",
     "Segment",
+    "UNSET",
     "compile_body",
     "execute",
     "plan",
     "plan_mg_levels",
     "reset_stats",
+    "resolve_options",
     "run_program",
     "service_stats",
     "sharded_runner",

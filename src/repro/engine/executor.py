@@ -123,6 +123,9 @@ def _account(plan: ExecutionPlan) -> None:
         stats.repacks += sum(
             1 for ev in _layout_schedule(plan) if isinstance(ev, str)
         )
+    if plan.batch > 1:
+        stats.ensemble_runs += 1
+        stats.ensemble_members += plan.batch
     for seg in plan.segments:
         n, k = seg.n_steps, seg.time_tile
         stats.steps_run += n
@@ -143,7 +146,19 @@ def _account(plan: ExecutionPlan) -> None:
 
 
 def _run_numpy(plan: ExecutionPlan, env: Dict[str, np.ndarray]):
-    env = {k: v.copy() for k, v in env.items()}
+    if plan.batch > 1:
+        # the eager validation backend has no vectorizing machinery to
+        # batch through — run the members one by one and restack
+        outs = [
+            _run_numpy_one(plan, {k: v[b] for k, v in env.items()})
+            for b in range(plan.batch)
+        ]
+        return {k: np.stack([o[k] for o in outs]) for k in env}
+    return _run_numpy_one(plan, env)
+
+
+def _run_numpy_one(plan: ExecutionPlan, env: Dict[str, np.ndarray]):
+    env = {k: np.asarray(v).copy() for k, v in env.items()}
     roll = lambda a, s, ax: np.roll(a, s, axis=ax)  # noqa: E731
     for seg in plan.segments:
         for _ in range(seg.n_steps):
@@ -183,7 +198,9 @@ def sharded_runner(plan: ExecutionPlan, names=None):
 
     mesh = plan.mesh
     _, _, ax_x, ax_y = plan.mesh_ctx
-    spec = P(ax_x, ax_y, None)
+    # batched plans brick the trailing (X, Y) axes only: every device holds
+    # all B members of its brick, so ensemble steps need no extra collectives
+    spec = P(None, ax_x, ax_y, None) if plan.batch > 1 else P(ax_x, ax_y, None)
     sharding = jax.sharding.NamedSharding(mesh, spec)
     specs = {k: spec for k in (plan.program.fields if names is None else names)}
 
@@ -228,20 +245,54 @@ def execute(plan: ExecutionPlan, env: Dict[str, np.ndarray]):
 def run_program(
     program,
     env: Dict[str, np.ndarray] = None,
-    backend: str = "jit",
+    options=None,
+    *,
+    backend=None,
     mesh=None,
     time_tile=None,
-    resident: bool = True,
+    resident=None,
 ):
     """plan + execute in one call (the ``WFAInterface.make`` entry point).
 
+    Policy travels as ``options=RunOptions(...)`` (a bare string is the
+    backend); the legacy keywords forward into the bundle without a
+    deprecation warning — this is an internal entry point, and the public
+    shims (``make``/``run_sharded``/``engine.plan``) already warned.
+    ``options.batch=B`` expects every env buffer stacked to ``(B, X, Y, Z)``.
     ``resident=False`` forces the legacy repack-per-launch stepping (the
     bitwise reference for the halo-resident layout)."""
+    from repro.engine.options import RunOptions
     from repro.engine.plan import plan as _plan
 
-    p = _plan(
-        program, backend=backend, mesh=mesh, time_tile=time_tile, resident=resident
-    )
+    if options is None:
+        options = RunOptions()
+    elif isinstance(options, str):
+        options = RunOptions(backend=options)
+    overrides = {
+        k: v
+        for k, v in (
+            ("backend", backend),
+            ("mesh", mesh),
+            ("time_tile", time_tile),
+            ("resident", resident),
+        )
+        if v is not None
+    }
+    if overrides:
+        options = options.replace(**overrides)
+    p = _plan(program, options)
     if env is None:
         env = {n: f.init_data for n, f in program.fields.items()}
+    if p.batch > 1:
+        # a batched plan steps (B, X, Y, Z) stacks; broadcast any field the
+        # caller supplied unstacked (identical members — Ensemble overrides
+        # arrive already stacked)
+        env = {
+            k: (
+                np.broadcast_to(v, (p.batch,) + np.shape(v)).copy()
+                if np.ndim(v) == 3
+                else v
+            )
+            for k, v in env.items()
+        }
     return execute(p, env)

@@ -28,6 +28,12 @@ Margin contents are *transient*: they are refreshed to depth ``ph`` right
 before each launch that reads them and are dead in between, so segments
 with different halo depths share one resident buffer safely.
 
+Every operation here is **rank-agnostic over leading axes**: batched
+ensemble plans (:class:`~repro.engine.options.RunOptions` with
+``batch=B``) store each field as ``(B, nx + 2K, ny + 2K, nz)`` and one
+refresh rewrites all B members' slabs in a single ``dynamic_update_slice``
+— the (X, Y, Z) trailing axes are the only ones the layout ever touches.
+
 >>> import numpy as np
 >>> lay = HaloLayout(pad=2, shapes={"T": (4, 4, 3)})
 >>> env = {"T": np.arange(48.0, dtype=np.float32).reshape(4, 4, 3)}
@@ -36,6 +42,9 @@ with different halo depths share one resident buffer safely.
 (8, 8, 3)
 >>> bool((lay.exit(padded)["T"] == env["T"]).all())
 True
+>>> batched = lay.enter({"T": np.stack([env["T"]] * 5)})
+>>> batched["T"].shape
+(5, 8, 8, 3)
 """
 
 from __future__ import annotations
@@ -55,7 +64,8 @@ class HaloLayout:
     exit degrade to identity).  ``shapes`` records the *global* interior
     extents the plan was built from, as metadata for introspection only:
     enter/exit pad and slice whatever env they receive, which under
-    ``shard_map`` is the per-device brick, not these shapes.
+    ``shard_map`` is the per-device brick — and on a batched plan the
+    ``(B, ...)``-leading stack — not these shapes.
     """
 
     pad: int
@@ -63,21 +73,25 @@ class HaloLayout:
 
     def enter(self, env):
         """Pad every field to the resident extent (margins start zero; they
-        are refreshed before any kernel reads them)."""
+        are refreshed before any kernel reads them).  Leading (batch) axes
+        pass through unpadded."""
         if self.pad == 0:
             return dict(env)
         K = self.pad
-        return {
-            n: jnp.pad(jnp.asarray(v), ((K, K), (K, K), (0, 0)))
-            for n, v in env.items()
-        }
+
+        def _pad(v):
+            v = jnp.asarray(v)
+            widths = ((0, 0),) * (v.ndim - 3) + ((K, K), (K, K), (0, 0))
+            return jnp.pad(v, widths)
+
+        return {n: _pad(v) for n, v in env.items()}
 
     def exit(self, env):
         """Slice every field's interior back out of the resident buffers."""
         if self.pad == 0:
             return dict(env)
         K = self.pad
-        return {n: v[K:-K, K:-K, :] for n, v in env.items()}
+        return {n: v[..., K:-K, K:-K, :] for n, v in env.items()}
 
 
 def wrap_refresh(resident, margin: int, h: int):
@@ -90,18 +104,22 @@ def wrap_refresh(resident, margin: int, h: int):
     instead of a fresh padded copy of the whole field.  X slabs come from
     the interior's edge rows; Y slabs span the x-extended rows so corners
     wrap in both axes, matching ``jnp.pad``'s corner rule bitwise.
+
+    ``resident`` may carry leading (batch) axes: slabs span them whole, so
+    one update refreshes every ensemble member's margin at once.
     """
     if h == 0:
         return resident
     K = margin
-    nx = resident.shape[0] - 2 * K
-    ny = resident.shape[1] - 2 * K
+    nx = resident.shape[-3] - 2 * K
+    ny = resident.shape[-2] - 2 * K
+    lead = (0,) * (resident.ndim - 3)
     upd = jax.lax.dynamic_update_slice
-    lo_x = resident[K + nx - h : K + nx, K : K + ny, :]
-    resident = upd(resident, lo_x, (K - h, K, 0))
-    hi_x = resident[K : K + h, K : K + ny, :]
-    resident = upd(resident, hi_x, (K + nx, K, 0))
-    lo_y = resident[K - h : K + nx + h, K + ny - h : K + ny, :]
-    resident = upd(resident, lo_y, (K - h, K - h, 0))
-    hi_y = resident[K - h : K + nx + h, K : K + h, :]
-    return upd(resident, hi_y, (K - h, K + ny, 0))
+    lo_x = resident[..., K + nx - h : K + nx, K : K + ny, :]
+    resident = upd(resident, lo_x, lead + (K - h, K, 0))
+    hi_x = resident[..., K : K + h, K : K + ny, :]
+    resident = upd(resident, hi_x, lead + (K + nx, K, 0))
+    lo_y = resident[..., K - h : K + nx + h, K + ny - h : K + ny, :]
+    resident = upd(resident, lo_y, lead + (K - h, K - h, 0))
+    hi_y = resident[..., K - h : K + nx + h, K : K + h, :]
+    return upd(resident, hi_y, lead + (K - h, K + ny, 0))

@@ -29,6 +29,7 @@ from typing import Callable, List, Optional, Tuple
 from repro.compiler import LoweringError, auto_tile, lower_group, tile_group
 from repro.compiler.codegen import compile_group, compile_group_sharded, try_compile
 from repro.core.program import Program, _group_ops, _interp_step
+from repro.engine.options import UNSET, RunOptions, resolve_options
 from repro.engine.stats import stats
 
 log = logging.getLogger("repro.engine")
@@ -78,6 +79,7 @@ class ExecutionPlan:
     mesh: Optional[object]
     segments: List[Segment]
     layout: "HaloLayout" = None
+    batch: int = 1  # leading ensemble axis every env buffer carries
 
     @property
     def mesh_ctx(self) -> Optional[Tuple[int, int, str, str]]:
@@ -103,6 +105,7 @@ def compile_body(
     time_tile: int = 1,
     group=None,
     resident: int = 0,
+    batch: int = 1,
 ) -> Tuple[Callable, bool]:
     """Build one body application ``env -> env`` — THE backend dispatch.
 
@@ -120,6 +123,12 @@ def compile_body(
     standing margin ``K >= time_tile·h``, refreshed in place per launch,
     with kernel outputs aliased into the same buffers.  Interpreter steps
     ignore it (the executor converts at segment boundaries).
+
+    ``batch=B`` builds an ensemble step over ``(B, ...)``-stacked env
+    buffers: fused kernels are vmapped over the leading axis below the
+    refresh/barrier (see :func:`repro.compiler.codegen.compile_group`), and
+    interpreter steps are vmapped whole — every jax primitive they use
+    (rolls, where, dynamic updates, ppermute) carries a batching rule.
     """
     stats.bodies_compiled += 1
     if backend == "pallas":
@@ -141,6 +150,7 @@ def compile_body(
                     time_tile=time_tile,
                     group=group,
                     resident=resident,
+                    batch=batch,
                 )
 
         else:
@@ -158,6 +168,7 @@ def compile_body(
                     time_tile=time_tile,
                     group=group,
                     resident=resident,
+                    batch=batch,
                 )
 
         step = try_compile(fn, loop)
@@ -166,11 +177,17 @@ def compile_body(
     elif backend != "jit":
         raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
     if mesh_ctx is None:
-        return _interp_step(ops), False
-    from repro.core.halo import interp_step_sharded
+        base = _interp_step(ops)
+    else:
+        from repro.core.halo import interp_step_sharded
 
-    mx, my, ax_x, ax_y = mesh_ctx
-    return interp_step_sharded(ops, ax_x, ax_y, mx, my), False
+        mx, my, ax_x, ax_y = mesh_ctx
+        base = interp_step_sharded(ops, ax_x, ax_y, mx, my)
+    if batch > 1:
+        import jax
+
+        return (lambda env: jax.vmap(base)(dict(env))), False
+    return base, False
 
 
 @dataclasses.dataclass
@@ -295,12 +312,23 @@ def _pick_tile(group, loop, requested: Optional[int], brick_xy) -> Tuple[int, st
 
 def plan(
     program: Program,
-    backend: str = "jit",
-    mesh=None,
-    time_tile: Optional[int] = None,
-    resident: bool = True,
+    options=None,
+    *,
+    backend=UNSET,
+    mesh=UNSET,
+    time_tile=UNSET,
+    resident=UNSET,
 ) -> ExecutionPlan:
     """Schedule a recorded program: group ops once, pick a strategy per body.
+
+    Execution policy arrives as one frozen
+    :class:`~repro.engine.options.RunOptions` bundle (a bare string is
+    accepted as the backend, preserving the historical ``plan(program,
+    "pallas")`` spelling).  The legacy ``backend=`` / ``mesh=`` /
+    ``time_tile=`` / ``resident=`` keywords remain as deprecation shims that
+    warn once per keyword and forward into the bundle.  ``options.batch=B``
+    plans for ``(B, ...)``-stacked ensemble buffers: every compiled step is
+    batch-aware and the plan records ``batch`` for the executor.
 
     Planning is two-pass so fields can be laid out *halo-resident*: pass one
     lowers every loop body and picks its tile factor, which fixes the
@@ -311,6 +339,20 @@ def plan(
     compare against).
     """
     from repro.engine.layout import HaloLayout
+
+    options = resolve_options(
+        options,
+        "engine.plan",
+        backend=backend,
+        mesh=mesh,
+        time_tile=time_tile,
+        resident=resident,
+    )
+    backend = options.resolved_backend("jit")
+    mesh = options.mesh
+    time_tile = options.time_tile
+    resident = options.resident
+    batch = options.batch
 
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
@@ -393,6 +435,7 @@ def plan(
             time_tile=k,
             group=group,
             resident=pad,
+            batch=batch,
         )
         if not fused:
             k = 1
@@ -416,6 +459,7 @@ def plan(
                 time_tile=1,
                 group=group,
                 resident=pad,
+                batch=batch,
             )
         if reason:
             stats.note_tile_reason(reason)
@@ -435,4 +479,5 @@ def plan(
         mesh=mesh,
         segments=segments,
         layout=layout,
+        batch=batch,
     )

@@ -55,6 +55,14 @@ class EngineStats:
     #: (shape, smoother-fused, residual-fused) per level of the last hierarchy
     mg_level_log: Tuple[Tuple[Tuple[int, int, int], bool, bool], ...] = ()
 
+    # -- batched ensembles (plans with options.batch > 1) -------------------
+    ensemble_runs: int = 0  # executes of a batched plan (one launch, B members)
+    ensemble_members: int = 0  # summed B over those executes
+    #: per-member Krylov iteration counts of the last batched solve — the
+    #: masked loop runs to the slowest member, but each member's own count
+    #: freezes when its residual converges (see repro.solver.krylov)
+    member_iterations: Tuple[int, ...] = ()
+
     # -- serving tier (updated by repro.service under its stats lock) -------
     requests_admitted: int = 0  # requests accepted into the bounded queue
     requests_rejected: int = 0  # admission-control rejections (queue full)
@@ -105,6 +113,9 @@ def reset_stats() -> None:
     stats.mg_hierarchies = 0
     stats.mg_levels_built = 0
     stats.mg_level_log = ()
+    stats.ensemble_runs = 0
+    stats.ensemble_members = 0
+    stats.member_iterations = ()
     stats.requests_admitted = 0
     stats.requests_rejected = 0
     stats.requests_expired = 0

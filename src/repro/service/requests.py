@@ -55,8 +55,11 @@ class PlanSignature:
     ``workload`` names a registered program builder (see
     :mod:`repro.service.workloads`); ``shape``/``dtype`` fix the field
     extents the kernels are specialized to; ``time_tile`` and ``backend``
-    select the execution strategy.  Everything the compiled plan depends on
-    is in here — equal signatures are interchangeable at serve time.
+    select the execution strategy; ``batch`` is the ensemble width the plan
+    steps per launch (1 = classic single-scenario serving — its ``key()``
+    spelling is unchanged, so pre-batch warm manifests stay valid).
+    Everything the compiled plan depends on is in here — equal signatures
+    are interchangeable at serve time.
     """
 
     workload: str
@@ -64,6 +67,7 @@ class PlanSignature:
     dtype: str = "float32"
     time_tile: int = 1
     backend: str = "pallas"
+    batch: int = 1
 
     def __post_init__(self):
         if len(self.shape) != 3:
@@ -72,13 +76,18 @@ class PlanSignature:
         np.dtype(self.dtype)  # validates early, at request-build time
         if self.time_tile < 1:
             raise ValueError(f"time_tile must be >= 1; got {self.time_tile}")
+        if self.batch < 1:
+            raise ValueError(f"batch must be >= 1; got {self.batch}")
 
     def key(self) -> str:
         nx, ny, nz = self.shape
-        return (
+        base = (
             f"{self.workload}:{nx}x{ny}x{nz}:{self.dtype}"
             f":k{self.time_tile}:{self.backend}"
         )
+        # batch=1 keeps the historical spelling so schema-1 manifests and
+        # old dashboards keep matching
+        return base if self.batch == 1 else f"{base}:b{self.batch}"
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -91,6 +100,7 @@ class PlanSignature:
             dtype=d.get("dtype", "float32"),
             time_tile=int(d.get("time_tile", 1)),
             backend=d.get("backend", "pallas"),
+            batch=int(d.get("batch", 1)),  # absent in schema-1 manifests
         )
 
 
@@ -102,11 +112,14 @@ class RequestStats:
     the worker found the signature's plan warm (after warm-up it always
     should); ``launches``/``exchanges`` are the kernel-level counts this
     request's chunks actually paid; ``retries``/``restores`` count the
-    restore-and-continue path; ``degraded`` marks the interpreter fallback.
+    restore-and-continue path; ``degraded`` marks the interpreter fallback;
+    ``batch`` > 1 marks a request served as one member of a coalesced
+    ensemble launch (micro-batching).
     """
 
     request_id: str = ""
     signature: str = ""
+    batch: int = 1
     worker: Optional[int] = None
     submitted_s: float = 0.0
     started_s: float = 0.0
@@ -130,6 +143,22 @@ class RequestStats:
     @property
     def latency_s(self) -> float:
         return max(0.0, self.finished_s - self.submitted_s)
+
+
+def _check_init(init, signature: PlanSignature) -> None:
+    """``init`` may be one state at ``signature.shape``, or — for batched
+    signatures — a per-member ``(batch,) + shape`` stack."""
+    if init is None:
+        return
+    got = tuple(init.shape)
+    ok = [signature.shape]
+    if signature.batch > 1:
+        ok.append((signature.batch,) + signature.shape)
+    if got not in ok:
+        raise ValueError(
+            f"init shape {got} != signature shape "
+            f"{' or '.join(str(s) for s in ok)}"
+        )
 
 
 @dataclasses.dataclass
@@ -161,12 +190,12 @@ class StepRequest:
             raise ValueError(f"ckpt_every must be >= 0; got {self.ckpt_every}")
         if self.resume and not self.ckpt_key:
             raise ValueError("resume=True requires an explicit ckpt_key")
-        if self.init is not None:
-            if tuple(self.init.shape) != self.signature.shape:
-                raise ValueError(
-                    f"init shape {self.init.shape} != signature shape "
-                    f"{self.signature.shape}"
-                )
+        if self.ckpt_every > 0 and self.signature.batch > 1:
+            raise ValueError(
+                "checkpointing batched signatures is not supported; "
+                "submit members individually to checkpoint them"
+            )
+        _check_init(self.init, self.signature)
 
 
 @dataclasses.dataclass
@@ -185,11 +214,7 @@ class SolveRequest:
     def __post_init__(self):
         if self.maxiter < 1:
             raise ValueError(f"maxiter must be >= 1; got {self.maxiter}")
-        if self.init is not None and tuple(self.init.shape) != self.signature.shape:
-            raise ValueError(
-                f"init shape {self.init.shape} != signature shape "
-                f"{self.signature.shape}"
-            )
+        _check_init(self.init, self.signature)
 
 
 class Ticket:

@@ -6,9 +6,11 @@ accepting work it cannot serve), *prioritized* (higher ``priority``
 dispatches first; FIFO within a priority), and *signature-grouped*: when a
 worker asks for work, the scheduler hands it **every** queued request that
 shares the chosen head-of-line signature (up to ``group_max``).  A worker
-therefore amortizes one warm plan across a whole group back-to-back — this
-grouping boundary is exactly where batched-ensemble execution (the ROADMAP's
-micro-batching item) will later fuse the group into one kernel launch.
+therefore amortizes one warm plan across a whole group back-to-back — and
+this grouping boundary is where ``SimulationService(micro_batch=N)``
+coalesces the group into one batched ensemble launch: the same signature
+re-planned with ``batch=B`` steps every member per kernel call (see
+``SimulationService._serve_batched``).
 
 Deadlines are enforced at dispatch: a request whose deadline passed while
 queued is expired (its ticket fails with ``DeadlineExceeded``) instead of

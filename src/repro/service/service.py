@@ -29,6 +29,7 @@ ticket it serves, never silent.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import logging
 import os
@@ -75,6 +76,14 @@ class SimulationService:
     snapshots; ``default_chunk`` is the steps-per-launch granule requests
     are chunked into when they don't checkpoint.
 
+    ``micro_batch=N`` (default 1 = off) turns the scheduler's signature
+    groups into *ensemble launches*: up to N same-signature step requests
+    (equal ``steps``, no checkpointing, no deadline) are coalesced into one
+    batched plan — every kernel launch advances all of them at once, and
+    each ticket gets its own member of the stacked result (its
+    ``stats.batch`` records the coalesced width).  Any failure on the
+    batched path falls back to serving the group individually.
+
     >>> svc = SimulationService(workers=1, capacity=8).start()
     >>> sig = PlanSignature("heat3d", (8, 8, 6))
     >>> t = svc.submit(StepRequest(sig, steps=4))
@@ -97,11 +106,17 @@ class SimulationService:
         backoff_cap: float = 1.0,
         straggler_threshold: float = 4.0,
         mesh=None,
+        micro_batch: int = 1,
     ):
         if workers < 1:
             raise ValueError(f"workers must be >= 1; got {workers}")
         if default_chunk < 1:
             raise ValueError(f"default_chunk must be >= 1; got {default_chunk}")
+        if micro_batch < 1:
+            raise ValueError(f"micro_batch must be >= 1; got {micro_batch}")
+        if micro_batch > 1 and mesh is not None:
+            raise ValueError("micro-batching is single-device; drop mesh=")
+        self.micro_batch = micro_batch
         self.default_chunk = default_chunk
         self.max_retries = max_retries
         self.backoff_base = backoff_base
@@ -170,8 +185,13 @@ class SimulationService:
 
     def save_manifest(self, path: str) -> None:
         """Persist every signature this service has seen (submitted or
-        warmed), so the next instance pre-compiles the same hot set."""
-        doc = {"signatures": [s.to_json() for s in self._seen.values()]}
+        warmed), so the next instance pre-compiles the same hot set.
+
+        Schema 2 adds the per-signature ``batch`` field; schema-1 manifests
+        (no ``schema`` key, no ``batch``) still load — absent batch reads
+        as 1, the classic single-scenario signature.
+        """
+        doc = {"schema": 2, "signatures": [s.to_json() for s in self._seen.values()]}
         tmp = f"{path}.tmp"
         with open(tmp, "w") as f:
             json.dump(doc, f, indent=1)
@@ -189,9 +209,10 @@ class SimulationService:
                 env = cw.advance(m)(cw.initial_env(None))
                 jax.block_until_ready(list(env.values()))
             else:
-                x = cw.solver("cg", 1e-6, 200)(
-                    cw.spec.default_init(sig.shape, np.dtype(sig.dtype))
-                )[0]
+                x0 = cw.spec.default_init(sig.shape, np.dtype(sig.dtype))
+                if sig.batch > 1:
+                    x0 = np.broadcast_to(x0, (sig.batch,) + x0.shape).copy()
+                x = cw.solver("cg", 1e-6, 200)(x0)[0]
                 jax.block_until_ready(x)
             log.info("warmed %s in %.3fs", sig.key(), cw.build_s)
 
@@ -260,9 +281,138 @@ class SimulationService:
                     return
                 self._collect_expired()
                 continue
-            for ticket in group:
-                self._serve(ticket, wid, monitor_for(ticket.request.signature))
+            for batch in self._coalesce(group):
+                if len(batch) == 1:
+                    self._serve(
+                        batch[0], wid, monitor_for(batch[0].request.signature)
+                    )
+                else:
+                    self._serve_batched(batch, wid, monitor_for)
             self._collect_expired()
+
+    def _coalesce(self, group: List[Ticket]) -> List[List[Ticket]]:
+        """Split one signature group into serve units: singletons, plus —
+        when ``micro_batch > 1`` — ensemble batches of step requests that
+        can share a launch (equal ``steps``, no checkpoint/resume, no
+        deadline, single-member signature)."""
+        if self.micro_batch <= 1 or len(group) < 2:
+            return [[t] for t in group]
+
+        def eligible(t: Ticket) -> bool:
+            r = t.request
+            return (
+                isinstance(r, StepRequest)
+                and r.ckpt_every == 0
+                and not r.resume
+                and r.deadline_s is None
+                and r.signature.batch == 1
+            )
+
+        units: List[List[Ticket]] = []
+        buckets: Dict[int, List[Ticket]] = {}
+        for t in group:
+            if eligible(t):
+                buckets.setdefault(t.request.steps, []).append(t)
+            else:
+                units.append([t])
+        for ts in buckets.values():
+            while ts:
+                unit, ts = ts[: self.micro_batch], ts[self.micro_batch:]
+                units.append(unit)
+        return units
+
+    def _serve_batched(self, tickets: List[Ticket], wid: int, monitor_for):
+        """Serve a coalesced unit as one batched launch sequence.
+
+        The member requests share a plan built for
+        ``replace(signature, batch=B)`` — same program, same kernels, one
+        leading member axis — and each ticket resolves with its member of
+        the stacked result.  Any failure falls back to the individual
+        serve path (which has its own retry loop), so coalescing can only
+        add throughput, never new failure modes.
+        """
+        B = len(tickets)
+        reqs = [t.request for t in tickets]
+        now = time.monotonic()
+        for t in tickets:
+            t.stats.worker = wid
+            t.stats.started_s = now
+            t.stats.queue_wait_s = now - t.stats.submitted_s
+            t.stats.batch = B
+        try:
+            bsig = dataclasses.replace(reqs[0].signature, batch=B)
+            cw = self._get_workload(bsig, tickets[0])
+            for t in tickets[1:]:
+                t.stats.plan_cache_hit = tickets[0].stats.plan_cache_hit
+            self._seen.setdefault(bsig.key(), bsig)
+            monitor = monitor_for(bsig)
+            init = np.stack(
+                [
+                    np.asarray(r.init, dtype=bsig.dtype)
+                    if r.init is not None
+                    else cw.spec.default_init(bsig.shape, np.dtype(bsig.dtype))
+                    for r in reqs
+                ]
+            )
+            env = cw.initial_env(init)
+            steps = reqs[0].steps
+            seg = cw.segment
+            k = seg.time_tile if seg.kind == "fused" else 1
+            chunk = self.default_chunk
+            if k > 1:
+                chunk = max(k, (chunk // k) * k)
+            step = chunks = launches = exchanges = 0
+            while step < steps:
+                m = min(chunk, steps - step)
+                monitor.start_step(step)
+                fire_step_hook(step, tag=reqs[0].request_id)
+                env = cw.advance(m)(env)
+                jax.block_until_ready(list(env.values()))
+                monitor.end_step()
+                step += m
+                chunks += 1
+                dl, dx = cw.chunk_accounting(m)
+                launches += dl
+                exchanges += dx
+            out = cw.finalize(env)  # (B, X, Y, Z)
+        except Exception as e:
+            log.warning(
+                "micro-batch of %d %s requests failed (%r); "
+                "serving individually",
+                B, reqs[0].signature.key(), e,
+            )
+            for t in tickets:
+                t.stats.batch = 1
+                self._serve(t, wid, monitor_for(t.request.signature))
+            return
+        fin = time.monotonic()
+        repacks = 2 if cw.layout.pad > 0 else 0
+        with self._slock:
+            estats.queue_wait_s += sum(t.stats.queue_wait_s for t in tickets)
+            estats.requests_completed += B
+            estats.steps_run += steps * B
+            estats.launches += launches
+            estats.exchanges += exchanges
+            estats.ensemble_runs += 1
+            estats.ensemble_members += B
+            if repacks:
+                estats.repacks += repacks
+                estats.resident_runs += 1
+            if cw.degraded:
+                estats.requests_degraded += B
+        for i, t in enumerate(tickets):
+            st = t.stats
+            st.finished_s = fin
+            st.exec_s = fin - st.started_s
+            st.steps = steps
+            st.chunks = chunks
+            st.launches = launches
+            st.exchanges = exchanges
+            st.repacks = repacks
+            if cw.degraded:
+                st.degraded = True
+                st.degraded_reason = cw.degraded_reason
+            t._resolve(np.asarray(out[i]))
 
     def _collect_expired(self) -> None:
         with self._slock:
@@ -309,6 +459,7 @@ class SimulationService:
         if cw.degraded:
             st.degraded = True
             st.degraded_reason = cw.degraded_reason
+        st.batch = max(st.batch, req.signature.batch)
         attempt = 0
         while True:
             try:
@@ -478,6 +629,9 @@ class SimulationService:
                 req.signature.shape, np.dtype(req.signature.dtype)
             )
         )
+        B = req.signature.batch
+        if B > 1 and x0.ndim == 3:
+            x0 = np.broadcast_to(x0, (B,) + x0.shape).copy()
         x, (iters, _res) = solver(x0)
         jax.block_until_ready(x)
         ticket.stats.iterations = int(np.sum(np.asarray(iters)))

@@ -243,14 +243,33 @@ class CompiledWorkload:
         return list(self.program.fields)
 
     def initial_env(self, init: Optional[np.ndarray]) -> dict:
-        """Fresh device env (resident form on a single device)."""
+        """Fresh device env (resident form on a single device).
+
+        Batched signatures stack every field to ``(B, X, Y, Z)``; ``init``
+        may then be one state shared by all members or a per-member stack.
+        """
+        B = self.signature.batch
         env = {
-            n: fresh_buffer(f.init_data) for n, f in self.program.fields.items()
+            n: np.asarray(f.init_data) for n, f in self.program.fields.items()
         }
         if init is not None:
-            env[self.answer] = fresh_buffer(
-                np.asarray(init, dtype=self.signature.dtype)
-            )
+            init = np.asarray(init, dtype=self.signature.dtype)
+            if init.ndim == 4 and init.shape[0] != B:
+                raise ValueError(
+                    f"init stacks {init.shape[0]} members; signature "
+                    f"batch is {B}"
+                )
+            env[self.answer] = init
+        if B > 1:
+            env = {
+                n: (
+                    v
+                    if v.ndim == 4
+                    else np.broadcast_to(v, (B,) + v.shape).copy()
+                )
+                for n, v in env.items()
+            }
+        env = {n: fresh_buffer(v) for n, v in env.items()}
         if self.mesh is None:
             env = self.layout.enter(env)
         else:
@@ -361,6 +380,7 @@ class CompiledWorkload:
                 backend=self.signature.backend,
                 tol=tol,
                 maxiter=maxiter,
+                batch=self.signature.batch,
             )
             self._solvers[key] = fn
             return fn
@@ -379,9 +399,15 @@ def build_workload(
     multi-loop programs (chunked checkpointing needs one loop body).
     """
     from repro.compiler import stats as kstats
+    from repro.engine.options import RunOptions
     from repro.engine.stats import stats as estats
 
     spec = get_workload(signature.workload)
+    if signature.batch > 1 and mesh is not None:
+        raise ValueError(
+            "batched signatures are served single-device; submit "
+            f"{signature.key()!r} without a mesh"
+        )
     t0 = time.perf_counter()
     nominal = signature.time_tile + 1 if signature.time_tile > 1 else 2
     program, answer = spec.record(
@@ -395,9 +421,12 @@ def build_workload(
     if spec.kind == "step":
         cw.plan = build_plan(
             program,
-            backend=signature.backend,
-            mesh=mesh,
-            time_tile=signature.time_tile,
+            options=RunOptions(
+                backend=signature.backend,
+                mesh=mesh,
+                time_tile=signature.time_tile,
+                batch=signature.batch,
+            ),
         )
         if len(cw.plan.segments) != 1:
             raise ValueError(

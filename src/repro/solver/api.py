@@ -53,7 +53,12 @@ PRECONDITIONABLE = ("cg", "bicgstab")
 
 @dataclasses.dataclass
 class SolveInfo:
-    """Per-call convergence record returned by ``solve(..., return_info=True)``."""
+    """Per-call convergence record returned by ``solve(..., return_info=True)``.
+
+    On a batched solve (``options.batch = B > 1``) ``iterations`` and
+    ``residual`` carry a trailing member axis — shape ``(steps, B)`` — with
+    each member's own masked iteration count (see
+    :mod:`repro.solver.krylov`'s batched variants)."""
 
     method: str
     backend: str
@@ -290,6 +295,7 @@ def _make_runner(
     jacobi_mask: Callable,
     mg=None,
     M: Optional[Callable] = None,
+    batch: int = 1,
 ):
     """Shared solve driver: ``run(x0, *coefs) -> (x, (iters, res))``.
 
@@ -301,6 +307,11 @@ def _make_runner(
     preconditioner gathers/slices around the cycle).  ``mg`` carries the
     compiled :class:`~repro.solver.multigrid.Multigrid` for
     ``method="mg"``; ``M`` is the preconditioner action for CG/BiCGSTAB.
+
+    ``batch=B`` routes the Krylov methods to their per-member-masked
+    batched variants (``dot``/``dot2`` then reduce to (B,) vectors) and
+    broadcasts the reduction-free methods' shared iteration count to (B,),
+    so ``(iters, res)`` are uniformly per-member.
     """
 
     def run_method(A, b, x0, envc):
@@ -314,12 +325,22 @@ def _make_runner(
                 ref2=dot(b, b),
             )
         if method == "cg":
+            if batch > 1:
+                return krylov.cg_batched(A, dot, b, x0, tol=tol, maxiter=maxiter)
             return krylov.cg(
                 A, dot, b, x0, tol=tol, maxiter=maxiter, M=M, dot2=dot2
             )
         if method == "pipecg":
+            if batch > 1:
+                return krylov.pipecg_batched(
+                    A, dot2, b, x0, tol=tol, maxiter=maxiter
+                )
             return krylov.pipecg(A, dot2, b, x0, tol=tol, maxiter=maxiter)
         if method == "bicgstab":
+            if batch > 1:
+                return krylov.bicgstab_batched(
+                    A, dot, b, x0, tol=tol, maxiter=maxiter
+                )
             return krylov.bicgstab(A, dot, b, x0, tol=tol, maxiter=maxiter, M=M)
         if method == "chebyshev":
             return krylov.chebyshev(
@@ -346,6 +367,11 @@ def _make_runner(
             else:
                 b = x
             x2, i, res = run_method(A, b, x, envc)
+            if batch > 1:
+                # fixed-count methods report one shared scalar; make every
+                # method's (iters, res) per-member so SolveInfo is uniform
+                i = jnp.broadcast_to(jnp.asarray(i, jnp.int32), (batch,))
+                res = jnp.broadcast_to(jnp.asarray(res, jnp.float32), (batch,))
             return x2, (i, res)
 
         x2, aux = jax.lax.scan(one, x0, None, length=steps)
@@ -355,7 +381,13 @@ def _make_runner(
 
 
 def _build_step(
-    ops, loop, program: Program, backend: str, mesh_ctx=None, resident: int = 0
+    ops,
+    loop,
+    program: Program,
+    backend: str,
+    mesh_ctx=None,
+    resident: int = 0,
+    batch: int = 1,
 ) -> Callable:
     """One body application ``env -> env`` through the engine's single
     dispatch point (:func:`repro.engine.compile_body`): fused Pallas kernel
@@ -379,7 +411,14 @@ def _build_step(
     shapes = {n: f.shape for n, f in program.fields.items()}
     dtypes = {n: f.dtype for n, f in program.fields.items()}
     step, _ = compile_body(
-        ops, loop, shapes, dtypes, backend, mesh_ctx=mesh_ctx, resident=resident
+        ops,
+        loop,
+        shapes,
+        dtypes,
+        backend,
+        mesh_ctx=mesh_ctx,
+        resident=resident,
+        batch=batch,
     )
     return step
 
@@ -437,6 +476,8 @@ def make_solver(
     lambda_bounds: Optional[Tuple[float, float]] = None,
     precondition: Optional[str] = None,
     mg_opts=None,
+    batch: int = 1,
+    member_env=None,
 ) -> Callable:
     """Build a reusable jitted solver ``step_fn(x0) -> (x, (iters, res))``.
 
@@ -446,10 +487,25 @@ def make_solver(
     ``method="mg"`` iterates geometric V/W-cycles; ``precondition="mg"``
     wraps one cycle from a zero guess around CG/BiCGSTAB (see
     :mod:`repro.solver.multigrid`; tune with ``mg_opts=MGOptions(...)``).
+
+    ``batch=B`` builds an *ensemble* solver: ``step_fn`` takes and returns a
+    ``(B, X, Y, Z)`` stack, the operator applies batch-aware (one compiled
+    kernel launch per application for all members), dots reduce per member,
+    and the Krylov loops freeze converged members while running to the
+    slowest (see :mod:`repro.solver.krylov`).  ``member_env`` supplies
+    per-member ``(B, X, Y, Z)`` stacks for coefficient fields (others
+    broadcast from their init data); multigrid is not batch-aware, so
+    ``method="mg"`` / ``precondition=`` require ``batch=1``.
     """
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
     _check_precondition(method, precondition)
+    if batch > 1 and (method == "mg" or precondition is not None):
+        raise ValueError(
+            "batched solves support the pointwise/Krylov methods only; "
+            "method='mg' and precondition= need batch=1 (the multigrid "
+            "hierarchy is not batch-aware)"
+        )
     name = _answer_name(program, answer)
     release_program(program)
     (op_loop, op_ops), rhs_group = _split(program, name)
@@ -467,19 +523,35 @@ def make_solver(
         backend,
         mg_opts,
     )
-    op_step = _build_step(op_ops, op_loop, program, backend)
+    op_step = _build_step(op_ops, op_loop, program, backend, batch=batch)
     rhs_step = (
-        _build_step(rhs_group[1], rhs_group[0], program, backend)
+        _build_step(rhs_group[1], rhs_group[0], program, backend, batch=batch)
         if rhs_group is not None
         else None
     )
+    member_env = member_env or {}
     coef_names = [n for n in program.fields if n != name]
-    coefs = [jnp.asarray(program.fields[n].init_data) for n in coef_names]
+
+    def _coef(n):
+        v = jnp.asarray(member_env.get(n, program.fields[n].init_data))
+        if batch > 1 and v.ndim == 3:
+            v = jnp.broadcast_to(v, (batch,) + v.shape)
+        return v
+
+    coefs = [_coef(n) for n in coef_names]
     shape = program.fields[name].shape
     mask = jnp.asarray(_written_mask(group, shape)) if method == "jacobi" else None
 
-    def dot(a, b):
-        return jnp.sum(a * b, dtype=jnp.float32)
+    if batch > 1:
+
+        def dot(a, b):
+            # per-member reduction over the trailing (X, Y, Z) axes
+            return jnp.sum(a * b, axis=(1, 2, 3), dtype=jnp.float32)
+
+    else:
+
+        def dot(a, b):
+            return jnp.sum(a * b, dtype=jnp.float32)
 
     def dot2(a, b, c, d):
         from repro.kernels import ops as kops
@@ -488,7 +560,7 @@ def make_solver(
         # interpret mode (this CPU container) a pallas launch per reduction
         # only adds overhead — the BENCH_resident run caught PCG paying it
         # per iteration — so the correctness path keeps the jnp reductions
-        if backend == "pallas" and not kops._interpret():
+        if batch == 1 and backend == "pallas" and not kops._interpret():
             part = kops.dual_dot(a, b, c, d)  # one fused operand sweep
             return part[0], part[1]
         return dot(a, b), dot(c, d)
@@ -509,6 +581,7 @@ def make_solver(
         jacobi_mask=lambda: mask,
         mg=mg,
         M=mg.apply if (mg is not None and precondition == "mg") else None,
+        batch=batch,
     )
     # donate the state: its buffer seeds the while_loop carry in place (the
     # rest of the iteration is already allocation-free — XLA aliases the
@@ -716,7 +789,7 @@ def solve(
     answer,
     *,
     method: str = "cg",
-    backend: str = "pallas",
+    backend: Optional[str] = None,
     mesh=None,
     steps: int = 1,
     tol: float = 1e-6,
@@ -725,10 +798,23 @@ def solve(
     precondition: Optional[str] = None,
     mg_opts=None,
     return_info: bool = False,
+    options=None,
+    member_env=None,
 ):
     """Solve the recorded implicit system for ``answer``; returns the
     solution as a NumPy array (and a :class:`SolveInfo` when
     ``return_info=True``).
+
+    Execution policy travels as ``options=RunOptions(...)`` — the legacy
+    ``backend=`` / ``mesh=`` keywords are deprecation shims that warn once
+    and forward (backend defaults to ``"pallas"``).  ``options.batch=B``
+    solves a B-member ensemble in one masked Krylov loop: ``member_env``
+    supplies per-member ``(B, X, Y, Z)`` stacks for the initial guess and/or
+    coefficient fields (anything absent broadcasts from its init data), the
+    returned solution is the ``(B, X, Y, Z)`` stack, converged members
+    freeze bitwise while the loop runs to the slowest, and the per-member
+    iteration counts land in ``SolveInfo.iterations`` (shape ``(steps, B)``)
+    and ``repro.engine.stats.member_iterations``.
 
     The initial guess is the unknown field's init data (its Moat must carry
     the boundary values, as in the explicit path).  With ``mesh=`` the whole
@@ -749,6 +835,21 @@ def solve(
         >>> x.shape, bool(info.iterations[0] < 10)
         ((17, 17, 9), True)
     """
+    from repro.engine.options import UNSET, resolve_options
+
+    options = resolve_options(
+        options,
+        "wfa.solve",
+        backend=UNSET if backend is None else backend,
+        mesh=UNSET if mesh is None else mesh,
+    )
+    backend = options.resolved_backend("pallas")
+    mesh = options.mesh
+    batch = options.batch
+    if mesh is not None and batch > 1:
+        raise ValueError(
+            "batched solves are single-device; drop mesh= or set batch=1"
+        )
     name = _answer_name(program, answer)
     kwargs = dict(
         method=method,
@@ -760,19 +861,33 @@ def solve(
         precondition=precondition,
         mg_opts=mg_opts,
     )
+    member_env = member_env or {}
     if mesh is not None:
         step_fn, sharding = make_sharded_solver(program, name, mesh, **kwargs)
         x0 = jax.device_put(jnp.asarray(program.fields[name].init_data), sharding)
     else:
-        step_fn = make_solver(program, name, **kwargs)
-        x0 = program.fields[name].init_data
+        step_fn = make_solver(
+            program, name, batch=batch, member_env=member_env, **kwargs
+        )
+        x0 = np.asarray(member_env.get(name, program.fields[name].init_data))
+        if batch > 1 and x0.ndim == 3:
+            x0 = np.broadcast_to(x0, (batch,) + x0.shape)
     x, (iters, res) = step_fn(x0)
     x = np.asarray(jax.device_get(x))
+    iters = np.asarray(jax.device_get(iters))
+    if batch > 1:
+        from repro.engine.stats import stats as engine_stats
+
+        engine_stats.ensemble_runs += 1
+        engine_stats.ensemble_members += batch
+        engine_stats.member_iterations = tuple(
+            int(v) for v in iters.sum(axis=0)
+        )
     if return_info:
         info = SolveInfo(
             method=method,
             backend=backend,
-            iterations=np.asarray(jax.device_get(iters)),
+            iterations=iters,
             residual=np.asarray(jax.device_get(res)),
         )
         return x, info

@@ -330,6 +330,183 @@ def chebyshev(
     return x, iters, jnp.sqrt(rr)
 
 
+# ---------------------------------------------------------------------------
+# batched ensembles: per-member convergence masking
+# ---------------------------------------------------------------------------
+#
+# The batched variants solve B independent systems stacked on a leading
+# axis in ONE masked loop: ``A`` applies the operator to the whole
+# (B, X, Y, Z) stack (the engine's batch-aware compiled step), ``dot``
+# reduces per member to a (B,) vector, and every scalar recurrence runs
+# elementwise over the batch.  The loop runs until the *slowest* member
+# converges; members that finish early are **frozen bitwise** — all of
+# their carried state is held with ``jnp.where(active, new, old)`` (never
+# an arithmetic no-op like ``x + 0*p``, which is not bitwise-stable for
+# signed zeros / inf lanes) — and each member's iteration count stops
+# advancing the moment its own residual passes the tolerance.
+
+
+def _bc(s, like):
+    """Broadcast a (B,) per-member scalar over ``like``'s trailing axes."""
+    return s[(...,) + (None,) * (like.ndim - 1)]
+
+
+def cg_batched(A, dot, b, x0, *, tol: float = 1e-6, maxiter: int = 500):
+    """Classic CG over a (B, ...) stack; ``dot`` must reduce to (B,).
+
+    Returns ``(x, iterations, ‖r‖)`` with per-member (B,) iteration counts
+    and residual norms.  No preconditioner: the only M the frontend builds
+    (multigrid) is not batch-aware.
+    """
+    r = b - A(x0)
+    p = r
+    rr = dot(r, r)
+    it0 = jnp.zeros(rr.shape, jnp.int32)
+
+    def cond(s):
+        return jnp.any(s[3] > tol * tol) & (s[5] < maxiter)
+
+    def body(s):
+        x, r, p, rr, it, i = s
+        active = rr > tol * tol
+        a4 = _bc(active, x)
+        Ap = A(p)
+        alpha = rr / _nonzero(dot(p, Ap))
+        x = jnp.where(a4, x + _bc(alpha, x) * p, x)
+        r_new = r - _bc(alpha, r) * Ap
+        rr_new = dot(r_new, r_new)
+        beta = rr_new / _nonzero(rr)
+        p = jnp.where(a4, r_new + _bc(beta, p) * p, p)
+        r = jnp.where(a4, r_new, r)
+        rr = jnp.where(active, rr_new, rr)
+        return (x, r, p, rr, it + active.astype(jnp.int32), i + 1)
+
+    s0 = (x0, r, p, rr, it0, jnp.asarray(0, jnp.int32))
+    x, r, p, rr, it, _ = jax.lax.while_loop(cond, body, s0)
+    return x, it, jnp.sqrt(rr)
+
+
+def pipecg_batched(A, dot2, b, x0, *, tol: float = 1e-6, maxiter: int = 500):
+    """Pipelined CG over a (B, ...) stack; ``dot2`` reduces to two (B,)s.
+
+    Same Ghysels–Vanroose recurrences as :func:`pipecg` run elementwise
+    over the batch, including the periodic residual replacement (applied on
+    the shared iteration clock, then masked so frozen members keep their
+    converged state bitwise).
+    """
+    r = b - A(x0)
+    w_ = A(r)
+    zero = jnp.zeros_like(b)
+    rr0 = dot2(r, r, r, r)[0]  # (B,) true entry residuals
+    replace_every = 25
+
+    def body(s):
+        x, r, w_, z, p, sv, rr, alpha_prev, it, i, fresh = s
+        active = rr > tol * tol
+        a4 = _bc(active, x)
+        gamma, delta = dot2(r, r, w_, r)
+        n = A(w_)  # overlapped SpMV
+        beta = jnp.where(fresh, 0.0, gamma / _nonzero(rr))
+        denom = _nonzero(delta - beta * gamma / jnp.where(fresh, 1.0, alpha_prev))
+        alpha = gamma / denom
+        z_new = n + _bc(beta, z) * z
+        p_new = r + _bc(beta, p) * p
+        sv_new = w_ + _bc(beta, sv) * sv
+        x = jnp.where(a4, x + _bc(alpha, x) * p_new, x)
+        r_new = r - _bc(alpha, r) * sv_new
+        w_new = w_ - _bc(alpha, w_) * z_new
+        do = (i + 1) % replace_every == 0
+        r_new, w_new = jax.lax.cond(
+            do,
+            lambda x, r_, w: (b - A(x), A(b - A(x))),
+            lambda x, r_, w: (r_, w),
+            x,
+            r_new,
+            w_new,
+        )
+        r = jnp.where(a4, r_new, r)
+        w_ = jnp.where(a4, w_new, w_)
+        z = jnp.where(a4, z_new, z)
+        p = jnp.where(a4, p_new, p)
+        sv = jnp.where(a4, sv_new, sv)
+        # gamma is ‖r‖² *before* this update — the same one-iteration lag the
+        # unbatched cond() has — so a member freezes one step after crossing
+        rr = jnp.where(active, gamma, rr)
+        alpha_prev = jnp.where(active, alpha, alpha_prev)
+        return (x, r, w_, z, p, sv, rr, alpha_prev,
+                it + active.astype(jnp.int32), i + 1, do)
+
+    def cond(s):
+        return jnp.any(s[6] > tol * tol) & (s[9] < maxiter)
+
+    s0 = (
+        x0,
+        r,
+        w_,
+        zero,
+        zero,
+        zero,
+        rr0,
+        jnp.ones(rr0.shape, jnp.float32),
+        jnp.zeros(rr0.shape, jnp.int32),
+        jnp.asarray(0, jnp.int32),
+        jnp.asarray(True),
+    )
+    out = jax.lax.while_loop(cond, body, s0)
+    x, it = out[0], out[8]
+    rr = dot2(out[1], out[1], out[1], out[1])[0]
+    return x, it, jnp.sqrt(rr)
+
+
+def bicgstab_batched(A, dot, b, x0, *, tol: float = 1e-6, maxiter: int = 500):
+    """BiCGSTAB over a (B, ...) stack; ``dot`` must reduce to (B,).
+
+    The ensemble workhorse: members may carry *different coefficients* (the
+    operator reads per-member coefficient stacks), so each lane converges at
+    its own rate and freezes independently.
+    """
+    r = b - A(x0)
+    r0 = r
+    rr = dot(r, r)
+    ones = jnp.ones(rr.shape, jnp.float32)
+    zero_v = jnp.zeros_like(b)
+
+    def cond(s):
+        return jnp.any(s[7] > tol * tol) & (s[9] < maxiter)
+
+    def body(s):
+        x, r, p, v, rho, alpha, omega, rr, it, i = s
+        active = rr > tol * tol
+        a4 = _bc(active, x)
+        rho_new = dot(r0, r)
+        beta = (rho_new / _nonzero(rho)) * (alpha / _nonzero(omega))
+        p_new = r + _bc(beta, p) * (p - _bc(omega, v) * v)
+        v_new = A(p_new)
+        alpha_new = rho_new / _nonzero(dot(r0, v_new))
+        sv = r - _bc(alpha_new, r) * v_new
+        t = A(sv)
+        tt = dot(t, t)
+        omega_new = jnp.where(tt > 0.0, dot(t, sv) / _nonzero(tt), 0.0)
+        x = jnp.where(
+            a4, x + _bc(alpha_new, x) * p_new + _bc(omega_new, x) * sv, x
+        )
+        r_new = sv - _bc(omega_new, sv) * t
+        r = jnp.where(a4, r_new, r)
+        p = jnp.where(a4, p_new, p)
+        v = jnp.where(a4, v_new, v)
+        rho = jnp.where(active, rho_new, rho)
+        alpha = jnp.where(active, alpha_new, alpha)
+        omega = jnp.where(active, omega_new, omega)
+        rr = jnp.where(active, dot(r_new, r_new), rr)
+        return (x, r, p, v, rho, alpha, omega, rr,
+                it + active.astype(jnp.int32), i + 1)
+
+    s0 = (x0, r, zero_v, zero_v, ones, ones, ones, rr,
+          jnp.zeros(rr.shape, jnp.int32), jnp.asarray(0, jnp.int32))
+    out = jax.lax.while_loop(cond, body, s0)
+    return out[0], out[8], jnp.sqrt(out[7])
+
+
 def jacobi(step: Callable, x0, *, iters: int = 500):
     """Reduction-free Jacobi relaxation: ``x ← step(x)`` for ``iters`` steps.
 

@@ -25,6 +25,8 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 DOCS = sorted((ROOT / "docs").glob("*.md"))
 
 DOC_MODULES = [
+    "repro",
+    "repro.core.ensemble",
     "repro.core.halo",
     "repro.core.program",
     "repro.engine.layout",
@@ -46,6 +48,7 @@ def test_docs_tree_exists():
         "time_tiling.md",
         "benchmarks.md",
         "service.md",
+        "ensembles.md",
     }
     assert required <= names, f"missing docs pages: {required - names}"
 

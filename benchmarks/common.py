@@ -12,6 +12,7 @@ closest observable to the machine's actual cost.  Defaults come from
 :data:`WARMUP`/:data:`REPEATS`; ``run.py --warmup/--repeats`` overrides them
 harness-wide via :func:`configure`.
 """
+
 from __future__ import annotations
 
 import time
@@ -36,17 +37,19 @@ def configure(warmup: Optional[int] = None, repeats: Optional[int] = None):
         REPEATS = int(repeats)
 
 
-def resolved(warmup: Optional[int] = None,
-             iters: Optional[int] = None) -> tuple:
+def resolved(warmup: Optional[int] = None, iters: Optional[int] = None) -> tuple:
     """(warmup, iters) with harness defaults filled in — exposed so cases
     that derive per-run statistics (e.g. tiles fused per run) can divide by
     the true number of executions."""
-    return (WARMUP if warmup is None else warmup,
-            REPEATS if iters is None else iters)
+    return (
+        WARMUP if warmup is None else warmup,
+        REPEATS if iters is None else iters,
+    )
 
 
-def time_fn(fn: Callable, *args, warmup: Optional[int] = None,
-            iters: Optional[int] = None) -> float:
+def time_fn(
+    fn: Callable, *args, warmup: Optional[int] = None, iters: Optional[int] = None
+) -> float:
     """Best-of wall-time per call in microseconds (blocks on results)."""
     warmup, iters = resolved(warmup, iters)
     for _ in range(warmup):
@@ -61,8 +64,8 @@ def time_fn(fn: Callable, *args, warmup: Optional[int] = None,
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     RESULTS.append(
-        {"name": name, "us_per_call": round(us_per_call, 2),
-         "derived": derived})
+        {"name": name, "us_per_call": round(us_per_call, 2), "derived": derived}
+    )
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
@@ -78,18 +81,46 @@ class KernelStatsSnapshot:
         snap = KernelStatsSnapshot()
         ...  # build + run the case
         row = snap.derived()   # "fused_kernels=N;kernel_hits=M;fallbacks=F"
+
+    Engine-side overlap counters (interior/boundary launches, overlapped
+    exchanges, cost-model hits and calibrations) ride along the same way,
+    appended only when any moved — rows from cases that never split keep
+    their historical shape.
     """
+
+    _OVERLAP = (
+        "interior_launches",
+        "boundary_launches",
+        "overlapped_exchanges",
+        "cost_model_hits",
+        "calibrations",
+    )
 
     def __init__(self):
         from repro.compiler import stats
+        from repro.engine import stats as engine_stats
 
         self._stats = stats
+        self._engine = engine_stats
         self.built = stats.kernels_built
         self.hits = stats.cache_hits
         self.fallbacks = stats.fallbacks
+        self.overlap = {n: getattr(engine_stats, n) for n in self._OVERLAP}
 
     def derived(self) -> str:
         s = self._stats
-        return (f"fused_kernels={s.kernels_built - self.built};"
-                f"kernel_hits={s.cache_hits - self.hits};"
-                f"fallbacks={s.fallbacks - self.fallbacks}")
+        out = (
+            f"fused_kernels={s.kernels_built - self.built};"
+            f"kernel_hits={s.cache_hits - self.hits};"
+            f"fallbacks={s.fallbacks - self.fallbacks}"
+        )
+        # engine counters reset with reset_stats(); a benchmark that resets
+        # mid-row reads deltas from zero, which is still the row's own count
+        deltas = {
+            n: getattr(self._engine, n)
+            - min(self.overlap[n], getattr(self._engine, n))
+            for n in self._OVERLAP
+        }
+        if any(deltas.values()):
+            out += "".join(f";{n}={v}" for n, v in deltas.items())
+        return out

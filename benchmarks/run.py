@@ -27,7 +27,12 @@ override the harness-wide timing counts (rows report *best-of* over the
 repeats — see :mod:`benchmarks.common` for why the median was retired).
 ``--check-fallbacks`` exits nonzero if any emitted row reports interpreter
 fallbacks — the CI smoke gate keeping every pallas case on the fused path.
+``--check-tiling`` exits nonzero if the time_tiling case's steady-state k=2
+or k=4 row is slower than its k=1 row — temporal blocking must never lose
+to untiled stepping (the cost model guarantees it by construction for
+model-driven picks; this gates the measured reality).
 """
+
 from __future__ import annotations
 
 import argparse
@@ -38,10 +43,19 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (common, distributed_model, ensemble_throughput,
-                            explicit_scaling, implicit_scaling, implicit_solve,
-                            kernels_bench, mg_poisson, reduction,
-                            service_throughput, time_tiling)
+    from benchmarks import (
+        common,
+        distributed_model,
+        ensemble_throughput,
+        explicit_scaling,
+        implicit_scaling,
+        implicit_solve,
+        kernels_bench,
+        mg_poisson,
+        reduction,
+        service_throughput,
+        time_tiling,
+    )
     from benchmarks.common import RESULTS
 
     mods = {
@@ -57,16 +71,39 @@ def main() -> None:
         "ensemble_throughput": ensemble_throughput,
     }
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--json", metavar="PATH", default=None,
-                    help="also write emitted rows as JSON")
-    ap.add_argument("--warmup", type=int, default=None, metavar="N",
-                    help="untimed calls before timing each row")
-    ap.add_argument("--repeats", type=int, default=None, metavar="N",
-                    help="timed calls per row (best-of reported)")
-    ap.add_argument("--check-fallbacks", action="store_true",
-                    help="fail if any row reports interpreter fallbacks")
-    ap.add_argument("cases", nargs="*", metavar="case",
-                    help=f"benchmark cases to run (default: all of {list(mods)})")
+    ap.add_argument(
+        "--json", metavar="PATH", default=None, help="also write emitted rows as JSON"
+    )
+    ap.add_argument(
+        "--warmup",
+        type=int,
+        default=None,
+        metavar="N",
+        help="untimed calls before timing each row",
+    )
+    ap.add_argument(
+        "--repeats",
+        type=int,
+        default=None,
+        metavar="N",
+        help="timed calls per row (best-of reported)",
+    )
+    ap.add_argument(
+        "--check-fallbacks",
+        action="store_true",
+        help="fail if any row reports interpreter fallbacks",
+    )
+    ap.add_argument(
+        "--check-tiling",
+        action="store_true",
+        help="fail if time_tiling k=2/k=4 rows lose to k=1",
+    )
+    ap.add_argument(
+        "cases",
+        nargs="*",
+        metavar="case",
+        help=f"benchmark cases to run (default: all of {list(mods)})",
+    )
     args = ap.parse_args()
     unknown = [c for c in args.cases if c not in mods]
     if unknown:
@@ -86,6 +123,7 @@ def main() -> None:
 
     if args.json:
         import jax
+
         doc = {
             "cases": args.cases or list(mods),
             "backend": jax.default_backend(),
@@ -102,21 +140,45 @@ def main() -> None:
     if args.check_fallbacks:
         from repro.compiler import stats as compiler_stats
 
-        bad = [r for r in RESULTS
-               for m in [re.search(r"fallbacks=(\d+)", str(r["derived"]))]
-               if m and int(m.group(1)) > 0]
+        bad = [
+            r
+            for r in RESULTS
+            for m in [re.search(r"fallbacks=(\d+)", str(r["derived"]))]
+            if m and int(m.group(1)) > 0
+        ]
         for r in bad:
-            print(f"# FALLBACKS in {r['name']}: {r['derived']}",
-                  file=sys.stderr)
+            print(f"# FALLBACKS in {r['name']}: {r['derived']}", file=sys.stderr)
         # rows without a fallbacks= field still count via the process-wide
         # compiler counter, so un-instrumented cases cannot regress silently
         if compiler_stats.fallbacks > 0 and not bad:
-            print(f"# FALLBACKS: {compiler_stats.fallbacks} across the run "
-                  f"(reasons: {compiler_stats.fallback_reasons[-3:]})",
-                  file=sys.stderr)
+            print(
+                f"# FALLBACKS: {compiler_stats.fallbacks} across the run "
+                f"(reasons: {compiler_stats.fallback_reasons[-3:]})",
+                file=sys.stderr,
+            )
         if bad or compiler_stats.fallbacks > 0:
             sys.exit(1)
         print("# fallbacks=0 in every instrumented row and process-wide")
+
+    if args.check_tiling:
+        rows = {r["name"]: float(r["us_per_call"]) for r in RESULTS}
+        base = rows.get("time_tiling_k1")
+        if base is None:
+            print("# --check-tiling: no time_tiling_k1 row emitted", file=sys.stderr)
+            sys.exit(1)
+        losers = [
+            (n, rows[n])
+            for n in ("time_tiling_k2", "time_tiling_k4")
+            if n in rows and rows[n] > base
+        ]
+        for n, us in losers:
+            print(
+                f"# TILING REGRESSION: {n}={us:.2f}us/step > k1={base:.2f}us/step",
+                file=sys.stderr,
+            )
+        if losers:
+            sys.exit(1)
+        print(f"# tiling holds: k2/k4 <= k1 ({base:.2f}us/step)")
 
 
 if __name__ == "__main__":

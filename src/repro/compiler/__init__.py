@@ -22,17 +22,19 @@ from repro.compiler.codegen import (CompilerStats, clear_cache, compile_group,
                                     compile_group_sharded, compile_transfer,
                                     reset_stats, stats, try_compile)
 from repro.compiler.ir import (AffineUpdate, LoweredGroup, LoweringError,
-                               MGOperator, Tap, TiledGroup, TransferStencil,
-                               auto_tile, coarsen_operator, coarsen_shape,
-                               coarsenable, lower_group, lower_update,
-                               mg_fine_operator, mg_hierarchy, tile_group)
+                               MGOperator, RegionSpec, SplitRegions, Tap,
+                               TiledGroup, TransferStencil, auto_tile,
+                               coarsen_operator, coarsen_shape, coarsenable,
+                               lower_group, lower_update, mg_fine_operator,
+                               mg_hierarchy, split_regions, tile_group)
 
 
 __all__ = [
     "AffineUpdate", "CompilerStats", "LoweredGroup", "LoweringError",
-    "MGOperator", "Tap", "TiledGroup", "TransferStencil", "auto_tile",
-    "clear_cache", "coarsen_operator", "coarsen_shape", "coarsenable",
-    "compile_group", "compile_group_sharded", "compile_transfer",
-    "lower_group", "lower_update", "mg_fine_operator", "mg_hierarchy",
-    "reset_stats", "stats", "tile_group", "try_compile",
+    "MGOperator", "RegionSpec", "SplitRegions", "Tap", "TiledGroup",
+    "TransferStencil", "auto_tile", "clear_cache", "coarsen_operator",
+    "coarsen_shape", "coarsenable", "compile_group",
+    "compile_group_sharded", "compile_transfer", "lower_group",
+    "lower_update", "mg_fine_operator", "mg_hierarchy", "reset_stats",
+    "split_regions", "stats", "tile_group", "try_compile",
 ]

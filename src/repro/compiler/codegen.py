@@ -103,24 +103,26 @@ def _field_specs(group: LoweredGroup, shapes: Dict[str, tuple],
 
 
 def _get_kernel(group: LoweredGroup, specs, bx, by, nx, ny, block, interpret,
-                time_tile, wrap, margin=0, batch=1):
+                time_tile, wrap, margin=0, batch=1, region=None):
     from repro.kernels.fused import build_fused_call
     sig = (group, tuple((n, s[0], jnp.dtype(s[1]).name) for n, s in
                         specs.items()), bx, by, nx, ny, tuple(block),
            bool(interpret), int(time_tile), bool(wrap), int(margin),
-           int(batch))
+           int(batch), region)
     hit = _KERNEL_CACHE.get(sig)
     if hit is not None:
         stats.cache_hits += 1
         return hit
-    # one cache entry per (signature, batch): the builder itself is batch-
-    # independent (the per-member kernel is vmapped over the leading axis at
-    # the step layer), but keying on B means one warm entry serves the whole
-    # fleet of that ensemble width — the bench gate "one compile per plan
-    # signature" stays truthful for batched plans.
+    # one cache entry per (signature, batch, region): the builder itself is
+    # batch-independent (the per-member kernel is vmapped over the leading
+    # axis at the step layer), but keying on B means one warm entry serves
+    # the whole fleet of that ensemble width — the bench gate "one compile
+    # per plan signature" stays truthful for batched plans.  ``region`` tags
+    # the overlap scheduler's windowed interior launch (None = whole brick).
     kernel = build_fused_call(group.updates, specs, group.halo, bx, by,
                               nx, ny, block=block, interpret=interpret,
-                              time_tile=time_tile, wrap=wrap, margin=margin)
+                              time_tile=time_tile, wrap=wrap, margin=margin,
+                              region=region)
     stats.kernels_built += 1
     _KERNEL_CACHE[sig] = kernel
     return kernel
@@ -157,10 +159,87 @@ def compile_transfer(kind: str, fine_shape, coarse_shape, dtype,
     return kernel
 
 
+def _build_overlap_step(group, specs, bx, by, nx, ny, block, interpret,
+                        time_tile, wrap, margin, batch, split,
+                        coords_fn, slabs_fn):
+    """One interior/boundary-split step for the exchange/compute overlap.
+
+    The schedule both pallas backends share (single device substitutes wrap
+    slabs for the ppermute exchange):
+
+    1. **exchange in flight** — the depth-``k·h`` margin slabs are extracted
+       (``slabs_fn``) into their own buffers, the *double-buffered margins*:
+       the transfer never aliases the resident buffers the interior launch
+       is writing in place, so ``input_output_aliases`` stays valid.
+    2. **interior launch** — the region at distance ``≥ k·h`` from every
+       brick edge steps ``k`` sub-steps off a window contained in the brick:
+       no margin reads, so nothing orders it after the exchange and the
+       scheduler is free to run both concurrently.
+    3. **boundary launches** — once the slabs land, each shell region's
+       padded window is assembled from the **pre-step** buffers + landed
+       slabs (:func:`repro.engine.layout.strip_window` — bitwise the window
+       a refreshed monolithic launch would read) and stepped by its own
+       small kernel; outputs splice into the written buffers.
+
+    Every launch reuses the monolithic kernel machinery (same per-cell tap
+    arithmetic, same Moat masking from global coordinates), which is why
+    the split output is bitwise-equal to the fused monolithic kernel.
+    """
+    from repro.engine.layout import land_region, strip_window
+
+    ph = time_tile * group.halo
+    in_names = list(specs)
+    interior, written = _get_kernel(group, specs, bx, by, nx, ny, block,
+                                    interpret, time_tile, wrap,
+                                    margin=margin, batch=batch,
+                                    region=split.interior)
+    shells = [
+        _get_kernel(group, specs, r.rx, r.ry, nx, ny, block, interpret,
+                    time_tile, wrap, margin=0, batch=batch)[0]
+        for r in split.shells
+    ]
+
+    def _launch(kern, coords, ins):
+        if batch > 1:
+            return jax.vmap(lambda *a: kern(coords, *a))(*ins)
+        return kern(coords, *ins)
+
+    def step(env):
+        env = dict(env)
+        coords = coords_fn()
+        slabs = {n: slabs_fn(env[n]) for n in in_names}
+        ins = [env[n] for n in in_names]
+        # pin the fusion boundary at the kernel inputs and the in-flight
+        # slab buffers — the same barrier rule the monolithic paths use to
+        # keep FMA contraction identical across margin producers
+        flat = [s for n in in_names for s in slabs[n].values()]
+        pinned = jax.lax.optimization_barrier(tuple(ins) + tuple(flat))
+        ins = list(pinned[:len(in_names)])
+        rest = iter(pinned[len(in_names):])
+        slabs = {n: {key: next(rest) for key in slabs[n]} for n in in_names}
+        ic = coords + jnp.array([[split.interior.x0, split.interior.y0]],
+                                jnp.int32)
+        outs = _launch(interior, ic, ins)
+        new = dict(zip(in_names, ins))
+        new.update(zip(written, outs))
+        for r, kern in zip(split.shells, shells):
+            wins = [strip_window(pre, slabs[n], margin, ph, r, bx, by)
+                    for n, pre in zip(in_names, ins)]
+            wins = list(jax.lax.optimization_barrier(tuple(wins)))
+            sc = coords + jnp.array([[r.x0, r.y0]], jnp.int32)
+            souts = _launch(kern, sc, wins)
+            for name, so in zip(written, souts):
+                new[name] = land_region(new[name], so, margin, r)
+        env.update(new)
+        return env
+
+    return step
+
+
 def compile_group(ops, shapes: Dict[str, tuple], dtypes: Dict[str, object],
                   block=(8, 128), interpret: bool = False, *,
                   time_tile: int = 1, group: LoweredGroup = None,
-                  resident: int = 0, batch: int = 1):
+                  resident: int = 0, batch: int = 1, overlap: bool = False):
     """Lower + codegen one loop body for single-device execution.
 
     Returns ``step(env) -> env`` fusing all of ``ops`` into one pallas_call;
@@ -188,8 +267,14 @@ def compile_group(ops, shapes: Dict[str, tuple], dtypes: Dict[str, object],
     The step is **not** built by vmapping the whole batch=1 step: the
     barrier that pins the resident/legacy bitwise guarantee has no batching
     rule, so batching is threaded below it instead.
+
+    ``overlap=True`` (resident mode only) splits the launch into an interior
+    kernel + four boundary shell kernels so the margin refresh overlaps the
+    interior compute (see :func:`_build_overlap_step`); bodies whose brick
+    is too small for a nonempty interior (or halo-free bodies) silently keep
+    the monolithic launch.
     """
-    from repro.compiler.ir import tile_group
+    from repro.compiler.ir import split_regions, tile_group
 
     if group is None:
         group = lower_group(ops)
@@ -201,6 +286,19 @@ def compile_group(ops, shapes: Dict[str, tuple], dtypes: Dict[str, object],
     if resident and resident < ph:
         raise LoweringError(
             f"resident margin {resident} < tiled halo {ph}")
+    if overlap and resident:
+        split = split_regions(group, time_tile, (nx, ny))
+        if split is not None:
+            from repro.engine.layout import wrap_slabs
+
+            coords0 = jnp.zeros((1, 2), jnp.int32)
+            step = _build_overlap_step(
+                group, specs, nx, ny, nx, ny, block, interpret, time_tile,
+                True, resident, batch, split,
+                coords_fn=lambda: coords0,
+                slabs_fn=lambda buf: wrap_slabs(buf, resident, ph))
+            stats.groups_fused += 1
+            return step
     fused, written = _get_kernel(group, specs, nx, ny, nx, ny, block,
                                  interpret, time_tile, wrap=True,
                                  margin=resident, batch=batch)
@@ -255,7 +353,8 @@ def compile_group_sharded(ops, shapes: Dict[str, tuple],
                           dtypes: Dict[str, object], *, mesh_xy, axis_names,
                           block=(8, 128), interpret: bool = False,
                           time_tile: int = 1, group: LoweredGroup = None,
-                          resident: int = 0, batch: int = 1):
+                          resident: int = 0, batch: int = 1,
+                          overlap: bool = False):
     """Lower + codegen one loop body for use *inside* ``shard_map``.
 
     ``shapes`` are the global field shapes; the returned ``step`` operates on
@@ -269,9 +368,15 @@ def compile_group_sharded(ops, shapes: Dict[str, tuple],
     same ppermute traffic, no concatenated repack) and the kernel writes in
     place via ``input_output_aliases``.  Bitwise identical to the repacking
     step at every precision.
+
+    ``overlap=True`` (resident mode only) splits each launch into an
+    interior kernel — concurrent with the margin slabs' ``ppermute``
+    exchange, which it does not depend on — plus four boundary shell
+    kernels fed by the landed slabs (:func:`_build_overlap_step`).  Bricks
+    too small for a nonempty interior keep the monolithic launch.
     """
-    from repro.compiler.ir import tile_group
-    from repro.core.halo import halo_pad, halo_refresh
+    from repro.compiler.ir import split_regions, tile_group
+    from repro.core.halo import exchange_slabs, halo_pad, halo_refresh
 
     if group is None:
         group = lower_group(ops)
@@ -287,16 +392,28 @@ def compile_group_sharded(ops, shapes: Dict[str, tuple],
     if resident and resident < ph:
         raise LoweringError(
             f"resident margin {resident} < tiled halo {ph}")
-    fused, written = _get_kernel(group, specs, bx, by, nx, ny, block,
-                                 interpret, time_tile, wrap=False,
-                                 margin=resident, batch=batch)
-    in_names = list(specs)
-    stats.groups_fused += 1
 
     def _coords():
         cx = jax.lax.axis_index(ax_x) * bx
         cy = jax.lax.axis_index(ax_y) * by
         return jnp.stack([cx, cy]).astype(jnp.int32).reshape(1, 2)
+
+    if overlap and resident:
+        split = split_regions(group, time_tile, (bx, by))
+        if split is not None:
+            step = _build_overlap_step(
+                group, specs, bx, by, nx, ny, block, interpret, time_tile,
+                False, resident, batch, split,
+                coords_fn=_coords,
+                slabs_fn=lambda buf: exchange_slabs(
+                    buf, resident, ph, ax_x, ax_y, mx, my))
+            stats.groups_fused += 1
+            return step
+    fused, written = _get_kernel(group, specs, bx, by, nx, ny, block,
+                                 interpret, time_tile, wrap=False,
+                                 margin=resident, batch=batch)
+    in_names = list(specs)
+    stats.groups_fused += 1
 
     def _call(coords, ins):
         # batched bricks: the exchange/barrier above already ran on the

@@ -143,12 +143,43 @@ def tile_group(group: LoweredGroup, k: int,
 
 
 def auto_tile(group: LoweredGroup, brick_xy: Tuple[int, int],
-              n_steps: int, max_k: int = 8) -> int:
-    """Pick a time-tile factor: the largest power of two ``k ≤ max_k`` that
-    divides the trip count (auto-tiled runs never need a remainder kernel)
-    and whose tiled halo stays small next to the brick
+              n_steps: int, max_k: int = 8, *, cost=None, nz: int = None
+              ) -> int:
+    """Pick a time-tile factor.
+
+    Without a cost model this is the static rule: the largest power of two
+    ``k ≤ max_k`` that divides the trip count (auto-tiled runs never need a
+    remainder kernel) and whose tiled halo stays small next to the brick
     (``4·k·h ≤ min(bx, by)``, i.e. at most ~25% linear overhead per side).
-    Halo-free bodies tile purely for launch amortization."""
+    Halo-free bodies tile purely for launch amortization.
+
+    With ``cost=`` (a calibrated :class:`repro.core.perfmodel.MeasuredCost`
+    for this body's signature) and ``nz``, the choice is the argmin of the
+    *measured* model over every legal power-of-two candidate — each scored
+    as the better of its fused and overlap-split schedules
+    (:func:`repro.core.perfmodel.predict_step_us`).  ``k = 1`` is always a
+    candidate, so a model-driven pick can never lose to untiled stepping by
+    construction.
+    """
+    if cost is not None and nz is not None and n_steps > 1:
+        from repro.core.perfmodel import predict_step_us
+
+        best_k, best_t = 1, predict_step_us(cost, brick_xy, nz,
+                                            group.halo, 1)
+        cand = 2
+        while cand <= min(max_k, n_steps):
+            legal = (n_steps % cand == 0
+                     and (group.halo == 0
+                          or cand * group.halo <= min(brick_xy)))
+            if legal:
+                t = predict_step_us(cost, brick_xy, nz, group.halo, cand)
+                ts = predict_step_us(cost, brick_xy, nz, group.halo, cand,
+                                     split=True)
+                t = min(t, ts)
+                if t < best_t:
+                    best_k, best_t = cand, t
+            cand *= 2
+        return best_k
     cand = max_k
     while cand >= 2:
         if (cand <= n_steps and n_steps % cand == 0
@@ -157,6 +188,72 @@ def auto_tile(group: LoweredGroup, brick_xy: Tuple[int, int],
             return cand
         cand //= 2
     return 1
+
+
+# ---------------------------------------------------------------------------
+# interior/boundary region split (exchange/compute overlap)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionSpec:
+    """One rectangular (X, Y) sub-region of a brick's output plane.
+
+    ``(x0, y0)`` is the region origin in brick coordinates, ``(rx, ry)``
+    its extent.  The fused kernel builder windows its launch to the region
+    (:func:`repro.kernels.fused.build_fused_call` with ``region=``), so one
+    loop body can be decomposed into several sub-launches whose outputs
+    tile the brick exactly.
+    """
+
+    x0: int
+    y0: int
+    rx: int
+    ry: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitRegions:
+    """Interior/boundary decomposition of one tiled launch.
+
+    ``interior`` is the deep region at distance ``≥ m = k·h`` from every
+    brick edge: its depth-``m`` input window is contained in the brick, so
+    the launch depends on **no** incoming halo data and can run while the
+    margin exchange is still in flight.  ``shells`` are the four boundary
+    rectangles covering the rest of the brick (two full-height X slabs +
+    two X-interior Y strips); their windows reach into the refreshed
+    margins, so they launch only once the exchanged slabs have landed.
+    The five output regions partition the brick — no cell is written twice.
+    """
+
+    interior: RegionSpec
+    shells: Tuple[RegionSpec, ...]
+
+
+def split_regions(group: LoweredGroup, k: int, brick_xy: Tuple[int, int]
+                  ) -> SplitRegions:
+    """Interior/boundary split of a ``k``-tiled launch, or ``None``.
+
+    Returns ``None`` when there is nothing to overlap: halo-free bodies
+    (no exchange to hide) and bricks too small to keep a nonempty interior
+    at depth ``m = k·h`` (``bx ≤ 2m`` or ``by ≤ 2m``).  The legality mirror
+    of :func:`tile_group`'s bound — a brick that admits the split also
+    admits the tile.
+    """
+    m = k * group.halo
+    if m == 0:
+        return None
+    bx, by = brick_xy
+    if bx <= 2 * m or by <= 2 * m:
+        return None
+    interior = RegionSpec(m, m, bx - 2 * m, by - 2 * m)
+    shells = (
+        RegionSpec(0, 0, m, by),                 # low-X slab (full Y)
+        RegionSpec(bx - m, 0, m, by),            # high-X slab
+        RegionSpec(m, 0, bx - 2 * m, m),         # low-Y strip
+        RegionSpec(m, by - m, bx - 2 * m, m),    # high-Y strip
+    )
+    return SplitRegions(interior=interior, shells=shells)
 
 
 # ---------------------------------------------------------------------------

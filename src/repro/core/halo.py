@@ -56,6 +56,45 @@ def halo_pad(local, h: int, ax_x: str, ax_y: str, mx: int, my: int):
     return jnp.concatenate([lo_y, local, hi_y], axis=-2)
 
 
+def exchange_slabs(resident, margin: int, h: int, ax_x: str, ax_y: str,
+                   mx: int, my: int):
+    """Exchange the depth-``h`` margin slabs into *separate* buffers.
+
+    The mesh counterpart of :func:`repro.engine.layout.wrap_slabs`: two
+    ``ppermute`` edge transfers per axis, the Y transfers sourced from the
+    x-extended rows (own edge columns flanked by the incoming X slabs'
+    corner pieces), so corner cells arrive from the diagonal neighbour in
+    two fabric hops — bitwise what :func:`halo_pad`'s concatenates build,
+    zero fill on domain-edge bricks included.  The slabs stay in their own
+    small arrays until :func:`repro.engine.layout.land_slabs` stores them:
+    the returned dict is the *in-flight exchange* the overlap scheduler
+    launches the interior kernel alongside, never aliasing the resident
+    buffer that kernel writes.  Leading (batch) axes travel whole.
+    """
+    K = margin
+    bx = resident.shape[-3] - 2 * K
+    by = resident.shape[-2] - 2 * K
+    # X axis: slabs of the interior's edge rows (full interior Y extent).
+    lo_x = _ppermute_shift(resident[..., K + bx - h:K + bx, K:K + by, :],
+                           ax_x, mx, +1)
+    hi_x = _ppermute_shift(resident[..., K:K + h, K:K + by, :], ax_x, mx, -1)
+    # Y axis: sources span the x-extended rows (corner pieces from the X
+    # slabs just received), exactly like halo_pad's second concat.
+    src_lo = jnp.concatenate([
+        lo_x[..., :, by - h:by, :],
+        resident[..., K:K + bx, K + by - h:K + by, :],
+        hi_x[..., :, by - h:by, :],
+    ], axis=-3)
+    src_hi = jnp.concatenate([
+        lo_x[..., :, 0:h, :],
+        resident[..., K:K + bx, K:K + h, :],
+        hi_x[..., :, 0:h, :],
+    ], axis=-3)
+    lo_y = _ppermute_shift(src_lo, ax_y, my, +1)
+    hi_y = _ppermute_shift(src_hi, ax_y, my, -1)
+    return {"lo_x": lo_x, "hi_x": hi_x, "lo_y": lo_y, "hi_y": hi_y}
+
+
 def halo_refresh(resident, margin: int, h: int, ax_x: str, ax_y: str,
                  mx: int, my: int):
     """Refresh the depth-``h`` margin of a halo-*resident* brick in place.
@@ -63,35 +102,20 @@ def halo_refresh(resident, margin: int, h: int, ax_x: str, ax_y: str,
     ``resident`` is a (bx + 2·margin, by + 2·margin, Z) buffer whose interior
     holds the brick (see :class:`repro.engine.layout.HaloLayout`).  Instead
     of rebuilding a padded copy per step (:func:`halo_pad`'s concatenate),
-    only the four margin *slabs* move: two ``ppermute`` edge transfers per
-    axis, each written back with ``dynamic_update_slice`` — the narrow
-    in-place update that keeps fields resident while halos travel.  The slab
-    contents (including corners, and the zero fill on domain-edge bricks)
-    are bitwise identical to what :func:`halo_pad` would have produced, so
-    resident and repacking execution agree exactly.  Leading (batch) axes
-    pass through — one slab transfer refreshes every ensemble member.
+    only the four margin *slabs* move (:func:`exchange_slabs`), each written
+    back with ``dynamic_update_slice`` — the narrow in-place update that
+    keeps fields resident while halos travel.  The slab contents (including
+    corners, and the zero fill on domain-edge bricks) are bitwise identical
+    to what :func:`halo_pad` would have produced, so resident and repacking
+    execution agree exactly.  Leading (batch) axes pass through — one slab
+    transfer refreshes every ensemble member.
     """
     if h == 0:
         return resident
-    K = margin
-    bx = resident.shape[-3] - 2 * K
-    by = resident.shape[-2] - 2 * K
-    lead = (0,) * (resident.ndim - 3)
-    upd = jax.lax.dynamic_update_slice
-    # X axis: slabs of the interior's edge rows (full interior Y extent).
-    lo_x = _ppermute_shift(resident[..., K + bx - h:K + bx, K:K + by, :],
-                           ax_x, mx, +1)
-    resident = upd(resident, lo_x, lead + (K - h, K, 0))
-    hi_x = _ppermute_shift(resident[..., K:K + h, K:K + by, :], ax_x, mx, -1)
-    resident = upd(resident, hi_x, lead + (K + bx, K, 0))
-    # Y axis: slabs spanning the x-extended rows (fills the corners with the
-    # diagonal neighbour's data, exactly like halo_pad's second concat).
-    lo_y = _ppermute_shift(
-        resident[..., K - h:K + bx + h, K + by - h:K + by, :], ax_y, my, +1)
-    resident = upd(resident, lo_y, lead + (K - h, K - h, 0))
-    hi_y = _ppermute_shift(
-        resident[..., K - h:K + bx + h, K:K + h, :], ax_y, my, -1)
-    return upd(resident, hi_y, lead + (K - h, K + by, 0))
+    from repro.engine.layout import land_slabs
+
+    slabs = exchange_slabs(resident, margin, h, ax_x, ax_y, mx, my)
+    return land_slabs(resident, slabs, margin, h)
 
 
 def local_moat_mask(bx: int, by: int, ax_x: str, ax_y: str, mx: int, my: int):

@@ -14,10 +14,29 @@ run at one cycle per element; a TPU chip does not, so the analogue is the
 three-term roofline  t = max(t_compute, t_memory) + t_collective  (collective
 unoverlapped, matching Eq. 7's max(comp, comm) + t_b structure), evaluated
 from per-step FLOPs / bytes / collective-bytes.  Constants are TPU v5e.
+
+Measured cost model
+-------------------
+
+The analytic equations predict *hardware* rates; the planner's tiling and
+overlap decisions need the cost of *this* body on *this* device, so the
+second half of the module is a measured model: :func:`calibrate` times one
+lowered loop body at a few tile factors, fits the two-parameter launch+
+throughput line, measures the halo-exchange and boundary-launch overheads,
+and stores the result as a :class:`MeasuredCost` in the process-wide
+:data:`cost_model` (persistable to a JSON manifest; point
+``REPRO_COST_MANIFEST`` at one to pre-load it).  :func:`predict_step_us`
+then scores any (brick, k, fused-vs-split) schedule with the Eq. 7
+``max(comp, comm) + t_b`` structure, and ``auto_tile`` /
+``RunOptions(overlap="auto")`` consume those scores.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import os
+from typing import Dict, Optional, Tuple
 
 # -- hardware constants ------------------------------------------------------
 
@@ -130,3 +149,362 @@ def roofline_time(c: StepCost, *, flops_peak: float = TPU_V5E_FP32_FLOPS,
             "t_total": total, "rate": 1.0 / total,
             "bound": max(("compute", t_comp), ("memory", t_mem),
                          ("collective", t_coll), key=lambda kv: kv[1])[0]}
+
+
+# -- measured cost model -----------------------------------------------------
+
+#: env var naming a JSON manifest the process-wide model lazily pre-loads
+MANIFEST_ENV = "REPRO_COST_MANIFEST"
+
+#: manifest schema version (bump on incompatible entry-field changes)
+MANIFEST_SCHEMA = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class MeasuredCost:
+    """Calibrated cost of one lowered loop body on one device.
+
+    The fitted model is per *tile* (one fused launch advancing ``k`` steps):
+
+        t_tile(k) = launch_us + exchange_us + cell_ns·cells(k) / 1000
+
+    where ``cells(k)`` counts every sub-step output cell of the trapezoid
+    (:func:`tile_cells` — the redundant halo recompute is what the model
+    trades against the amortized exchange).  ``boundary_us`` is the extra
+    fixed overhead of one boundary-shell launch in the overlap split.
+    """
+
+    signature: str     # body_signature() this entry was measured for
+    device: str        # jax backend (+ ":interpret" under forced interpret)
+    cell_ns: float     # fitted per-sub-step-output-cell time
+    launch_us: float   # fixed per-tile overhead net of the exchange
+    exchange_us: float  # margin refresh / halo exchange per tile
+    boundary_us: float  # extra fixed overhead per boundary shell launch
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def current_device() -> str:
+    """Device tag calibration entries are keyed under.
+
+    Forced-interpret runs (``REPRO_FORCE_INTERPRET=1``) time the pallas
+    interpreter, not compiled kernels, so they get a distinct tag — an
+    interpret-mode manifest can never steer a compiled run.
+    """
+    import jax
+
+    from repro.kernels.ops import _interpret
+
+    tag = jax.default_backend()
+    return tag + ":interpret" if _interpret() else tag
+
+
+def body_signature(group, nz: int, dtype, device: Optional[str] = None) -> str:
+    """Stable identity of (lowered body, z extent, dtype, device).
+
+    Hashes the canonical tap form — not the source spelling — so any program
+    that lowers to the same :class:`~repro.compiler.ir.LoweredGroup` shares
+    one calibration entry.  Brick extent is deliberately *not* part of the
+    key: the fitted model is evaluated per brick at plan time, which is what
+    lets one calibration serve every decomposition of the same body.
+    """
+    import numpy as np
+
+    if device is None:
+        device = current_device()
+    key = repr((tuple(group.updates), group.halo, int(nz),
+                np.dtype(dtype).name, device))
+    return hashlib.sha1(key.encode()).hexdigest()[:16]
+
+
+def tile_cells(brick_xy: Tuple[int, int], nz: int, h: int, k: int) -> int:
+    """Sub-step output cells of one monolithic k-tile on a brick.
+
+    Trapezoid blocking: sub-step ``s`` writes the window that still has
+    ``(k-1-s)·h`` of shrink left, so the first sub-step is the widest.
+
+    >>> tile_cells((8, 8), 4, 1, 1)   # untiled: just the brick
+    256
+    >>> tile_cells((8, 8), 4, 1, 2)   # + one 10x10 first sub-step
+    656
+    """
+    return sum((brick_xy[0] + 2 * (k - 1 - s) * h)
+               * (brick_xy[1] + 2 * (k - 1 - s) * h)
+               for s in range(k)) * nz
+
+
+def _split_cells(brick_xy, nz: int, h: int, k: int):
+    """(interior_cells, shell_cells, n_shells) of the overlap split, or
+    ``None`` where the interior would be empty — the same geometry as
+    :func:`repro.compiler.ir.split_regions` (depth ``m = k·h``: two
+    full-height X slabs plus two X-interior Y strips)."""
+    m = k * h
+    bx, by = brick_xy
+    if m == 0 or bx <= 2 * m or by <= 2 * m:
+        return None
+    interior = tile_cells((bx - 2 * m, by - 2 * m), nz, h, k)
+    shells = (2 * tile_cells((m, by), nz, h, k)
+              + 2 * tile_cells((bx - 2 * m, m), nz, h, k))
+    return interior, shells, 4
+
+
+def predict_step_us(cost: MeasuredCost, brick_xy: Tuple[int, int], nz: int,
+                    h: int, k: int, split: bool = False) -> float:
+    """Model time per *logical step* of one schedule, in microseconds.
+
+    Fused: ``(L + E + c·cells(k)) / k`` — the whole exchange serializes with
+    the launch.  Split (Eq. 7's ``max(comp, comm) + t_b``): the exchange
+    travels while the interior computes, then the boundary shells pay their
+    per-launch overhead::
+
+        (L + max(c·cells_int, E) + n_shells·B + c·cells_shells) / k
+
+    An illegal split (empty interior at depth ``k·h``) scores ``inf`` so it
+    can never be selected.
+    """
+    cells = tile_cells(brick_xy, nz, h, k)
+    if not split:
+        t = cost.launch_us + cost.exchange_us + cost.cell_ns * cells * 1e-3
+        return t / k
+    sp = _split_cells(brick_xy, nz, h, k)
+    if sp is None:
+        return float("inf")
+    int_cells, sh_cells, n_sh = sp
+    t = (cost.launch_us
+         + max(cost.cell_ns * int_cells * 1e-3, cost.exchange_us)
+         + n_sh * cost.boundary_us
+         + cost.cell_ns * sh_cells * 1e-3)
+    return t / k
+
+
+class CostModel:
+    """In-process store of :class:`MeasuredCost` entries, keyed by signature.
+
+    The module-level :data:`cost_model` instance is what the planner
+    consults; it lazily merges the manifest named by ``REPRO_COST_MANIFEST``
+    on first lookup, so calibration can happen in a separate process (the
+    benchmark harness) and steer later runs.
+    """
+
+    def __init__(self):
+        self.entries: Dict[str, MeasuredCost] = {}
+        self._env_loaded = False
+
+    def _maybe_load_env(self) -> None:
+        if self._env_loaded:
+            return
+        self._env_loaded = True
+        path = os.environ.get(MANIFEST_ENV)
+        if path and os.path.exists(path):
+            self.load_manifest(path)
+
+    def put(self, entry: MeasuredCost) -> None:
+        self.entries[entry.signature] = entry
+
+    def get(self, signature: str) -> Optional[MeasuredCost]:
+        self._maybe_load_env()
+        return self.entries.get(signature)
+
+    def lookup(self, group, nz: int, dtype) -> Optional[MeasuredCost]:
+        """The planner's query: this body's entry for the current device."""
+        return self.get(body_signature(group, nz, dtype))
+
+    def clear(self) -> None:
+        self.entries.clear()
+        self._env_loaded = False
+
+    def save_manifest(self, path: str) -> None:
+        data = {"schema": MANIFEST_SCHEMA,
+                "entries": {s: e.to_json() for s, e in self.entries.items()}}
+        with open(path, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+
+    def load_manifest(self, path: str) -> int:
+        """Merge entries from ``path``; returns how many were loaded."""
+        with open(path) as f:
+            data = json.load(f)
+        if data.get("schema") != MANIFEST_SCHEMA:
+            raise ValueError(
+                f"cost manifest {path}: schema {data.get('schema')!r} != "
+                f"{MANIFEST_SCHEMA}")
+        n = 0
+        for sig, e in data.get("entries", {}).items():
+            self.entries[sig] = MeasuredCost(
+                signature=sig, device=e["device"],
+                cell_ns=float(e["cell_ns"]),
+                launch_us=float(e["launch_us"]),
+                exchange_us=float(e["exchange_us"]),
+                boundary_us=float(e["boundary_us"]))
+            n += 1
+        return n
+
+
+#: process-wide model the planner consults (see :class:`CostModel`)
+cost_model = CostModel()
+
+
+def _fit_line(xs, ys) -> Tuple[float, float]:
+    """Least-squares ``y = a·x + b`` with slope clamped non-negative."""
+    n = len(xs)
+    mx, my = sum(xs) / n, sum(ys) / n
+    sxx = sum((x - mx) ** 2 for x in xs)
+    if sxx == 0.0:
+        return 0.0, my
+    a = sum((x - mx) * (y - my) for x, y in zip(xs, ys)) / sxx
+    a = max(a, 0.0)
+    return a, my - a * mx
+
+
+def _time_step_us(step, env, reps: int, inner: int) -> Tuple[float, dict]:
+    """Best-of-``reps`` steady-state time of ``env -> env`` in microseconds.
+
+    Jits ``step`` with donated input and chains the env through every call,
+    so what is timed is the executor's resident stepping, not a repack."""
+    import time
+
+    import jax
+
+    run = jax.jit(step, donate_argnums=0)
+    env = run({k: v for k, v in env.items()})  # compile + warm
+    jax.block_until_ready(list(env.values()))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            env = run(env)
+        jax.block_until_ready(list(env.values()))
+        best = min(best, (time.perf_counter() - t0) / inner)
+    return best * 1e6, env
+
+
+def calibrate(ops, shapes: Dict[str, tuple], dtypes: Dict[str, object], *,
+              ks: Tuple[int, ...] = (1, 2, 4), reps: int = 3,
+              inner: int = 8, model: Optional[CostModel] = None,
+              manifest: Optional[str] = None) -> MeasuredCost:
+    """Measure one loop body's :class:`MeasuredCost` and store it.
+
+    Times the resident fused step at each legal ``k`` in ``ks`` (steady
+    state, donated buffers — the schedule the executor actually runs), fits
+    ``t_tile = intercept + slope·cells(k)``, measures the margin refresh
+    alone for ``exchange_us``, and one overlap-split step to expose the
+    per-shell ``boundary_us``.  The entry lands in ``model`` (default: the
+    process-wide :data:`cost_model`) and, when ``manifest`` names a path, in
+    that JSON manifest too.  Raises
+    :class:`~repro.compiler.ir.LoweringError` for bodies that do not fuse —
+    there is nothing to calibrate for the interpreter path.
+    """
+    import jax.numpy as jnp
+
+    from repro.compiler import lower_group
+    from repro.compiler.codegen import compile_group
+    from repro.engine.layout import HaloLayout, wrap_refresh
+    from repro.engine.stats import stats
+
+    group = lower_group(ops)
+    name0 = group.fields_written()[0]
+    nx, ny, nz = shapes[name0]
+    dtype = dtypes[name0]
+    h = group.halo
+
+    legal = [k for k in ks
+             if h == 0 or k * h <= min(nx, ny)]
+    if not legal:
+        legal = [1]
+
+    def resident_env(K: int):
+        env0 = {n: jnp.zeros(shapes[n], dtypes[n]) for n in shapes}
+        return HaloLayout(pad=K, shapes=shapes).enter(env0)
+
+    points = []  # (cells per tile, measured us per tile)
+    for k in sorted(set(legal)):
+        K = max(k * h, 0)
+        step = compile_group(ops, shapes, dtypes, time_tile=k, group=group,
+                             resident=K, interpret=_calib_interpret())
+        t_us, _ = _time_step_us(step, resident_env(K), reps, inner)
+        points.append((tile_cells((nx, ny), nz, h, k), t_us))
+
+    slope_us, intercept_us = _fit_line([p[0] for p in points],
+                                       [p[1] for p in points])
+    cell_ns = slope_us * 1e3
+    intercept_us = max(intercept_us, 0.0)
+
+    # the exchange alone: the k=1-depth margin refresh on resident buffers
+    exchange_us = 0.0
+    if h > 0:
+        K = h
+
+        def refresh(env):
+            return {n: wrap_refresh(v, K, h) for n, v in env.items()}
+
+        exchange_us, _ = _time_step_us(refresh, resident_env(K), reps, inner)
+        exchange_us = min(exchange_us, intercept_us)
+    launch_us = max(intercept_us - exchange_us, 0.0)
+
+    # one split step exposes the per-shell overhead
+    boundary_us = launch_us
+    from repro.compiler.ir import split_regions
+
+    k_b = next((k for k in sorted(set(legal), reverse=True)
+                if split_regions(group, k, (nx, ny)) is not None), None)
+    if k_b is not None:
+        int_cells, sh_cells, n_sh = _split_cells((nx, ny), nz, h, k_b)
+        K = k_b * h
+        step = compile_group(ops, shapes, dtypes, time_tile=k_b, group=group,
+                             resident=K, overlap=True,
+                             interpret=_calib_interpret())
+        t_split, _ = _time_step_us(step, resident_env(K), reps, inner)
+        spent = (launch_us + max(cell_ns * int_cells * 1e-3, exchange_us)
+                 + cell_ns * sh_cells * 1e-3)
+        boundary_us = max((t_split - spent) / n_sh, 0.0)
+
+    entry = MeasuredCost(
+        signature=body_signature(group, nz, dtype),
+        device=current_device(),
+        cell_ns=cell_ns,
+        launch_us=launch_us,
+        exchange_us=exchange_us,
+        boundary_us=boundary_us,
+    )
+    if model is None:
+        model = cost_model
+    model.put(entry)
+    stats.calibrations += 1
+    if manifest:
+        model.save_manifest(manifest)
+    return entry
+
+
+def _calib_interpret() -> bool:
+    from repro.kernels.ops import _interpret
+
+    return _interpret()
+
+
+def calibrate_program(program, *, ks: Tuple[int, ...] = (1, 2, 4),
+                      reps: int = 3, inner: int = 8,
+                      model: Optional[CostModel] = None,
+                      manifest: Optional[str] = None) -> Dict[str, MeasuredCost]:
+    """Calibrate every fusible loop body of a recorded program.
+
+    Returns ``{first written field: entry}`` per calibrated body; bodies
+    that do not lower are skipped (they run on the interpreter, where the
+    tiling decision the model steers does not exist).
+    """
+    from repro.compiler import LoweringError, lower_group
+    from repro.core.program import _group_ops
+
+    shapes = {n: f.shape for n, f in program.fields.items()}
+    dtypes = {n: f.dtype for n, f in program.fields.items()}
+    out: Dict[str, MeasuredCost] = {}
+    for loop, ops in _group_ops(program):
+        if loop is None:
+            continue
+        try:
+            group = lower_group(ops)
+        except LoweringError:
+            continue
+        entry = calibrate(ops, shapes, dtypes, ks=ks, reps=reps,
+                          inner=inner, model=model, manifest=manifest)
+        out[group.fields_written()[0]] = entry
+    return out

@@ -134,6 +134,14 @@ def _account(plan: ExecutionPlan) -> None:
             launches = tiled + (n % k if k > 1 else n)
             stats.launches += launches
             stats.tiles_fused += tiled
+            if seg.split:
+                # overlap split: every launch event is one interior kernel
+                # plus `split` boundary shells, its exchange slabs in
+                # flight while the interior computes
+                stats.interior_launches += launches
+                stats.boundary_launches += launches * seg.split
+                if seg.halo > 0:
+                    stats.overlapped_exchanges += launches
             if seg.halo > 0:
                 stats.exchanges += launches
                 if not resident:

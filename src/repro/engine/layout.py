@@ -94,6 +94,78 @@ class HaloLayout:
         return {n: v[..., K:-K, K:-K, :] for n, v in env.items()}
 
 
+def slab_rects(bx: int, by: int, h: int) -> Dict[str, Tuple[int, int, int, int]]:
+    """Margin-slab geometry: name -> (ox, oy, sx, sy) in *brick* coordinates.
+
+    The four depth-``h`` margin slabs of a (bx, by) brick, X slabs spanning
+    the interior rows and Y slabs spanning the x-extended rows (so corners
+    carry the diagonal neighbour / double-wrap data).  The rectangles are
+    pairwise disjoint and exactly cover the margin frame.  Shared by the
+    wrap refresh, the mesh exchange (:func:`repro.core.halo.exchange_slabs`)
+    and the overlap scheduler's strip assembly, so the three cannot drift.
+    """
+    return {
+        "lo_x": (-h, 0, h, by),
+        "hi_x": (bx, 0, h, by),
+        "lo_y": (-h, -h, bx + 2 * h, h),
+        "hi_y": (-h, by, bx + 2 * h, h),
+    }
+
+
+def wrap_slabs(resident, margin: int, h: int) -> Dict[str, jnp.ndarray]:
+    """Extract the depth-``h`` wrap margin slabs into *separate* buffers.
+
+    The double-buffered half of the single-device margin refresh: the slab
+    values are exactly what ``jnp.pad(interior, h, mode="wrap")`` would put
+    in the margin frame (Y slabs assembled from the X slabs + interior edge
+    columns, so corners wrap in both axes bitwise), but they live in their
+    own small arrays — never aliasing the resident buffer an in-flight
+    interior kernel writes — until :func:`land_slabs` stores them.
+    """
+    K = margin
+    bx = resident.shape[-3] - 2 * K
+    by = resident.shape[-2] - 2 * K
+    lo_x = resident[..., K + bx - h : K + bx, K : K + by, :]
+    hi_x = resident[..., K : K + h, K : K + by, :]
+    lo_y = jnp.concatenate(
+        [
+            lo_x[..., :, by - h : by, :],
+            resident[..., K : K + bx, K + by - h : K + by, :],
+            hi_x[..., :, by - h : by, :],
+        ],
+        axis=-3,
+    )
+    hi_y = jnp.concatenate(
+        [
+            lo_x[..., :, 0:h, :],
+            resident[..., K : K + bx, K : K + h, :],
+            hi_x[..., :, 0:h, :],
+        ],
+        axis=-3,
+    )
+    return {"lo_x": lo_x, "hi_x": hi_x, "lo_y": lo_y, "hi_y": hi_y}
+
+
+def land_slabs(resident, slabs: Dict[str, jnp.ndarray], margin: int, h: int):
+    """Store extracted margin slabs into the resident buffer's margin frame.
+
+    The landing half of the refresh: four ``dynamic_update_slice`` writes at
+    the :func:`slab_rects` rectangles (disjoint, so order is irrelevant).
+    Leading (batch) axes pass through whole.
+    """
+    if h == 0:
+        return resident
+    K = margin
+    bx = resident.shape[-3] - 2 * K
+    by = resident.shape[-2] - 2 * K
+    lead = (0,) * (resident.ndim - 3)
+    for name, (ox, oy, _, _) in slab_rects(bx, by, h).items():
+        resident = jax.lax.dynamic_update_slice(
+            resident, slabs[name], lead + (K + ox, K + oy, 0)
+        )
+    return resident
+
+
 def wrap_refresh(resident, margin: int, h: int):
     """Refresh the depth-``h`` wrap margin of a resident array in place.
 
@@ -101,25 +173,58 @@ def wrap_refresh(resident, margin: int, h: int):
     reproduces exactly what ``jnp.pad(interior, h, mode="wrap")`` would have
     built — the periodic margins the roll interpreter's semantics demand —
     but as four ``dynamic_update_slice`` edge slabs into the standing buffer
-    instead of a fresh padded copy of the whole field.  X slabs come from
-    the interior's edge rows; Y slabs span the x-extended rows so corners
-    wrap in both axes, matching ``jnp.pad``'s corner rule bitwise.
+    (:func:`wrap_slabs` extracted, :func:`land_slabs` stored) instead of a
+    fresh padded copy of the whole field.
 
     ``resident`` may carry leading (batch) axes: slabs span them whole, so
     one update refreshes every ensemble member's margin at once.
     """
     if h == 0:
         return resident
+    return land_slabs(resident, wrap_slabs(resident, margin, h), margin, h)
+
+
+def strip_window(
+    resident,
+    slabs: Dict[str, jnp.ndarray],
+    margin: int,
+    h: int,
+    region,
+    bx: int,
+    by: int,
+):
+    """Assemble one boundary region's padded input window.
+
+    ``region`` is a shell :class:`repro.compiler.ir.RegionSpec`; the window
+    is the ``(rx + 2h, ry + 2h, Z)`` input its depth-``h`` (= ``k·halo``)
+    kernel launch consumes — brick cells sliced from the **pre-step**
+    resident buffer, margin cells overwritten from the landed ``slabs``
+    (rect intersection with :func:`slab_rects`).  Cell for cell this equals
+    the window the monolithic kernel would have read off a refreshed
+    buffer, which is what makes the split bitwise-exact; slicing from the
+    pre-step buffer is also what lets the interior kernel write the same
+    buffer in place concurrently.
+    """
     K = margin
-    nx = resident.shape[-3] - 2 * K
-    ny = resident.shape[-2] - 2 * K
+    wx0, wy0 = region.x0 - h, region.y0 - h
+    wx1, wy1 = region.x0 + region.rx + h, region.y0 + region.ry + h
+    win = resident[..., K + wx0 : K + wx1, K + wy0 : K + wy1, :]
     lead = (0,) * (resident.ndim - 3)
-    upd = jax.lax.dynamic_update_slice
-    lo_x = resident[..., K + nx - h : K + nx, K : K + ny, :]
-    resident = upd(resident, lo_x, lead + (K - h, K, 0))
-    hi_x = resident[..., K : K + h, K : K + ny, :]
-    resident = upd(resident, hi_x, lead + (K + nx, K, 0))
-    lo_y = resident[..., K - h : K + nx + h, K + ny - h : K + ny, :]
-    resident = upd(resident, lo_y, lead + (K - h, K - h, 0))
-    hi_y = resident[..., K - h : K + nx + h, K : K + h, :]
-    return upd(resident, hi_y, lead + (K - h, K + ny, 0))
+    for name, (ox, oy, sx, sy) in slab_rects(bx, by, h).items():
+        ix0, iy0 = max(ox, wx0), max(oy, wy0)
+        ix1, iy1 = min(ox + sx, wx1), min(oy + sy, wy1)
+        if ix0 >= ix1 or iy0 >= iy1:
+            continue
+        piece = slabs[name][..., ix0 - ox : ix1 - ox, iy0 - oy : iy1 - oy, :]
+        win = jax.lax.dynamic_update_slice(
+            win, piece, lead + (ix0 - wx0, iy0 - wy0, 0)
+        )
+    return win
+
+
+def land_region(resident, out, margin: int, region):
+    """Store one region's kernel output into the resident buffer interior."""
+    lead = (0,) * (resident.ndim - 3)
+    return jax.lax.dynamic_update_slice(
+        resident, out, lead + (margin + region.x0, margin + region.y0, 0)
+    )

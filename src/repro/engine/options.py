@@ -49,6 +49,14 @@ class RunOptions:
     backend.  ``batch`` is the leading ensemble axis: every field buffer
     grows a ``(B, ...)`` leading dimension and one kernel launch advances
     all ``B`` members (``batch=1`` is the classic single-scenario path).
+
+    ``overlap`` selects the interior/boundary kernel split that hides the
+    halo exchange behind interior compute (resident pallas plans only):
+    ``True`` forces the split wherever it is legal, ``False`` keeps the
+    monolithic fused launch, and ``"auto"`` (the default) splits only when
+    the measured cost model (:mod:`repro.core.perfmodel`) holds a
+    calibrated entry for the body predicting the split faster — so
+    uncalibrated runs keep today's schedule.
     """
 
     backend: Optional[str] = None
@@ -56,11 +64,16 @@ class RunOptions:
     time_tile: Optional[int] = None
     resident: bool = True
     batch: int = 1
+    overlap: object = "auto"
 
     def __post_init__(self):
         if int(self.batch) < 1:
             raise ValueError(f"batch must be >= 1; got {self.batch}")
         object.__setattr__(self, "batch", int(self.batch))
+        if self.overlap not in (True, False, "auto"):
+            raise ValueError(
+                f"overlap must be True, False or 'auto'; got {self.overlap!r}"
+            )
 
     def replace(self, **changes) -> "RunOptions":
         """A copy with ``changes`` applied (``dataclasses.replace``)."""

@@ -56,6 +56,9 @@ class Segment:
     time_tile: int = 1
     halo: int = 0
     reason: str = ""  # fallback / clamp explanation, "" when none
+    #: boundary shell launches per tile when the segment runs the
+    #: interior/boundary overlap split (0 = monolithic fused launch)
+    split: int = 0
 
     @property
     def n_steps(self) -> int:
@@ -106,6 +109,7 @@ def compile_body(
     group=None,
     resident: int = 0,
     batch: int = 1,
+    overlap: bool = False,
 ) -> Tuple[Callable, bool]:
     """Build one body application ``env -> env`` — THE backend dispatch.
 
@@ -129,6 +133,10 @@ def compile_body(
     refresh/barrier (see :func:`repro.compiler.codegen.compile_group`), and
     interpreter steps are vmapped whole — every jax primitive they use
     (rolls, where, dynamic updates, ppermute) carries a batching rule.
+
+    ``overlap=True`` (fused resident paths) requests the interior/boundary
+    kernel split so the margin exchange travels concurrently with the
+    interior launch; illegal splits silently keep the monolithic kernel.
     """
     stats.bodies_compiled += 1
     if backend == "pallas":
@@ -151,6 +159,7 @@ def compile_body(
                     group=group,
                     resident=resident,
                     batch=batch,
+                    overlap=overlap,
                 )
 
         else:
@@ -169,6 +178,7 @@ def compile_body(
                     group=group,
                     resident=resident,
                     batch=batch,
+                    overlap=overlap,
                 )
 
         step = try_compile(fn, loop)
@@ -289,13 +299,22 @@ def _brick_xy(program: Program, mesh_ctx, group) -> Tuple[int, int]:
     return nx // mx, ny // my
 
 
-def _pick_tile(group, loop, requested: Optional[int], brick_xy) -> Tuple[int, str]:
-    """Resolve the tile factor for one fused loop body: (k, clamp_reason)."""
+def _pick_tile(
+    group, loop, requested: Optional[int], brick_xy, cost=None, nz=None
+) -> Tuple[int, str]:
+    """Resolve the tile factor for one fused loop body: (k, clamp_reason).
+
+    ``cost`` is this body's calibrated :class:`~repro.core.perfmodel.
+    MeasuredCost` entry when one exists: auto selection then minimizes the
+    measured model over the legal candidates instead of applying the static
+    rule (``k = 1`` always admissible, so tiling cannot lose by
+    construction — see :func:`repro.compiler.ir.auto_tile`).
+    """
     n = loop.n if loop is not None else 1
     if n <= 1:
         return 1, ""
     if requested is None:
-        return auto_tile(group, brick_xy, n), ""
+        return auto_tile(group, brick_xy, n, cost=cost, nz=nz), ""
     k = max(1, int(requested))
     try:
         tile_group(group, k, brick_xy=brick_xy, n_steps=n)
@@ -353,6 +372,7 @@ def plan(
     time_tile = options.time_tile
     resident = options.resident
     batch = options.batch
+    overlap = options.overlap
 
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
@@ -381,14 +401,28 @@ def plan(
     for loop, ops in _group_ops(program):
         group = None
         k, reason = 1, ""
+        cost = None
         if backend == "pallas":
             try:
                 group = lower_group(ops)
             except LoweringError:
                 group = None  # compile_body repeats the lowering to log/count
             if group is not None:
+                from repro.core import perfmodel
+
+                name0 = group.fields_written()[0]
+                cost = perfmodel.cost_model.lookup(
+                    group, shapes[name0][2], dtypes[name0]
+                )
+                if cost is not None:
+                    stats.cost_model_hits += 1
                 k, reason = _pick_tile(
-                    group, loop, time_tile, _brick_xy(program, mesh_ctx, group)
+                    group,
+                    loop,
+                    time_tile,
+                    _brick_xy(program, mesh_ctx, group),
+                    cost=cost,
+                    nz=shapes[name0][2],
                 )
         elif backend != "numpy" and time_tile is not None and time_tile != 1:
             # an explicit tile request on an interpreter backend is dropped,
@@ -398,7 +432,7 @@ def plan(
                 "fused kernels to tile (use backend='pallas')"
             )
             log.warning("%s", reason)
-        scheduled.append((loop, ops, group, k, reason))
+        scheduled.append((loop, ops, group, k, reason, cost))
     pad = 0
     if resident and backend == "pallas":
         from repro.kernels.ops import _interpret
@@ -414,17 +448,39 @@ def plan(
         # the multigrid transfer kernels (engine.plan_mg_levels).
         if _interpret():
             pad = max(
-                (k * g.halo for _, _, g, k, _ in scheduled if g is not None),
+                (k * g.halo for _, _, g, k, _, _ in scheduled if g is not None),
                 default=0,
             )
     layout = HaloLayout(pad=pad, shapes=shapes)
 
     # pass two: compile each body against the layout
     segments: List[Segment] = []
-    for loop, ops, group, k, reason in scheduled:
+    for loop, ops, group, k, reason, cost in scheduled:
         if backend == "numpy":
             segments.append(Segment(loop=loop, ops=tuple(ops), kind="eager"))
             continue
+        # overlap decision: split the launch only where legal (resident
+        # layout, nonempty interior at depth k·h) and wanted — forced by
+        # overlap=True, or, on "auto", predicted faster by this body's
+        # calibrated cost-model entry (no entry → keep today's schedule)
+        use_split = 0
+        if group is not None and pad > 0 and group.halo > 0:
+            from repro.compiler.ir import split_regions
+
+            sp = split_regions(group, k, _brick_xy(program, mesh_ctx, group))
+            if sp is not None and overlap is not False:
+                if overlap is True:
+                    use_split = len(sp.shells)
+                elif cost is not None:
+                    from repro.core.perfmodel import predict_step_us
+
+                    name0 = group.fields_written()[0]
+                    bxy = _brick_xy(program, mesh_ctx, group)
+                    nz = shapes[name0][2]
+                    t_fused = predict_step_us(cost, bxy, nz, group.halo, k)
+                    t_split = predict_step_us(cost, bxy, nz, group.halo, k, split=True)
+                    if t_split < t_fused:
+                        use_split = len(sp.shells)
         step, fused = compile_body(
             ops,
             loop,
@@ -436,9 +492,11 @@ def plan(
             group=group,
             resident=pad,
             batch=batch,
+            overlap=bool(use_split),
         )
         if not fused:
             k = 1
+            use_split = 0
         seg = Segment(
             loop=loop,
             ops=tuple(ops),
@@ -447,6 +505,7 @@ def plan(
             time_tile=k,
             halo=group.halo if group is not None else 0,
             reason=reason,
+            split=use_split,
         )
         if fused and k > 1 and seg.n_steps % k:
             seg.step_rem, _ = compile_body(
@@ -460,6 +519,7 @@ def plan(
                 group=group,
                 resident=pad,
                 batch=batch,
+                overlap=bool(use_split),
             )
         if reason:
             stats.note_tile_reason(reason)

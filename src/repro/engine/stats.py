@@ -50,6 +50,15 @@ class EngineStats:
     max_time_tile: int = 1  # largest k any segment ran with
     elapsed_s: float = 0.0  # wall time inside execute()
     tile_reasons: Tuple[str, ...] = ()  # why a tile factor was clamped/refused
+
+    # -- exchange/compute overlap (interior/boundary split segments) ---------
+    interior_launches: int = 0  # interior-region kernel launches
+    boundary_launches: int = 0  # boundary shell kernel launches
+    #: halo exchanges whose slabs travelled concurrently with an interior
+    #: launch (one per split-segment tile; the overlap the split exists for)
+    overlapped_exchanges: int = 0
+    cost_model_hits: int = 0  # plans served by a calibrated cost-model entry
+    calibrations: int = 0  # cost-model calibration runs performed
     mg_hierarchies: int = 0  # multigrid hierarchies scheduled
     mg_levels_built: int = 0  # level segments compiled across hierarchies
     #: (shape, smoother-fused, residual-fused) per level of the last hierarchy
@@ -110,6 +119,11 @@ def reset_stats() -> None:
     stats.max_time_tile = 1
     stats.elapsed_s = 0.0
     stats.tile_reasons = ()
+    stats.interior_launches = 0
+    stats.boundary_launches = 0
+    stats.overlapped_exchanges = 0
+    stats.cost_model_hits = 0
+    stats.calibrations = 0
     stats.mg_hierarchies = 0
     stats.mg_levels_built = 0
     stats.mg_level_log = ()

@@ -100,14 +100,16 @@ def _apply_updates(updates, cur, nz_of, h, out_x, out_y, gx0, gy0, nx, ny,
 
         old_z = old[:, :, u.z0:u.z0 + u.zlen]
         new_z = jnp.where(interior, acc, old_z)
-        parts = []
-        if u.z0 > 0:
-            parts.append(old[:, :, :u.z0])
-        parts.append(new_z)
-        if u.z0 + u.zlen < nz:
-            parts.append(old[:, :, u.z0 + u.zlen:])
-        center[u.field] = (jnp.concatenate(parts, axis=2)
-                          if len(parts) > 1 else new_z)
+        # splice the updated z window in place: dynamic_update_slice (same
+        # values as concatenating the flanking slices) keeps the per-sub-step
+        # splice fusible, where a concatenate chain re-materializes the whole
+        # block each sub-step — the difference between time tiles costing
+        # ~k× one launch and costing ~1× (see docs/time_tiling.md).
+        if u.z0 == 0 and u.zlen == nz:
+            center[u.field] = new_z
+        else:
+            center[u.field] = jax.lax.dynamic_update_slice(
+                old, new_z, (0, 0, u.z0))
 
     out = {}
     for name, a in cur.items():
@@ -140,7 +142,7 @@ def build_fused_call(updates: Sequence, field_specs: Dict[str, Tuple[int, object
                      halo: int, bx: int, by: int, nx: int, ny: int,
                      block=(8, 128), interpret: bool = False,
                      time_tile: int = 1, wrap: bool = False,
-                     margin: int = 0):
+                     margin: int = 0, region=None):
     """Build the fused kernel for one loop body.
 
     ``updates``     — :class:`repro.compiler.ir.AffineUpdate`s, program order.
@@ -160,6 +162,16 @@ def build_fused_call(updates: Sequence, field_specs: Dict[str, Tuple[int, object
                       into its own input buffer via ``input_output_aliases``
                       — outputs keep the resident extent and zero new
                       buffers are allocated on the step path.
+    ``region``      — a :class:`repro.compiler.ir.RegionSpec` *windowing*
+                      the launch (resident mode only): the grid covers the
+                      region's (rx, ry) output cells instead of the whole
+                      brick, windows and output blocks offset by the region
+                      origin.  The overlap scheduler uses this for the
+                      interior launch — the region sits ``k·halo`` inside
+                      the brick edge, so its input windows never touch the
+                      margin frame and the launch needs no refreshed halo
+                      data.  The caller must offset ``coords`` by the
+                      region origin so the Moat mask stays global.
 
     Returns ``call(coords, *padded) -> tuple(new_fields)`` where ``padded``
     are the (bx + 2·k·halo, by + 2·k·halo, nz) inputs (resident extent when
@@ -177,9 +189,15 @@ def build_fused_call(updates: Sequence, field_specs: Dict[str, Tuple[int, object
     k = time_tile
     if margin and margin < k * h:
         raise ValueError(f"resident margin {margin} < window halo {k * h}")
-    bxb = _pick_block(bx, block[0])
-    byb = _pick_block(by, block[1])
-    grid = (bx // bxb, by // byb)
+    if region is not None and not margin:
+        raise ValueError("region windowing requires resident margin mode")
+    # region mode: the grid tiles the region's output cells; windows and
+    # output blocks shift by the region origin inside the resident buffer
+    rx, ry = (bx, by) if region is None else (region.rx, region.ry)
+    ox, oy = (0, 0) if region is None else (region.x0, region.y0)
+    bxb = _pick_block(rx, block[0])
+    byb = _pick_block(ry, block[1])
+    grid = (rx // bxb, ry // byb)
 
     body = functools.partial(_fused_body, tuple(updates), tuple(in_names),
                              tuple(written), nz_of, h, k, wrap, bxb, byb,
@@ -188,20 +206,22 @@ def build_fused_call(updates: Sequence, field_specs: Dict[str, Tuple[int, object
     # (bxb + 2kh, byb + 2kh) window; with a resident margin that window sits
     # `margin - kh` cells inside the buffer edge (legacy inputs arrive
     # already window-aligned — their whole extent IS the padded window).
-    off = margin - k * h if margin else 0
+    off_x = margin - k * h + ox if margin else 0
+    off_y = margin - k * h + oy if margin else 0
     in_specs = [pl.BlockSpec((1, 2), lambda i, j: (0, 0))]
     for name in in_names:
         nz = nz_of[name]
         in_specs.append(element_block_spec(
             (bxb + 2 * k * h, byb + 2 * k * h, nz),
-            lambda i, j, off=off: (off + i * bxb, off + j * byb, 0)))
+            lambda i, j, ax=off_x, ay=off_y: (ax + i * bxb, ay + j * byb, 0)))
     if margin:
         # in-place outputs: each written field aliases its own input buffer
-        # (full resident extent); the grid writes only the interior blocks,
-        # margins keep their pre-launch values (refreshed before each read).
+        # (full resident extent); the grid writes only the region's blocks,
+        # margins (and, in region mode, the rest of the brick) keep their
+        # pre-launch values.
         out_specs = [element_block_spec(
             (bxb, byb, nz_of[n]),
-            lambda i, j: (margin + i * bxb, margin + j * byb, 0))
+            lambda i, j: (margin + ox + i * bxb, margin + oy + j * byb, 0))
             for n in written]
         out_shape = [jax.ShapeDtypeStruct(
             (bx + 2 * margin, by + 2 * margin, nz_of[n]), field_specs[n][1])

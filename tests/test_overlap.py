@@ -1,0 +1,395 @@
+"""Exchange/compute overlap + measured cost model (PR 8).
+
+The tentpole invariant: splitting a fused launch into an interior kernel
+(concurrent with the margin-slab exchange) plus four boundary shells is
+**bitwise** identical to the monolithic launch — fp32 in-process, fp64 and
+the 2×2 sharded mesh in subprocesses, batched ensembles, and the tiled
+remainder path.  On top: the cost model's manifest round-trip, the planner's
+``overlap="auto"`` policy (split only when a calibrated entry predicts a
+win), model-driven ``auto_tile`` never losing to k=1 by construction, and
+the overlap stats counters — all with zero interpreter fallbacks.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.compiler import lower_group
+from repro.compiler import reset_stats as compiler_reset
+from repro.compiler import stats as compiler_stats
+from repro.compiler.ir import auto_tile, split_regions
+from repro.core import WSE_Array, WSE_For_Loop, WSE_Interface, perfmodel
+from repro.core.perfmodel import (
+    CostModel,
+    MeasuredCost,
+    body_signature,
+    predict_step_us,
+    tile_cells,
+)
+from repro.core.program import _group_ops
+from repro.engine import RunOptions, plan, reset_stats, stats
+from repro.engine.executor import run_program
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(autouse=True)
+def _clean():
+    reset_stats()
+    compiler_reset()
+    perfmodel.cost_model.clear()
+    yield
+    perfmodel.cost_model.clear()
+
+
+def build_heat(T0, steps, c=0.1):
+    wse = WSE_Interface()
+    center = 1.0 - 6.0 * c
+    T = WSE_Array("T_n", init_data=T0)
+    with WSE_For_Loop("t", steps):
+        T[1:-1, 0, 0] = center * T[1:-1, 0, 0] + c * (
+            T[2:, 0, 0]
+            + T[:-2, 0, 0]
+            + T[1:-1, 1, 0]
+            + T[1:-1, 0, -1]
+            + T[1:-1, -1, 0]
+            + T[1:-1, 0, 1]
+        )
+    wse.__exit__()
+    return wse.program
+
+
+def _t0(nx=12, ny=12, nz=4):
+    rng = np.random.default_rng(7)
+    return rng.uniform(250.0, 500.0, size=(nx, ny, nz)).astype(np.float32)
+
+
+def _heat_group(program):
+    _, ops = next(g for g in _group_ops(program) if g[0] is not None)
+    return lower_group(ops)
+
+
+# -- bitwise equivalence (in-process fp32) ------------------------------------
+
+
+@pytest.mark.parametrize("steps,k", [(6, 1), (6, 2), (7, 2)])
+def test_split_matches_monolithic_bitwise(steps, k):
+    """Forced overlap split == monolithic, including the n % k remainder."""
+    T0 = _t0()
+    base = run_program(
+        build_heat(T0, steps),
+        options=RunOptions(backend="pallas", time_tile=k, overlap=False),
+    )
+    ov = run_program(
+        build_heat(T0, steps),
+        options=RunOptions(backend="pallas", time_tile=k, overlap=True),
+    )
+    assert (base["T_n"] == ov["T_n"]).all()
+    assert compiler_stats.fallbacks == 0
+
+
+def test_split_matches_monolithic_batched():
+    """B>1 ensemble stepping splits bitwise too (vmapped launches)."""
+    T0 = _t0()
+    stack = np.stack([T0, T0 + 1.0, T0 * 1.01])
+    base = run_program(
+        build_heat(T0, 6),
+        env={"T_n": stack},
+        options=RunOptions(backend="pallas", time_tile=2, batch=3, overlap=False),
+    )
+    ov = run_program(
+        build_heat(T0, 6),
+        env={"T_n": stack},
+        options=RunOptions(backend="pallas", time_tile=2, batch=3, overlap=True),
+    )
+    assert ov["T_n"].shape[0] == 3
+    assert (base["T_n"] == ov["T_n"]).all()
+    # batched members match the unbatched run member-for-member
+    single = run_program(
+        build_heat(T0, 6),
+        options=RunOptions(backend="pallas", time_tile=2, overlap=True),
+    )
+    assert (ov["T_n"][0] == single["T_n"]).all()
+    assert compiler_stats.fallbacks == 0
+
+
+def test_overlap_stats_counters():
+    """Split runs count interior/boundary launches + overlapped exchanges."""
+    T0 = _t0()
+    run_program(
+        build_heat(T0, 6),
+        options=RunOptions(backend="pallas", time_tile=2, overlap=True),
+    )
+    # 3 tiles: one interior + 4 shells each, slabs in flight per tile
+    assert stats.interior_launches == 3
+    assert stats.boundary_launches == 12
+    assert stats.overlapped_exchanges == 3
+    reset_stats()
+    run_program(
+        build_heat(T0, 6),
+        options=RunOptions(backend="pallas", time_tile=2, overlap=False),
+    )
+    assert stats.interior_launches == 0
+    assert stats.boundary_launches == 0
+    assert stats.overlapped_exchanges == 0
+
+
+def test_split_refused_keeps_monolithic():
+    """A brick too small for the interior at depth k·h silently keeps the
+    monolithic launch (split=0) — and still runs correctly."""
+    T0 = _t0(6, 6, 4)  # k=4 -> m=4, 6 <= 2*4: no interior
+    p = plan(
+        build_heat(T0, 8), RunOptions(backend="pallas", time_tile=4, overlap=True)
+    )
+    seg = next(s for s in p.segments if s.loop is not None)
+    assert seg.split == 0
+    base = run_program(
+        build_heat(T0, 8),
+        options=RunOptions(backend="pallas", time_tile=4, overlap=False),
+    )
+    ov = run_program(
+        build_heat(T0, 8),
+        options=RunOptions(backend="pallas", time_tile=4, overlap=True),
+    )
+    assert (base["T_n"] == ov["T_n"]).all()
+
+
+# -- the "auto" policy --------------------------------------------------------
+
+
+def _fake_entry(program, nz, dtype, **kw):
+    group = _heat_group(program)
+    vals = dict(cell_ns=0.001, launch_us=1.0, exchange_us=1.0, boundary_us=1.0)
+    vals.update(kw)
+    return MeasuredCost(
+        signature=body_signature(group, nz, dtype),
+        device=perfmodel.current_device(),
+        **vals,
+    )
+
+
+def test_auto_overlap_uncalibrated_keeps_monolithic():
+    # default overlap="auto" with no calibrated entry: stay monolithic
+    p = plan(build_heat(_t0(), 6), RunOptions(backend="pallas", time_tile=2))
+    seg = next(s for s in p.segments if s.loop is not None)
+    assert seg.split == 0 and stats.cost_model_hits == 0
+
+
+def test_auto_overlap_splits_when_model_predicts_win():
+    program = build_heat(_t0(), 6)
+    # exchange dominates and shells are free -> split predicted faster
+    perfmodel.cost_model.put(
+        _fake_entry(program, 4, np.float32, exchange_us=500.0, boundary_us=0.0)
+    )
+    p = plan(program, RunOptions(backend="pallas", time_tile=2))
+    seg = next(s for s in p.segments if s.loop is not None)
+    assert seg.split == 4 and stats.cost_model_hits == 1
+
+
+def test_auto_overlap_keeps_monolithic_when_model_predicts_loss():
+    program = build_heat(_t0(), 6)
+    # boundary launches cost a fortune -> split predicted slower
+    perfmodel.cost_model.put(
+        _fake_entry(program, 4, np.float32, exchange_us=0.1, boundary_us=1000.0)
+    )
+    p = plan(program, RunOptions(backend="pallas", time_tile=2))
+    seg = next(s for s in p.segments if s.loop is not None)
+    assert seg.split == 0 and stats.cost_model_hits == 1
+
+
+def test_run_options_validates_overlap():
+    with pytest.raises(ValueError, match="overlap"):
+        RunOptions(overlap="bogus")
+
+
+# -- measured cost model ------------------------------------------------------
+
+
+def test_calibrate_and_manifest_roundtrip(tmp_path):
+    program = build_heat(_t0(), 4)
+    manifest = str(tmp_path / "cost.json")
+    entries = perfmodel.calibrate_program(
+        program, ks=(1, 2), reps=1, inner=2, manifest=manifest
+    )
+    entry = entries["T_n"]
+    assert stats.calibrations == 1
+    assert entry.cell_ns >= 0 and entry.exchange_us >= 0
+    fresh = CostModel()
+    assert fresh.load_manifest(manifest) == 1
+    assert fresh.entries[entry.signature] == entry
+    # the planner sees the calibrated entry
+    reset_stats()
+    plan(program, RunOptions(backend="pallas"))
+    assert stats.cost_model_hits == 1
+
+
+def test_manifest_env_preload(tmp_path, monkeypatch):
+    program = build_heat(_t0(), 4)
+    entry = _fake_entry(program, 4, np.float32)
+    boxed = CostModel()
+    boxed.put(entry)
+    path = str(tmp_path / "env_cost.json")
+    boxed.save_manifest(path)
+    monkeypatch.setenv(perfmodel.MANIFEST_ENV, path)
+    fresh = CostModel()
+    assert fresh.get(entry.signature) == entry  # lazy env-manifest load
+
+
+def test_manifest_rejects_wrong_schema(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text('{"schema": 99, "entries": {}}')
+    with pytest.raises(ValueError, match="schema"):
+        CostModel().load_manifest(str(path))
+
+
+def test_signature_ignores_brick_but_not_dtype():
+    program = build_heat(_t0(), 4)
+    group = _heat_group(program)
+    s32 = body_signature(group, 4, np.float32)
+    assert body_signature(group, 4, np.float32) == s32
+    assert body_signature(group, 4, np.float64) != s32
+    assert body_signature(group, 8, np.float32) != s32
+
+
+def test_tile_cells_trapezoid():
+    assert tile_cells((8, 8), 4, 1, 1) == 8 * 8 * 4
+    # k=2: 10x10 first sub-step + 8x8 second, per z plane
+    assert tile_cells((8, 8), 4, 1, 2) == (100 + 64) * 4
+    # split cells always cover at least the monolithic cells (redundant
+    # window recompute at the region seams)
+    sp = perfmodel._split_cells((16, 16), 4, 1, 2)
+    assert sp is not None
+    interior, shells, n_sh = sp
+    assert n_sh == 4
+    assert interior + shells >= tile_cells((16, 16), 4, 1, 2)
+
+
+def test_auto_tile_never_loses_to_k1():
+    """Model-driven auto_tile: the pick's predicted time <= k=1's, for
+    adversarial cost entries (k=1 is always a candidate by construction)."""
+    program = build_heat(_t0(), 8)
+    group = _heat_group(program)
+    cases = [
+        dict(cell_ns=100.0, launch_us=0.0, exchange_us=0.0, boundary_us=0.0),
+        dict(cell_ns=0.0, launch_us=500.0, exchange_us=0.0, boundary_us=0.0),
+        dict(cell_ns=0.001, launch_us=1.0, exchange_us=900.0, boundary_us=0.1),
+        dict(cell_ns=50.0, launch_us=50.0, exchange_us=50.0, boundary_us=50.0),
+    ]
+    for vals in cases:
+        cost = MeasuredCost(signature="x", device="cpu", **vals)
+        k = auto_tile(group, (16, 16), 8, cost=cost, nz=4)
+        t_k = min(
+            predict_step_us(cost, (16, 16), 4, group.halo, k),
+            predict_step_us(cost, (16, 16), 4, group.halo, k, split=True),
+        )
+        t_1 = predict_step_us(cost, (16, 16), 4, group.halo, 1)
+        assert t_k <= t_1, vals
+    # illegal split scores inf, never selected
+    tiny = MeasuredCost("x", "cpu", 1.0, 1.0, 1.0, 1.0)
+    assert predict_step_us(tiny, (4, 4), 4, 1, 2, split=True) == float("inf")
+
+
+def test_split_regions_partition():
+    """Interior + shells tile the brick exactly (disjoint, full cover)."""
+    program = build_heat(_t0(), 4)
+    group = _heat_group(program)
+    sp = split_regions(group, 2, (12, 12))
+    cover = np.zeros((12, 12), int)
+    for r in (sp.interior,) + sp.shells:
+        cover[r.x0 : r.x0 + r.rx, r.y0 : r.y0 + r.ry] += 1
+    assert (cover == 1).all()
+    assert split_regions(group, 6, (12, 12)) is None  # 12 <= 2*6
+
+
+# -- fp64 + sharded exactness (subprocesses) ----------------------------------
+
+
+def run_py(code: str, devices: int = 1, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env["JAX_ENABLE_X64"] = "1"
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+        env=env,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+SUB_PRELUDE = """
+import numpy as np
+from repro.core import WSE_Array, WSE_For_Loop, WSE_Interface
+from repro.engine import RunOptions, reset_stats, stats
+from repro.engine.executor import run_program
+from repro.compiler import stats as kstats
+
+def build_heat(T0, steps, c=0.1):
+    wse = WSE_Interface()
+    center = 1.0 - 6.0 * c
+    T = WSE_Array("T_n", init_data=T0, dtype=np.float64)
+    with WSE_For_Loop("t", steps):
+        T[1:-1, 0, 0] = center * T[1:-1, 0, 0] + c * (
+            T[2:, 0, 0] + T[:-2, 0, 0] + T[1:-1, 1, 0]
+            + T[1:-1, 0, -1] + T[1:-1, -1, 0] + T[1:-1, 0, 1])
+    wse.__exit__()
+    return wse.program
+
+rng = np.random.default_rng(11)
+T0 = rng.uniform(250.0, 500.0, size=(16, 16, 4))
+"""
+
+
+def test_fp64_overlap_bitwise_single_device():
+    out = run_py(
+        SUB_PRELUDE
+        + """
+for steps, k in [(6, 2), (7, 2), (8, 4)]:
+    base = run_program(build_heat(T0, steps),
+                       options=RunOptions(backend="pallas", time_tile=k,
+                                          overlap=False))
+    ov = run_program(build_heat(T0, steps),
+                     options=RunOptions(backend="pallas", time_tile=k,
+                                        overlap=True))
+    assert base["T_n"].dtype == np.float64
+    assert (base["T_n"] == ov["T_n"]).all(), (steps, k)
+assert kstats.fallbacks == 0, kstats.fallback_reasons
+print("OK")
+"""
+    )
+    assert "OK" in out
+
+
+def test_fp64_overlap_bitwise_sharded():
+    out = run_py(
+        SUB_PRELUDE
+        + """
+from repro.core.jaxcompat import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
+base = run_program(build_heat(T0, 6),
+                   options=RunOptions(backend="pallas", mesh=mesh,
+                                      time_tile=2, overlap=False))
+reset_stats()
+ov = run_program(build_heat(T0, 6),
+                 options=RunOptions(backend="pallas", mesh=mesh,
+                                    time_tile=2, overlap=True))
+assert (base["T_n"] == ov["T_n"]).all()
+assert stats.interior_launches == 3, vars(stats)
+assert stats.boundary_launches == 12, vars(stats)
+assert stats.overlapped_exchanges == 3, vars(stats)
+single = run_program(build_heat(T0, 6),
+                     options=RunOptions(backend="pallas", time_tile=2,
+                                        overlap=True))
+assert (ov["T_n"] == single["T_n"]).all()
+assert kstats.fallbacks == 0, kstats.fallback_reasons
+print("OK")
+""",
+        devices=4,
+    )
+    assert "OK" in out

@@ -1,0 +1,115 @@
+"""``adjoint_inverse`` — forward-vs-gradient cost of differentiable solves.
+
+The IFT adjoint's promise is a fixed price: one gradient through
+``wfa.solve`` costs roughly one extra (transposed) Krylov solve, however
+many parameters receive gradients.  This case times the forward solve and
+the full VJP side by side and reports the ratio — for the symmetric CG
+operator (where the adjoint reuses the forward kernel; the ``derived``
+column pins ``adjoint_kernels=0`` built during the backward pass) and for
+the non-symmetric variable-coefficient BiCGSTAB operator, whose gradient
+row *is* the inverse-problem gradient: a sparse-observation misfit
+differentiated with respect to the per-cell diffusivity
+(``examples/inverse_diffusivity.py`` runs the full recovery loop).
+
+Before timing anything the gradient is smoke-checked against central
+differences with the shared test harness (``tests/gradcheck.py``) at
+fp32-appropriate tolerances — a benchmark of a wrong gradient would be
+worse than no benchmark.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+from benchmarks.common import KernelStatsSnapshot, emit, time_fn
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SHAPE = (24, 24, 12)
+TOL = 1e-6
+
+
+def _gradcheck_smoke(loss, x0, grad):
+    """FD smoke check via the shared harness; fp32 central differences
+    carry ~1e-4 cancellation noise, hence the loose scales (the fp64
+    precision claims live in tests/test_adjoint.py's subprocess tests)."""
+    sys.path.insert(0, os.path.join(ROOT, "tests"))
+    from gradcheck import assert_gradcheck
+
+    return assert_gradcheck(
+        loss, x0, grad, eps=1e-2, atol=2e-2, rtol=1e-1, n_probes=4
+    )
+
+
+def run() -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.solver import make_differentiable_solver
+    from repro.solver.presets import btcs_program, record_varcoef_btcs
+
+    rng = np.random.default_rng(11)
+    x0 = np.zeros(SHAPE, np.float32)
+    x0[1:-1, 1:-1, 1:-1] = 1.0
+    x0 += 0.1 * rng.random(SHAPE, dtype=np.float32)
+
+    # --- symmetric (CG): the adjoint solve reuses the forward kernel ---
+    snap = KernelStatsSnapshot()
+    solve = make_differentiable_solver(
+        btcs_program(SHAPE, 0.3), "T", method="cg", tol=TOL, maxiter=500
+    )
+    assert solve.symmetric_adjoint
+    fwd = jax.jit(solve)
+    loss = jax.jit(lambda v: jnp.sum(solve(v) ** 2))
+    grad = jax.jit(jax.grad(loss))
+    g = np.asarray(grad(x0))  # compiles; any kernel work lands pre-snapshot
+    report = _gradcheck_smoke(loss, x0, g)
+    us_fwd = time_fn(fwd, x0)
+    emit(f"adjoint_forward_cg_n{SHAPE[0]}", us_fwd, snap.derived())
+    during_grad = KernelStatsSnapshot()
+    us_grad = time_fn(grad, x0)
+    emit(
+        f"adjoint_grad_cg_n{SHAPE[0]}",
+        us_grad,
+        f"grad_over_forward={us_grad / us_fwd:.2f};"
+        f"adjoint_kernels={during_grad._stats.kernels_built - during_grad.built};"
+        f"gradcheck_maxerr={report.max_scaled_err:.3g};"
+        f"fallbacks={during_grad._stats.fallbacks - during_grad.fallbacks}",
+    )
+
+    # --- non-symmetric (BiCGSTAB): inverse-problem gradient w.r.t. κ ---
+    C0 = (0.4 + 0.2 * rng.random(SHAPE)).astype(np.float32)
+    snap = KernelStatsSnapshot()
+    wse, _, _ = record_varcoef_btcs(x0.astype(np.float32), C0, 0.3)
+    vsolve = make_differentiable_solver(
+        wse.program, "T", method="bicgstab", tol=TOL, maxiter=500
+    )
+    obs = np.zeros(SHAPE, bool)
+    obs[1:-1, 1:-1, 1:-1] = rng.random(tuple(n - 2 for n in SHAPE)) < 0.25
+    idx = tuple(np.argwhere(obs).T)
+    y = np.asarray(vsolve(x0, {"T_coef": C0}))[idx] * 1.05  # synthetic data
+
+    vfwd = jax.jit(lambda k: vsolve(x0, {"T_coef": k}))
+    misfit = jax.jit(lambda k: jnp.sum((vsolve(x0, {"T_coef": k})[idx] - y) ** 2))
+    vgrad = jax.jit(jax.grad(misfit))
+    gk = np.asarray(vgrad(C0))
+    report = _gradcheck_smoke(misfit, C0, gk)
+    us_fwd = time_fn(vfwd, C0)
+    emit(f"adjoint_forward_bicgstab_n{SHAPE[0]}", us_fwd, snap.derived())
+    during_grad = KernelStatsSnapshot()
+    us_grad = time_fn(vgrad, C0)
+    emit(
+        f"adjoint_inverse_grad_bicgstab_n{SHAPE[0]}",
+        us_grad,
+        f"grad_over_forward={us_grad / us_fwd:.2f};"
+        f"adjoint_kernels={during_grad._stats.kernels_built - during_grad.built};"
+        f"observations={int(obs.sum())};"
+        f"gradcheck_maxerr={report.max_scaled_err:.3g};"
+        f"fallbacks={during_grad._stats.fallbacks - during_grad.fallbacks}",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -15,6 +15,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * ensemble_throughput — batched ensemble execution: members/sec at
                           micro-batch widths 1/8/64 (gates the B=64 ≥ 5×
                           speedup and zero steady-state compiles)
+  * adjoint_inverse     — differentiable solves: gradient/forward cost
+                          ratio via the IFT adjoint (symmetric CG reuses
+                          the forward kernel; BiCGSTAB row is the
+                          inverse-diffusivity misfit gradient)
 
 Usage::
 
@@ -44,6 +48,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (
+        adjoint_inverse,
         common,
         distributed_model,
         ensemble_throughput,
@@ -69,6 +74,7 @@ def main() -> None:
         "kernels_bench": kernels_bench,
         "service_throughput": service_throughput,
         "ensemble_throughput": ensemble_throughput,
+        "adjoint_inverse": adjoint_inverse,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(

@@ -1,0 +1,160 @@
+"""Inverse problem: recover a diffusivity field by gradient descent
+through ``wfa.solve``.
+
+The forward model is the variable-coefficient implicit heat equation
+A(κ)·Tⁿ⁺¹ = Tⁿ with A = I + ωκ·(6I − S) (the BiCGSTAB preset, solved
+matrix-free on the fused operator kernel).  The unknown diffusivity κ is
+parameterized on a coarse control grid (bilinearly upsampled — the usual
+regularization for inverse conduction), the data are *sparse* point
+observations of the temperature field after each implicit step, and the
+misfit gradient flows through the Krylov solve via the implicit-function-
+theorem adjoint (``repro.solver.adjoint`` — one transposed solve per step,
+compiled through the same IR → codegen path as the forward operator).
+
+Runs at fp64; converges to < 1 % relative parameter error with zero
+interpreter fallbacks:
+
+    PYTHONPATH=src python examples/inverse_diffusivity.py [--iters 150]
+"""
+
+import argparse
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compiler import reset_stats, stats
+from repro.core.field import Field
+from repro.core.program import scoped_program
+from repro.solver import make_differentiable_solver
+from repro.solver.frontend import Operator
+
+
+def upsample_bilinear(theta, nx, ny, nz):
+    """(cx, cy) control values → (nx, ny, nz) field, bilinear in X/Y,
+    constant in Z (κ varies slowly; the coarse grid is the regularizer)."""
+    cx, cy = theta.shape
+    xs = jnp.linspace(0.0, cx - 1.0, nx)
+    ys = jnp.linspace(0.0, cy - 1.0, ny)
+    x0 = jnp.clip(jnp.floor(xs).astype(int), 0, cx - 2)
+    y0 = jnp.clip(jnp.floor(ys).astype(int), 0, cy - 2)
+    fx = (xs - x0)[:, None]
+    fy = (ys - y0)[None, :]
+    c = (
+        theta[x0[:, None], y0[None, :]] * (1 - fx) * (1 - fy)
+        + theta[x0[:, None] + 1, y0[None, :]] * fx * (1 - fy)
+        + theta[x0[:, None], y0[None, :] + 1] * (1 - fx) * fy
+        + theta[x0[:, None] + 1, y0[None, :] + 1] * fx * fy
+    )
+    return jnp.broadcast_to(c[:, :, None], (nx, ny, nz))
+
+
+def record_varcoef(shape, T0, omega):
+    with scoped_program() as prog:
+        T = Field("T", init_data=T0, dtype=np.float64)
+        C = Field("kappa", shape=shape, dtype=np.float64)
+        with Operator():
+            T[1:-1, 0, 0] = T[1:-1, 0, 0] + omega * C[1:-1, 0, 0] * (
+                6.0 * T[1:-1, 0, 0]
+                - (
+                    T[2:, 0, 0]
+                    + T[:-2, 0, 0]
+                    + T[1:-1, 1, 0]
+                    + T[1:-1, -1, 0]
+                    + T[1:-1, 0, 1]
+                    + T[1:-1, 0, -1]
+                )
+            )
+    return prog
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=16)
+    ap.add_argument("--nz", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=3, help="implicit time steps")
+    ap.add_argument("--obs-frac", type=float, default=0.25,
+                    help="fraction of interior cells observed")
+    ap.add_argument("--iters", type=int, default=150)
+    ap.add_argument("--coarse", type=int, default=4, help="control grid edge")
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    shape = (args.n, args.n, args.nz)
+    omega = 0.3
+
+    # ground truth: a smooth bump of fast-diffusing material
+    gx, gy = np.meshgrid(
+        np.linspace(-1, 1, args.coarse), np.linspace(-1, 1, args.coarse),
+        indexing="ij",
+    )
+    theta_true = 0.15 + 0.35 * np.exp(-2.0 * (gx**2 + gy**2))
+
+    # initial temperature: hot interior blob on cold Dirichlet walls
+    T0 = np.zeros(shape)
+    T0[1:-1, 1:-1, 1:-1] = 1.0
+    T0 += 0.1 * rng.random(shape)
+
+    reset_stats()
+    solver = make_differentiable_solver(
+        record_varcoef(shape, T0, omega), "T",
+        method="bicgstab", tol=1e-12, maxiter=400, steps=args.steps,
+    )
+
+    # sparse observations of the true trajectory's final state
+    mask = np.zeros(shape, bool)
+    interior = rng.random(shape) < args.obs_frac
+    mask[1:-1, 1:-1, 1:-1] = interior[1:-1, 1:-1, 1:-1]
+    obs_idx = jnp.asarray(np.argwhere(mask))
+    kappa_true = upsample_bilinear(jnp.asarray(theta_true), *shape)
+    y_obs = solver(T0, {"kappa": kappa_true})[tuple(obs_idx.T)]
+
+    @jax.jit
+    @jax.value_and_grad
+    def misfit(theta):
+        kappa = upsample_bilinear(theta, *shape)
+        x = solver(T0, {"kappa": kappa})
+        r = x[tuple(obs_idx.T)] - y_obs
+        return jnp.sum(r * r)
+
+    # Adam on the control grid, started from a uniform guess
+    theta = jnp.full((args.coarse, args.coarse), 0.25, jnp.float64)
+    m = v = jnp.zeros_like(theta)
+    lr, b1, b2 = 0.02, 0.9, 0.999
+    for i in range(1, args.iters + 1):
+        loss, g = misfit(theta)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1**i)
+        vh = v / (1 - b2**i)
+        theta = theta - lr * mh / (jnp.sqrt(vh) + 1e-12)
+        if i % 10 == 0 or i == 1:
+            rel = float(
+                jnp.linalg.norm(theta - theta_true)
+                / jnp.linalg.norm(jnp.asarray(theta_true))
+            )
+            print(f"  iter {i:4d}  misfit {float(loss):.3e}  rel κ err {rel:.3e}")
+
+    rel = float(
+        jnp.linalg.norm(theta - theta_true)
+        / jnp.linalg.norm(jnp.asarray(theta_true))
+    )
+    print(
+        f"recovered κ on a {args.coarse}×{args.coarse} control grid from "
+        f"{int(mask.sum())} of {int(np.prod(shape))} cells: "
+        f"rel error {rel:.3e}"
+    )
+    print(
+        f"  compiler: kernels={stats.kernels_built} "
+        f"cache_hits={stats.cache_hits} fallbacks={stats.fallbacks}"
+    )
+    assert rel < 1e-2, f"inverse solve did not converge: rel err {rel:.3e}"
+    assert stats.fallbacks == 0, stats.fallback_reasons
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

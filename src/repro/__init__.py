@@ -41,6 +41,7 @@ __all__ = [
     "SolveInfo",
     "WFAInterface",
     "make",
+    "make_differentiable_solver",
     "run_sharded",
     "solve",
 ]
@@ -55,6 +56,7 @@ _EXPORTS = {
     "SolveInfo": ("repro.solver.api", "SolveInfo"),
     "WFAInterface": ("repro.core.program", "WFAInterface"),
     "make": ("repro.core.ensemble", "make"),
+    "make_differentiable_solver": ("repro.solver.adjoint", "make_differentiable_solver"),
     "run_sharded": ("repro.core.halo", "run_sharded"),
     "solve": ("repro.core.ensemble", "solve"),
 }

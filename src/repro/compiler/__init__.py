@@ -26,7 +26,8 @@ from repro.compiler.ir import (AffineUpdate, LoweredGroup, LoweringError,
                                TiledGroup, TransferStencil, auto_tile,
                                coarsen_operator, coarsen_shape, coarsenable,
                                lower_group, lower_update, mg_fine_operator,
-                               mg_hierarchy, split_regions, tile_group)
+                               mg_hierarchy, split_regions, tile_group,
+                               transpose_taps)
 
 
 __all__ = [
@@ -36,5 +37,6 @@ __all__ = [
     "coarsen_shape", "coarsenable", "compile_group",
     "compile_group_sharded", "compile_transfer", "lower_group",
     "lower_update", "mg_fine_operator", "mg_hierarchy", "reset_stats",
-    "split_regions", "stats", "tile_group", "try_compile",
+    "split_regions", "stats", "tile_group", "transpose_taps",
+    "try_compile",
 ]

@@ -24,6 +24,8 @@ fall back to the untiled interpreter exactly as before.
 """
 
 from repro.engine.executor import (
+    checkpointed_vjp,
+    differentiable_runner,
     execute,
     run_program,
     sharded_runner,
@@ -57,6 +59,8 @@ __all__ = [
     "plan_mg_levels",
     "reset_stats",
     "resolve_options",
+    "checkpointed_vjp",
+    "differentiable_runner",
     "run_program",
     "service_stats",
     "sharded_runner",

@@ -180,12 +180,19 @@ def single_runner(plan: ExecutionPlan):
 
     Exposed for the residency tests: ``runner.lower(env)`` shows the
     donation markers and ``runner(env)`` consumes its argument buffers.
+
+    A :class:`~repro.engine.plan.ExecutionPlan` built with
+    ``RunOptions(differentiable=True)`` is **not** donated: under AD the
+    entry buffers become saved residuals of the reverse pass (and the
+    caller's arrays must survive the call), so donation is suppressed —
+    the documented donation/AD rule.
     """
 
     def run(env):
         return _trace_plan(plan, env)
 
-    return jax.jit(run, donate_argnums=0)
+    donate = () if plan.differentiable else (0,)
+    return jax.jit(run, donate_argnums=donate)
 
 
 def _run_single(plan: ExecutionPlan, env):
@@ -217,7 +224,7 @@ def sharded_runner(plan: ExecutionPlan, names=None):
 
     stepped = jax.jit(
         shard_map(local, mesh=mesh, in_specs=(specs,), out_specs=specs, check=False),
-        donate_argnums=0,
+        donate_argnums=() if plan.differentiable else (0,),
     )
     return stepped, sharding
 
@@ -304,3 +311,200 @@ def run_program(
             for k, v in env.items()
         }
     return execute(p, env)
+
+
+# ---------------------------------------------------------------------------
+# reverse-mode AD: checkpointed differentiable stepping
+# ---------------------------------------------------------------------------
+
+
+def _diff_launch(step, ref_step):
+    """Wrap one compiled launch in a ``custom_vjp``.
+
+    The primal runs the fused kernel; the backward pass differentiates the
+    *roll-interpreter* application of the same body at the saved input env —
+    for the (bi)linear bodies the compiler fuses, that VJP is exactly the
+    transpose of the kernel's map (both compute the same function; the
+    bitwise backend-agreement tests pin it), so the gradient is exact while
+    the forward sweep stays on the compiled path."""
+
+    @jax.custom_vjp
+    def f(env):
+        return step(env)
+
+    def fwd(env):
+        return step(env), env
+
+    def bwd(env, ct):
+        _, pullback = jax.vjp(ref_step, env)
+        return pullback(ct)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _chunked(launch, env, n: int, chunk: int, checkpoint: bool):
+    """Run ``n`` launches, rematerializing in chunks of ``chunk``.
+
+    ``jax.checkpoint`` over each chunk runner caps the reverse pass's saved
+    residuals at O(n/chunk + chunk) envs instead of O(n) — the classic
+    two-level ladder.  ``checkpoint=False`` is the all-residuals reference
+    the ~1 ulp property test compares against."""
+    if n <= 0:
+        return env
+
+    def chunk_fn(e, size):
+        for _ in range(size):
+            e = launch(e)
+        return e
+
+    if not checkpoint or n <= chunk:
+        return chunk_fn(env, n)
+    full, tail = divmod(n, chunk)
+    ck = jax.checkpoint(lambda e: chunk_fn(e, chunk))
+    env, _ = jax.lax.scan(lambda e, _: (ck(e), None), env, None, length=full)
+    return chunk_fn(env, tail)
+
+
+def differentiable_runner(
+    plan: ExecutionPlan, *, checkpoint: bool = True, chunk_steps: int = None
+):
+    """Reverse-differentiable ``run(env) -> env`` for a differentiable plan.
+
+    Requires a plan built with ``RunOptions(differentiable=True)`` (repack
+    steps, no donation, no in-place residency).  Fused segments keep their
+    compiled kernels on the primal sweep — each launch is wrapped in a
+    ``custom_vjp`` whose backward differentiates the equivalent interpreter
+    application (see :func:`_diff_launch`) — and the time loop is a
+    checkpointed ladder: chunk runners of ``chunk_steps`` steps (snapped to
+    the segment's time-tile factor ``k``, default ``k·ceil(sqrt(launches))``)
+    rematerialize under ``jax.checkpoint``, so reverse-pass memory scales
+    with the square root of the step count rather than linearly.
+
+    ``checkpoint=False`` keeps every launch's residuals — the reference the
+    checkpointed gradients are tested against.  On a mesh plan the returned
+    runner maps the same ladder over bricks inside ``shard_map`` (ppermute
+    carries its own transpose rule, so the exchange reverses exactly).
+
+    The result is a plain traceable function: compose with ``jax.jit`` /
+    ``jax.grad`` at the call site.  For step counts whose residuals exceed
+    device memory even checkpointed, see :func:`checkpointed_vjp` (host /
+    disk spill).
+    """
+    if not plan.differentiable:
+        raise ValueError(
+            "differentiable_runner needs a plan built with "
+            "RunOptions(differentiable=True)"
+        )
+    if plan.backend == "numpy":
+        raise ValueError("the eager numpy backend is not differentiable")
+    from repro.engine.plan import compile_body
+
+    shapes = {n: f.shape for n, f in plan.program.fields.items()}
+    dtypes = {n: f.dtype for n, f in plan.program.fields.items()}
+
+    staged = []
+    for seg in plan.segments:
+        if seg.kind == "fused":
+            ref1, _ = compile_body(
+                seg.ops,
+                seg.loop,
+                shapes,
+                dtypes,
+                "jit",
+                mesh_ctx=plan.mesh_ctx,
+                batch=plan.batch,
+            )
+
+            def _ref_k(e, _ref=ref1, _k=seg.time_tile):
+                for _ in range(_k):
+                    e = _ref(e)
+                return e
+
+            launch = _diff_launch(seg.step, _ref_k)
+            launch_rem = (
+                _diff_launch(seg.step_rem, ref1)
+                if seg.step_rem is not None
+                else None
+            )
+        else:
+            launch, launch_rem = seg.step, seg.step
+        staged.append((seg, launch, launch_rem))
+
+    def run(env):
+        env = dict(env)
+        for seg, launch, launch_rem in staged:
+            if seg.loop is None:
+                env = launch(env)
+                continue
+            n, k = seg.loop.n, seg.time_tile
+            if k > 1:
+                chunk = max(1, (chunk_steps or 0) // k) or None
+                launches = n // k
+                chunk = chunk or max(1, int(np.ceil(np.sqrt(max(1, launches)))))
+                env = _chunked(launch, env, launches, chunk, checkpoint)
+                env = _chunked(launch_rem, env, n % k, max(1, n % k), checkpoint)
+            else:
+                chunk = chunk_steps or max(1, int(np.ceil(np.sqrt(max(1, n)))))
+                env = _chunked(launch, env, n, chunk, checkpoint)
+        return env
+
+    if plan.mesh is None:
+        return run
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.jaxcompat import shard_map
+
+    _, _, ax_x, ax_y = plan.mesh_ctx
+    spec = P(None, ax_x, ax_y, None) if plan.batch > 1 else P(ax_x, ax_y, None)
+    specs = {k: spec for k in plan.program.fields}
+    return shard_map(
+        run, mesh=plan.mesh, in_specs=(specs,), out_specs=specs, check=False
+    )
+
+
+def checkpointed_vjp(chunk_fn, env0, n_chunks: int, *, spill_dir: str = None):
+    """Out-of-core reverse sweep: spill chunk-boundary states, replay back.
+
+    For runs whose checkpointed residual ladder still exceeds device memory,
+    this trades the in-device ``jax.checkpoint`` ladder for host-side chunk
+    snapshots: the forward sweep applies ``chunk_fn`` (any differentiable
+    ``env -> env``, e.g. one chunk of :func:`differentiable_runner` steps)
+    ``n_chunks`` times, saving each chunk's *input* env — to host memory, or
+    to disk via :class:`repro.checkpoint.manager.CheckpointManager` when
+    ``spill_dir`` is given (atomic npz snapshots, restored with their exact
+    dtypes).  Returns ``(env_final, vjp_fn)``; ``vjp_fn(cotangent_env)``
+    replays the chunks newest-first, restoring each saved state and pulling
+    the cotangent back through ``jax.vjp(chunk_fn, state)`` — peak device
+    memory is one chunk's residuals regardless of run length.
+    """
+    if n_chunks < 1:
+        raise ValueError(f"n_chunks must be >= 1; got {n_chunks}")
+    manager = None
+    snaps = []
+    if spill_dir is not None:
+        from repro.checkpoint.manager import CheckpointManager
+
+        manager = CheckpointManager(spill_dir, keep=n_chunks)
+    env = {k: jnp.asarray(v) for k, v in env0.items()}
+    for i in range(n_chunks):
+        if manager is not None:
+            manager.save(i, env)
+        else:
+            snaps.append(env)
+        env = chunk_fn(env)
+    final = env
+
+    def vjp_fn(ct):
+        ct = {k: jnp.asarray(v) for k, v in ct.items()}
+        for i in reversed(range(n_chunks)):
+            if manager is not None:
+                saved, _, _ = manager.restore(final, step=i)
+            else:
+                saved = snaps[i]
+            _, pullback = jax.vjp(chunk_fn, saved)
+            (ct,) = pullback(ct)
+        return ct
+
+    return final, vjp_fn

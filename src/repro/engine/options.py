@@ -57,6 +57,12 @@ class RunOptions:
     the measured cost model (:mod:`repro.core.perfmodel`) holds a
     calibrated entry for the body predicting the split faster — so
     uncalibrated runs keep today's schedule.
+
+    ``differentiable=True`` builds the run for reverse-mode AD: jitted
+    runners stop donating their entry buffers (donated buffers cannot be
+    saved as VJP residuals, and callers keep their arrays), plans skip the
+    halo-resident in-place layout, and ``wfa.solve`` routes through the
+    implicit-function-theorem adjoint (:mod:`repro.solver.adjoint`).
     """
 
     backend: Optional[str] = None
@@ -65,6 +71,7 @@ class RunOptions:
     resident: bool = True
     batch: int = 1
     overlap: object = "auto"
+    differentiable: bool = False
 
     def __post_init__(self):
         if int(self.batch) < 1:
@@ -73,6 +80,10 @@ class RunOptions:
         if self.overlap not in (True, False, "auto"):
             raise ValueError(
                 f"overlap must be True, False or 'auto'; got {self.overlap!r}"
+            )
+        if self.differentiable not in (True, False):
+            raise ValueError(
+                f"differentiable must be a bool; got {self.differentiable!r}"
             )
 
     def replace(self, **changes) -> "RunOptions":

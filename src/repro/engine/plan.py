@@ -83,6 +83,10 @@ class ExecutionPlan:
     segments: List[Segment]
     layout: "HaloLayout" = None
     batch: int = 1  # leading ensemble axis every env buffer carries
+    #: built for reverse-mode AD: runners must not donate entry buffers
+    #: (they become VJP residuals) and the plan skips the in-place
+    #: halo-resident layout — see RunOptions.differentiable
+    differentiable: bool = False
 
     @property
     def mesh_ctx(self) -> Optional[Tuple[int, int, str, str]]:
@@ -434,7 +438,11 @@ def plan(
             log.warning("%s", reason)
         scheduled.append((loop, ops, group, k, reason, cost))
     pad = 0
-    if resident and backend == "pallas":
+    if resident and backend == "pallas" and not options.differentiable:
+        # a differentiable plan keeps the repacking steps: the resident
+        # protocol's in-place aliased outputs and margin rewrites are
+        # exactly the buffer reuse a reverse pass cannot tolerate — saved
+        # residuals must survive the forward sweep
         from repro.kernels.ops import _interpret
 
         # In-place outputs are only safe where the kernel evaluates blocks
@@ -540,4 +548,5 @@ def plan(
         segments=segments,
         layout=layout,
         batch=batch,
+        differentiable=options.differentiable,
     )

@@ -25,6 +25,14 @@ single device (matching the interpreter's ``jnp.roll`` semantics exactly) or
 either way.  ``coords`` is a (1, 2) int32 array with the brick's global cell
 origin so one kernel image serves every brick — how one Worker image serves
 the whole WSE fabric.
+
+Reverse-mode AD never differentiates through this kernel: differentiable
+plans (``RunOptions(differentiable=True)``) keep donation and the in-place
+resident layout off, and ``engine.differentiable_runner`` wraps each launch
+in a ``custom_vjp`` whose backward replays the roll-interpreter reference —
+exact for the affine bodies the lowering pass admits, and indifferent to
+input aliasing because the primal kernel is only ever called on
+non-donated, margin-free arrays under AD.
 """
 from __future__ import annotations
 

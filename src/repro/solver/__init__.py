@@ -26,6 +26,7 @@ same recorded-program → fused-Pallas pipeline as the explicit path:
 """
 
 from repro.solver import krylov
+from repro.solver.adjoint import ADJOINT_METHODS, make_differentiable_solver
 from repro.solver.api import (
     SolveInfo,
     gershgorin_bounds,
@@ -46,6 +47,7 @@ from repro.solver.presets import (
 )
 
 __all__ = [
+    "ADJOINT_METHODS",
     "MGOptions",
     "Multigrid",
     "Operator",
@@ -56,6 +58,7 @@ __all__ = [
     "build_multigrid",
     "gershgorin_bounds",
     "krylov",
+    "make_differentiable_solver",
     "make_sharded_solver",
     "make_solver",
     "operator_fns",

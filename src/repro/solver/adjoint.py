@@ -1,0 +1,354 @@
+"""Adjoint solves: reverse-mode AD through ``wfa.solve``.
+
+The implicit-function theorem gives the VJP of a linear solve without
+differentiating through the Krylov iteration (whose ``lax.while_loop``
+has no reverse rule, and whose iterates are noise as far as the converged
+solution is concerned): for ``x = A⁻¹ b``,
+
+    b̄ = A⁻ᵀ x̄          (one *adjoint solve* with the transposed operator)
+    θ̄ = −⟨λ, (∂A/∂θ) x⟩  with λ = A⁻ᵀ x̄   (coefficient-field gradients)
+
+so the backward pass is one more Krylov solve with the **same compiled
+machinery** as the forward:
+
+* symmetric operators (CG / PipeCG / mg-pcg) — the transposed tap set
+  re-canonicalizes to a ``LoweredGroup`` *equal* to the forward one
+  (:func:`repro.compiler.ir.transpose_taps`), so the adjoint application
+  hits the same kernel-cache entry; zero new kernels are built;
+* non-symmetric operators (BiCGSTAB, e.g. variable-coefficient row-scaled
+  stencils) — the transposed group lowers through the same IR → codegen
+  path into one new fused kernel.
+
+Moat / boundary handling.  The compiled operator is the *masked* map
+``A = M·S + (I − M)`` — stencil rows on the written region ``M``
+(X/Y-interior × z-window), identity rows elsewhere — so its true transpose
+is ``Aᵀ = Sᵀ·M + (I − M)``, which couples boundary *columns* to interior
+rows.  The adjoint solve splits this exactly: the interior part
+``λᵢ = M·λ`` solves the maskable system ``Ã λᵢ = M x̄`` with
+``Ã = M·S̃ + (I − M)`` (``S̃`` = the transposed tap set — a plain
+``wfa``-shaped operator the Krylov drivers run unmodified, whose iterates
+stay interior-supported), and the identity rows get the closed-form
+correction ``λ_Moat = x̄_Moat − (S̃ λᵢ)_Moat`` applied outside the loop via
+a cheap full-domain roll application.  That makes the VJP exact for
+cotangents and perturbations with *boundary* support too — gradients with
+respect to Dirichlet boundary values flow correctly.
+
+Bodies that do not lower to the canonical affine form (interpreter
+fallbacks) raise a clear ``ValueError`` here instead of producing a
+silently wrong gradient.
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.solver import make_differentiable_solver
+    >>> from repro.solver.presets import btcs_program
+    >>> solve = make_differentiable_solver(btcs_program((8, 8, 5), 0.2), "T")
+    >>> solve.symmetric_adjoint
+    True
+    >>> x0 = jnp.ones((8, 8, 5), jnp.float32)
+    >>> jax.grad(lambda v: jnp.sum(solve(v) ** 2))(x0).shape
+    (8, 8, 5)
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compiler import LoweringError, transpose_taps
+from repro.compiler.codegen import compile_group
+from repro.core.program import Program, _interp_step, release_program
+from repro.solver import krylov
+from repro.solver.api import (
+    _answer_name,
+    _build_mg,
+    _check_precondition,
+    _lower_operator,
+    _split,
+    _written_mask,
+)
+
+#: methods with an implicit-function-theorem adjoint: the symmetric Krylov
+#: drivers (+ multigrid) reuse the forward kernel; bicgstab compiles the
+#: transposed tap set.  chebyshev/jacobi are excluded — their fixed
+#: iteration counts make "converged solution" (the IFT premise) a fiction.
+ADJOINT_METHODS = ("cg", "pipecg", "bicgstab", "mg")
+
+
+def _read(v, dz: int, dx: int, dy: int):
+    """Value of ``v`` at cell ``(x+dx, y+dy, z+dz)``: periodic in X/Y (the
+    roll semantics every backend implements), zero-extended in Z (the
+    transpose of the in-bounds z-slice reads — correct wherever the
+    interior-supported adjoint factor multiplies it)."""
+    a = v
+    if dx:
+        a = jnp.roll(a, -dx, axis=0)
+    if dy:
+        a = jnp.roll(a, -dy, axis=1)
+    if dz:
+        nz = a.shape[2]
+        src0, src1 = max(dz, 0), nz + min(dz, 0)
+        out = jnp.zeros_like(a)
+        a = out.at[:, :, src0 - dz : src1 - dz].set(a[:, :, src0:src1])
+    return a
+
+
+def _apply_update_full(update, env):
+    """Unmasked full-domain roll application of one lowered update.
+
+    Used once per backward solve for the Moat-row correction
+    ``(S̃ λᵢ)_Moat`` — a handful of rolls, negligible next to the Krylov
+    loop."""
+    out = None
+    for coeff, taps in update.terms:
+        term = None
+        for t in taps:
+            r = _read(env[t.field], t.dz, t.dx, t.dy)
+            term = r if term is None else term * r
+        term = coeff * term
+        out = term if out is None else out + term
+    return out
+
+
+def _masked_group_step(group, name):
+    """Interpreter application of a :class:`LoweredGroup`: written rows get
+    the tap polynomial, every other row passes through (identity Moat).
+    The ``backend="jit"`` adjoint-operator step — the transposed analogue
+    of :func:`repro.core.program._interp_step`."""
+    masks = []
+    for u in group.updates:
+        masks.append((u, u.z0, u.zlen))
+
+    def step(env):
+        env = dict(env)
+        v = env[name]
+        nx, ny, _ = v.shape
+        m2d = np.zeros((nx, ny, 1), dtype=bool)
+        m2d[1:-1, 1:-1, :] = True
+        interior = jnp.asarray(m2d)
+        for u, z0, zlen in masks:
+            val = _apply_update_full(u, env)
+            win = jnp.where(interior, val, v)[:, :, z0 : z0 + zlen]
+            v = jax.lax.dynamic_update_slice(v, win, (0, 0, z0))
+            env[name] = v
+        return env
+
+    return step
+
+
+def _validate_z(group, nz: int, what: str) -> None:
+    for u in group.updates:
+        for t in u.taps():
+            if u.z0 + t.dz < 0 or u.z0 + u.zlen + t.dz > nz:
+                raise ValueError(
+                    f"{what}: tap {t} reads z "
+                    f"[{u.z0 + t.dz}, {u.z0 + u.zlen + t.dz}) outside the "
+                    f"field's {nz} planes — this operator's adjoint cannot "
+                    "be expressed with the same z-window machinery"
+                )
+
+
+def make_differentiable_solver(
+    program: Program,
+    answer,
+    *,
+    method: str = "cg",
+    backend: str = "pallas",
+    tol: float = 1e-10,
+    maxiter: int = 1000,
+    steps: int = 1,
+    precondition: Optional[str] = None,
+    mg_opts=None,
+    return_info: bool = False,
+):
+    """Build a traceable, reverse-differentiable solver for a recorded system.
+
+    Returns ``solve_fn(x0, coef_env=None) -> x`` (or ``(x, (iters, res))``
+    with ``return_info=True``): ``x0`` is the unknown's initial state (its
+    Moat carries the boundary values) and ``coef_env`` maps coefficient
+    field names to arrays overriding their init data — both may be traced,
+    and ``jax.grad`` through ``solve_fn`` is exact via the
+    implicit-function-theorem ``custom_vjp`` (see the module docstring).
+    Each of the ``steps`` implicit time steps runs the ``Rhs()`` body
+    (differentiated natively through the roll interpreter — one application
+    per step) and one Krylov solve on the compiled operator kernel.
+
+    Unlike :func:`repro.solver.api.make_solver` this builder accumulates
+    dot products in the field dtype (not fp32): fp64 gradient checks need
+    fp64 reductions to reach tight tolerances.  Nothing is donated — the
+    solver's inputs may be VJP residuals of an enclosing computation.
+
+    Raises ``ValueError`` for non-affine operator bodies (an interpreter
+    fallback has no tap set to transpose — failing loudly beats a silently
+    wrong gradient), for nonlinear operators, and for the fixed-iteration
+    methods outside :data:`ADJOINT_METHODS`.
+    """
+    if method not in ADJOINT_METHODS:
+        raise ValueError(
+            f"reverse-mode AD supports methods {ADJOINT_METHODS}; got "
+            f"{method!r} (chebyshev/jacobi run a fixed iteration count, "
+            "not a converged solve — the IFT adjoint does not apply)"
+        )
+    if backend not in ("jit", "pallas"):
+        raise ValueError(f"unknown solver backend {backend!r}")
+    _check_precondition(method, precondition)
+    name = _answer_name(program, answer)
+    release_program(program)
+    (op_loop, op_ops), rhs_group = _split(program, name)
+    group = _lower_operator(op_ops, name)
+    if group is None:
+        raise ValueError(
+            "cannot differentiate through this solve: the operator body "
+            "does not lower to the canonical affine tap form (it would run "
+            "on the interpreter fallback), so there is no tap set to "
+            "transpose for the adjoint system — rewrite the Operator() "
+            "body as an affine stencil or drop differentiable=True"
+        )
+    if len(group.updates) != 1:
+        raise ValueError(
+            "differentiable solves support single-update Operator() bodies "
+            f"(got {len(group.updates)} updates: sequentially composed "
+            "updates transpose in reverse order with per-update masks, "
+            "which this adjoint does not implement)"
+        )
+    try:
+        tgroup = transpose_taps(group, name)
+    except LoweringError as e:
+        raise ValueError(f"cannot differentiate through this solve: {e}") from e
+    field = program.fields[name]
+    shape, dtype = field.shape, field.dtype
+    _validate_z(group, shape[2], "operator")
+    _validate_z(tgroup, shape[2], "adjoint operator")
+    symmetric = tgroup == group
+
+    mg = _build_mg(
+        method, precondition, group, name, shape, dtype, backend, mg_opts
+    )
+    if method == "mg" or (mg is not None and precondition == "mg"):
+        # build_multigrid validated symmetry; the cycle/preconditioner is
+        # therefore its own adjoint and is reused verbatim below
+        assert symmetric, "multigrid passed an asymmetric operator through"
+
+    shapes = {n: f.shape for n, f in program.fields.items()}
+    dtypes = {n: f.dtype for n, f in program.fields.items()}
+    if backend == "pallas":
+        from repro.kernels.ops import _interpret
+
+        try:
+            op_step = compile_group(
+                op_ops, shapes, dtypes, interpret=_interpret(), group=group
+            )
+            opT_step = compile_group(
+                op_ops, shapes, dtypes, interpret=_interpret(), group=tgroup
+            )
+        except LoweringError as e:
+            raise ValueError(
+                f"cannot differentiate through this solve: {e} (no silent "
+                "interpreter fallback under grad)"
+            ) from e
+    else:
+        op_step = _interp_step(op_ops)
+        opT_step = _masked_group_step(tgroup, name)
+    rhs_step = _interp_step(rhs_group[1]) if rhs_group is not None else None
+
+    update = group.updates[0]
+    t_update = tgroup.updates[0]
+    m = jnp.asarray(_written_mask(group, shape))
+    coef_names = [n for n in program.fields if n != name]
+    M = mg.apply if (mg is not None and precondition == "mg") else None
+
+    def dot(a, b):
+        # field-dtype accumulation: the fp32 reduction make_solver uses
+        # floors fp64 solves (and their gradient checks) at ~1e-7
+        return jnp.sum(a * b)
+
+    def dot2(a, b, c, d):
+        return jnp.sum(a * b), jnp.sum(c * d)
+
+    def _run_krylov(A, b, x0):
+        if method == "mg":
+            return krylov.stationary(
+                lambda x: mg.cycle(x, b),
+                lambda x: mg.residual_norm2(x, b, dot),
+                x0,
+                tol=tol,
+                maxiter=maxiter,
+                ref2=dot(b, b),
+            )
+        if method == "cg":
+            return krylov.cg(A, dot, b, x0, tol=tol, maxiter=maxiter, M=M, dot2=dot2)
+        if method == "pipecg":
+            return krylov.pipecg(A, dot2, b, x0, tol=tol, maxiter=maxiter)
+        return krylov.bicgstab(A, dot, b, x0, tol=tol, maxiter=maxiter, M=M)
+
+    def _apply(step, v, envc):
+        env = dict(envc)
+        env[name] = v
+        return step(env)[name]
+
+    @jax.custom_vjp
+    def solve_core(b, x0, *coef_args):
+        envc = dict(zip(coef_names, coef_args))
+        x, it, res = _run_krylov(lambda v: _apply(op_step, v, envc), b, x0)
+        return x, it, res
+
+    def solve_fwd(b, x0, *coef_args):
+        out = solve_core(b, x0, *coef_args)
+        return out, (out[0], coef_args)
+
+    def solve_bwd(resids, cts):
+        x, coef_args = resids
+        ct = cts[0]  # iters/res cotangents are symbolic zeros
+        envc = dict(zip(coef_names, coef_args))
+        bt = jnp.where(m, ct, 0)
+        lam, _, _ = _run_krylov(lambda v: _apply(opT_step, v, envc), bt, bt)
+        lam = jnp.where(m, lam, 0)  # pin the interior support exactly
+        # identity (Moat) rows of A⁻ᵀ: λ_Moat = x̄_Moat − (S̃ λᵢ)_Moat
+        full = _apply_update_full(t_update, {**envc, name: lam})
+        b_bar = lam + jnp.where(m, 0, ct - full)
+        coef_bars = []
+        for n in coef_names:
+            g = None
+            for coeff, taps in update.terms:
+                ctap = [t for t in taps if t.field == n]
+                if not ctap:
+                    continue
+                (tc,) = ctap
+                (tx,) = [t for t in taps if t.field == name]
+                piece = (
+                    coeff
+                    * _read(lam, -tc.dz, -tc.dx, -tc.dy)
+                    * _read(x, tx.dz - tc.dz, tx.dx - tc.dx, tx.dy - tc.dy)
+                )
+                g = piece if g is None else g + piece
+            if g is None:
+                coef_bars.append(jnp.zeros(shapes[n], dtypes[n]))
+            else:
+                coef_bars.append(-g.astype(dtypes[n]))
+        return (b_bar, jnp.zeros_like(x), *coef_bars)
+
+    solve_core.defvjp(solve_fwd, solve_bwd)
+
+    def run(x0, *coef_args):
+        envc = dict(zip(coef_names, coef_args))
+
+        def one(x, _):
+            b = _apply(rhs_step, x, envc) if rhs_step is not None else x
+            x2, it, res = solve_core(b, x, *coef_args)
+            return x2, (it, res)
+
+        return jax.lax.scan(one, x0, None, length=steps)
+
+    def solve_fn(x0, coef_env=None):
+        coef_env = coef_env or {}
+        coefs = [
+            jnp.asarray(coef_env.get(n, program.fields[n].init_data))
+            for n in coef_names
+        ]
+        x, aux = run(jnp.asarray(x0), *coefs)
+        return (x, aux) if return_info else x
+
+    solve_fn.symmetric_adjoint = symmetric
+    solve_fn.coef_names = tuple(coef_names)
+    return solve_fn

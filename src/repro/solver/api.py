@@ -478,6 +478,7 @@ def make_solver(
     mg_opts=None,
     batch: int = 1,
     member_env=None,
+    differentiable: bool = False,
 ) -> Callable:
     """Build a reusable jitted solver ``step_fn(x0) -> (x, (iters, res))``.
 
@@ -496,7 +497,45 @@ def make_solver(
     per-member ``(B, X, Y, Z)`` stacks for coefficient fields (others
     broadcast from their init data); multigrid is not batch-aware, so
     ``method="mg"`` / ``precondition=`` require ``batch=1``.
+
+    ``differentiable=True`` returns a solver that is reverse-mode
+    differentiable via the implicit-function-theorem adjoint
+    (:mod:`repro.solver.adjoint`): same ``step_fn(x0) -> (x, (iters, res))``
+    contract, but traceable under ``jax.grad``/``jax.jit``, with nothing
+    donated and dots accumulated in the field dtype.  Requires ``batch=1``
+    and a Krylov/mg method; non-affine operator bodies raise instead of
+    falling back to the interpreter.
     """
+    if differentiable:
+        if batch > 1:
+            raise ValueError(
+                "differentiable solves need batch=1 (vmap the returned "
+                "solver for ensembles of gradients)"
+            )
+        from repro.solver.adjoint import make_differentiable_solver
+
+        member_env = member_env or {}
+        solve_fn = make_differentiable_solver(
+            program,
+            answer,
+            method=method,
+            backend="pallas" if backend is None else backend,
+            tol=tol,
+            maxiter=maxiter,
+            steps=steps,
+            precondition=precondition,
+            mg_opts=mg_opts,
+            return_info=True,
+        )
+
+        def step_fn(x0):
+            coef = {
+                n: member_env[n] for n in solve_fn.coef_names if n in member_env
+            }
+            return solve_fn(x0, coef)
+
+        step_fn.symmetric_adjoint = solve_fn.symmetric_adjoint
+        return step_fn
     if method not in METHODS:
         raise ValueError(f"unknown method {method!r}; expected one of {METHODS}")
     _check_precondition(method, precondition)
@@ -823,6 +862,14 @@ def solve(
     CG/BiCGSTAB with one cycle per iteration — both keep iteration counts
     flat as the grid grows (see docs/solvers.md).
 
+    ``options.differentiable=True`` routes through the
+    implicit-function-theorem adjoint (:mod:`repro.solver.adjoint`): the
+    eager result is numerically the same, and the underlying solver is
+    reverse-mode differentiable — build it directly with
+    ``make_solver(..., differentiable=True)`` (or
+    :func:`repro.solver.adjoint.make_differentiable_solver`) to put
+    ``jax.grad`` through the solve (see docs/adjoint.md).
+
     Example — the paper's BTCS heat system, multigrid-preconditioned::
 
         >>> import numpy as np
@@ -850,6 +897,11 @@ def solve(
         raise ValueError(
             "batched solves are single-device; drop mesh= or set batch=1"
         )
+    if options.differentiable and mesh is not None:
+        raise ValueError(
+            "differentiable solves are single-device; drop mesh= (shard the "
+            "forward solve only, or take gradients with mesh=None)"
+        )
     name = _answer_name(program, answer)
     kwargs = dict(
         method=method,
@@ -867,7 +919,12 @@ def solve(
         x0 = jax.device_put(jnp.asarray(program.fields[name].init_data), sharding)
     else:
         step_fn = make_solver(
-            program, name, batch=batch, member_env=member_env, **kwargs
+            program,
+            name,
+            batch=batch,
+            member_env=member_env,
+            differentiable=options.differentiable,
+            **kwargs,
         )
         x0 = np.asarray(member_env.get(name, program.fields[name].init_data))
         if batch > 1 and x0.ndim == 3:

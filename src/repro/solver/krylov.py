@@ -178,7 +178,7 @@ def pipecg(
         zero,
         zero,
         rr0,
-        jnp.asarray(1.0, jnp.float32),
+        jnp.asarray(1.0, rr0.dtype),  # alpha carries the dot's dtype
         jnp.asarray(0, jnp.int32),
         jnp.asarray(True),
     )
@@ -213,9 +213,11 @@ def bicgstab(
         M = lambda v: v
     r = b - A(x0)
     r0 = r
-    one = jnp.asarray(1.0, jnp.float32)
     zero_v = jnp.zeros_like(b)
     rr = dot(r, r)
+    # scalar recurrences carry the dot's accumulation dtype (fp64 adjoint
+    # solves pass full-precision dots; the fp32 default is unchanged)
+    one = jnp.asarray(1.0, rr.dtype)
 
     def cond(s):
         rr, i = s[7], s[8]

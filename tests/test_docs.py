@@ -32,6 +32,7 @@ DOC_MODULES = [
     "repro.engine.layout",
     "repro.engine.stats",
     "repro.service.service",
+    "repro.solver.adjoint",
     "repro.solver.api",
     "repro.solver.frontend",
     "repro.solver.multigrid",
@@ -49,6 +50,7 @@ def test_docs_tree_exists():
         "benchmarks.md",
         "service.md",
         "ensembles.md",
+        "adjoint.md",
     }
     assert required <= names, f"missing docs pages: {required - names}"
 

@@ -1,0 +1,173 @@
+"""Explicit-path sentinel overhead: guarded vs unguarded steady state.
+
+The robustness layer's contract is that arming ``check_finite=N`` costs at
+most 2% per step at the checkpoint-chunk granule.  This case measures that
+contract the same way ``time_tiling`` measures its k× win: the plan is
+built once, the runners are built once, and what is timed is the
+steady-state compiled step loop — the unguarded donated runner versus the
+executor's actual guarded ``while_loop`` runner, whose ``isfinite`` probe
+is fused into the loop carry (one reduction per N steps, single dispatch
+per run; the last-good state is recomputed by prefix replay only on the
+rare failure path, so the happy path carries no snapshot).
+
+The off/on rounds are **interleaved** in a per-round shuffled order, and
+``overhead_pct`` compares the **process-CPU-time floor** (mean of each
+side's 8 fastest rounds): wall-clock noise on this container (5-10% CV
+from cgroup throttling and neighbor steal) is larger than the ≤2% signal,
+while the sentinel's cost is by construction extra CPU work —
+``time.process_time`` does not count throttled-out time, and the best-8
+floor mean rejects the rounds the XLA thread pool oversubscribed.
+``us_per_call`` still reports each side's wall-clock best-of per harness
+convention.  The derived column
+also carries the fused-kernel accounting (``fallbacks=0`` — the sentinel
+must not knock the body off the compiled path); ``run.py --check-health``
+gates ``overhead_pct <= 2`` on CI.
+"""
+
+from __future__ import annotations
+
+import random
+import statistics
+import time
+
+import jax
+
+from benchmarks.common import KernelStatsSnapshot, emit, resolved
+from repro.configs.heat3d import HeatConfig, make_field
+from repro.core import WSE_Array, WSE_For_Loop, WSE_Interface
+from repro.engine import RunOptions, reset_stats
+from repro.engine.executor import _guarded_loop_wrap, fresh_buffer, single_runner
+from repro.engine.plan import plan
+
+# a guarded run pays two kinds of cost: a per-run fixed part (separate
+# enter/exit dispatches, no donation) and a per-granule marginal part (one
+# cache-resident isfinite pass per N steps).  Both need a realistic run
+# length to show their true amortized weight — 64-step runs made the fixed
+# part read as 5% "sentinel cost" when it is really ~200us per run — and
+# the ~130ms calls double as noise smoothing for the floor estimator.
+STEPS = 2048  # steps per timed run
+GRANULES = (64, 256)  # probe every N steps
+
+
+def _record(T0, steps: int):
+    wse = WSE_Interface()
+    c = 0.1
+    center = 1.0 - 6.0 * c
+    T = WSE_Array("T_n", init_data=T0)
+    with WSE_For_Loop("t", steps):
+        T[1:-1, 0, 0] = center * T[1:-1, 0, 0] + c * (
+            T[2:, 0, 0]
+            + T[:-2, 0, 0]
+            + T[1:-1, 1, 0]
+            + T[1:-1, 0, -1]
+            + T[1:-1, -1, 0]
+            + T[1:-1, 0, 1]
+        )
+    return wse.program
+
+
+def _runners(program):
+    """(baseline, guarded while_loop) runners for the same compiled body."""
+    p = plan(program, RunOptions(backend="pallas", time_tile=1, overlap=False))
+    base = single_runner(p)
+    seg = next(s for s in p.segments if s.loop is not None)
+    names = list(program.fields)
+    # the fused body steps on layout-padded bricks — enter/exit bracket the
+    # guarded run exactly as the executor's event stream does
+    enter = jax.jit(p.layout.enter) if p.layout.pad > 0 else None
+    exit_ = jax.jit(p.layout.exit) if p.layout.pad > 0 else None
+    guarded = {
+        every: _guarded_loop_wrap(p, seg.step, every, names) for every in GRANULES
+    }
+    return p, base, guarded, enter, exit_
+
+
+def _guarded_run(runner, nchunks, env, enter, exit_):
+    """One guarded pass over STEPS steps: enter, the executor's fused
+    while_loop (probe in the carry), exit — the same work
+    ``execute(..., check_finite=every)`` performs on the happy path."""
+    if enter is not None:
+        env = enter(env)
+    env, i, ok = runner(env, nchunks)
+    if not bool(jax.device_get(ok)):
+        raise AssertionError("sentinel tripped on a healthy run")
+    if exit_ is not None:
+        env = exit_(env)
+    jax.block_until_ready(list(env.values()))
+    return env
+
+
+def run() -> None:
+    cfg = HeatConfig(nx=32, ny=32, nz=16)
+    T0 = make_field(cfg)
+    program = _record(T0, STEPS)
+    env0 = {n: f.init_data for n, f in program.fields.items()}
+
+    reset_stats()
+    snap = KernelStatsSnapshot()
+    p, base, guarded, enter, exit_ = _runners(program)
+
+    # warm every runner (compile outside the timed region); this case
+    # measures a ≤2% contract against ±10% container drift, so the floor
+    # estimate needs more interleaved rounds than the harness default
+    warmup, iters = resolved()
+    iters = max(iters, 40)
+    env = {k: fresh_buffer(v) for k, v in env0.items()}
+    for _ in range(max(warmup, 1)):
+        env = base(env)
+    genvs = {e: {k: fresh_buffer(v) for k, v in env0.items()} for e in GRANULES}
+    for e in GRANULES:
+        genvs[e] = _guarded_run(guarded[e], STEPS // e, genvs[e], enter, exit_)
+
+    # interleaved rounds in a per-round shuffled order: a fixed order
+    # phase-locks the last side with this container's periodic CPU-quota
+    # throttle and reads as fake overhead on whichever side runs last
+    rng = random.Random(0)
+    off_wall: list[float] = []
+    off_cpu: list[float] = []
+    on_wall = {e: [] for e in GRANULES}
+    on_cpu = {e: [] for e in GRANULES}
+
+    def run_off():
+        nonlocal env
+        t0, c0 = time.perf_counter(), time.process_time()
+        env = base(env)
+        jax.block_until_ready(list(env.values()))
+        off_cpu.append(time.process_time() - c0)
+        off_wall.append(time.perf_counter() - t0)
+
+    def run_on(e):
+        t0, c0 = time.perf_counter(), time.process_time()
+        genvs[e] = _guarded_run(guarded[e], STEPS // e, genvs[e], enter, exit_)
+        on_cpu[e].append(time.process_time() - c0)
+        on_wall[e].append(time.perf_counter() - t0)
+
+    sides = [run_off] + [lambda e=e: run_on(e) for e in GRANULES]
+    for _ in range(iters):
+        rng.shuffle(sides)
+        for side in sides:
+            side()
+
+    def floor(ts):
+        """Mean of the 8 fastest rounds: the stable floor under additive
+        scheduling noise (a raw min still rides single-window luck)."""
+        return statistics.mean(sorted(ts)[:8])
+
+    off_floor = floor(off_cpu)
+    emit(
+        "health_guard_off",
+        min(off_wall) * 1e6 / STEPS,
+        f"steps={STEPS};probes=0;overhead_pct=0.00;{snap.derived()}",
+    )
+    for e in GRANULES:
+        pct = (floor(on_cpu[e]) - off_floor) / off_floor * 100.0
+        emit(
+            f"health_guard_on_e{e}",
+            min(on_wall[e]) * 1e6 / STEPS,
+            f"steps={STEPS};every={e};probes={STEPS // e};"
+            f"overhead_pct={pct:.2f};{snap.derived()}",
+        )
+
+
+if __name__ == "__main__":
+    run()

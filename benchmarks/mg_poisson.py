@@ -58,7 +58,7 @@ def run() -> None:
             snap = KernelStatsSnapshot()
             prog = poisson_program(shape, rhs=F)
             step = make_solver(prog, "T", backend="pallas", tol=TOL, **kwargs)
-            x, (iters, res) = step(x0)
+            x, (iters, res, _outcome) = step(x0)
             us = time_fn(lambda T: step(T)[0], x0)
             emit(
                 f"mg_poisson_{label}_n{n}",

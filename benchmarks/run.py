@@ -19,6 +19,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                           ratio via the IFT adjoint (symmetric CG reuses
                           the forward kernel; BiCGSTAB row is the
                           inverse-diffusivity misfit gradient)
+  * health_overhead     — explicit-path sentinel cost: guarded
+                          (``check_finite=N``) vs unguarded steady-state
+                          stepping, interleaved best-of (gates ≤2%)
 
 Usage::
 
@@ -35,6 +38,9 @@ fallbacks — the CI smoke gate keeping every pallas case on the fused path.
 or k=4 row is slower than its k=1 row — temporal blocking must never lose
 to untiled stepping (the cost model guarantees it by construction for
 model-driven picks; this gates the measured reality).
+``--check-health`` exits nonzero if any ``health_guard_on`` row reports
+more than 2% per-step overhead against its unguarded baseline — arming the
+explicit-path sentinel must stay effectively free at the chunk granule.
 """
 
 from __future__ import annotations
@@ -53,6 +59,7 @@ def main() -> None:
         distributed_model,
         ensemble_throughput,
         explicit_scaling,
+        health_overhead,
         implicit_scaling,
         implicit_solve,
         kernels_bench,
@@ -75,6 +82,7 @@ def main() -> None:
         "service_throughput": service_throughput,
         "ensemble_throughput": ensemble_throughput,
         "adjoint_inverse": adjoint_inverse,
+        "health_overhead": health_overhead,
     }
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
@@ -103,6 +111,11 @@ def main() -> None:
         "--check-tiling",
         action="store_true",
         help="fail if time_tiling k=2/k=4 rows lose to k=1",
+    )
+    ap.add_argument(
+        "--check-health",
+        action="store_true",
+        help="fail if any health_guard_on row exceeds 2% overhead",
     )
     ap.add_argument(
         "cases",
@@ -185,6 +198,27 @@ def main() -> None:
         if losers:
             sys.exit(1)
         print(f"# tiling holds: k2/k4 <= k1 ({base:.2f}us/step)")
+
+    if args.check_health:
+        over = [
+            (r["name"], float(m.group(1)))
+            for r in RESULTS
+            if str(r["name"]).startswith("health_guard_on")
+            for m in [re.search(r"overhead_pct=(-?[\d.]+)", str(r["derived"]))]
+            if m and float(m.group(1)) > 2.0
+        ]
+        rows = [r for r in RESULTS if str(r["name"]).startswith("health_guard_on")]
+        if not rows:
+            print("# --check-health: no health_guard_on row emitted", file=sys.stderr)
+            sys.exit(1)
+        for n, pct in over:
+            print(
+                f"# SENTINEL OVERHEAD: {n} costs {pct:.2f}% > 2% budget",
+                file=sys.stderr,
+            )
+        if over:
+            sys.exit(1)
+        print(f"# sentinel budget holds: {len(rows)} guarded rows <= 2%")
 
 
 if __name__ == "__main__":

@@ -12,7 +12,11 @@ The curated public surface of the stack (``import repro as wfa``):
   ``solve`` consumes; :class:`SolveInfo` reports convergence;
 * **Ensembles** — :class:`Ensemble` stacks B scenarios behind one program;
   ``make``/``solve`` accept it transparently and advance all members per
-  kernel launch (:mod:`repro.core.ensemble`).
+  kernel launch (:mod:`repro.core.ensemble`);
+* **Numerical health** — every iterative solve carries a failure-taxonomy
+  word (``SolveInfo.outcomes``); :class:`RecoveryPolicy` arms the bounded
+  escalation ladder and :class:`NumericalFault` is the terminal signal
+  (:mod:`repro.solver.health`, ``docs/robustness.md``).
 
 >>> import numpy as np
 >>> import repro as wfa
@@ -35,7 +39,9 @@ __all__ = [
     "Ensemble",
     "Field",
     "ForLoop",
+    "NumericalFault",
     "Operator",
+    "RecoveryPolicy",
     "Rhs",
     "RunOptions",
     "SolveInfo",
@@ -50,7 +56,9 @@ _EXPORTS = {
     "Ensemble": ("repro.core.ensemble", "Ensemble"),
     "Field": ("repro.core.field", "Field"),
     "ForLoop": ("repro.core.program", "ForLoop"),
+    "NumericalFault": ("repro.solver.health", "NumericalFault"),
     "Operator": ("repro.solver.frontend", "Operator"),
+    "RecoveryPolicy": ("repro.solver.health", "RecoveryPolicy"),
     "Rhs": ("repro.solver.frontend", "Rhs"),
     "RunOptions": ("repro.engine.options", "RunOptions"),
     "SolveInfo": ("repro.solver.api", "SolveInfo"),

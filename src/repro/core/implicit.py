@@ -162,21 +162,25 @@ def _btcs_solve_impl(T0, w: float, steps: int, method: str = "cg",
 
     def one(T, _):
         b = rhs(T)
+        # the legacy aux contract stays (i, res); the outcome word is the
+        # wfa.solve path's surface (SolveInfo.outcomes)
         if method == "cg":
-            x, i, res = krylov.cg(A, dot, b, T, tol=tol, maxiter=maxiter)
+            x, i, res, _ = krylov.cg(A, dot, b, T, tol=tol, maxiter=maxiter)
         elif method == "pipecg":
-            x, i, res = krylov.pipecg(A, dot2, b, T, tol=tol, maxiter=maxiter)
+            x, i, res, _ = krylov.pipecg(A, dot2, b, T, tol=tol,
+                                         maxiter=maxiter)
         elif method == "bicgstab":
-            x, i, res = krylov.bicgstab(A, dot, b, T, tol=tol,
-                                        maxiter=maxiter)
+            x, i, res, _ = krylov.bicgstab(A, dot, b, T, tol=tol,
+                                           maxiter=maxiter)
         elif method == "chebyshev":
             lmin, lmax = chebyshev_bounds(w)
-            x, i, res = krylov.chebyshev(A, b, T, lmin, lmax, iters=maxiter)
+            x, i, res, _ = krylov.chebyshev(A, b, T, lmin, lmax,
+                                            iters=maxiter)
         elif method == "jacobi":
             # unit diagonal + identity Moat rows: x + b − A(x) IS the Jacobi
             # sweep (b + ωψ·Sx interior, b on the Moat) — no mask needed
-            x, i, res = krylov.jacobi(lambda x: x + b - A(x), T,
-                                      iters=maxiter)
+            x, i, res, _ = krylov.jacobi(lambda x: x + b - A(x), T,
+                                         iters=maxiter)
         else:
             raise ValueError(method)
         return x, (i, res)

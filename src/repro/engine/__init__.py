@@ -23,6 +23,7 @@ auto-pick; illegal factors clamp with a logged reason, non-lowerable bodies
 fall back to the untiled interpreter exactly as before.
 """
 
+from repro.engine import health
 from repro.engine.executor import (
     checkpointed_vjp,
     differentiable_runner,
@@ -31,6 +32,7 @@ from repro.engine.executor import (
     sharded_runner,
     single_runner,
 )
+from repro.engine.health import NumericalFault, RecoveryPolicy
 from repro.engine.layout import HaloLayout
 from repro.engine.options import UNSET, RunOptions, resolve_options
 from repro.engine.plan import (
@@ -50,11 +52,14 @@ __all__ = [
     "ExecutionPlan",
     "HaloLayout",
     "LevelSegment",
+    "NumericalFault",
+    "RecoveryPolicy",
     "RunOptions",
     "Segment",
     "UNSET",
     "compile_body",
     "execute",
+    "health",
     "plan",
     "plan_mg_levels",
     "reset_stats",

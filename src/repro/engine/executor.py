@@ -153,25 +153,43 @@ def _account(plan: ExecutionPlan) -> None:
                 stats.repacks += n * len(seg.ops)
 
 
-def _run_numpy(plan: ExecutionPlan, env: Dict[str, np.ndarray]):
+def _run_numpy(plan: ExecutionPlan, env: Dict[str, np.ndarray], check: int = 0):
     if plan.batch > 1:
         # the eager validation backend has no vectorizing machinery to
         # batch through — run the members one by one and restack
         outs = [
-            _run_numpy_one(plan, {k: v[b] for k, v in env.items()})
+            _run_numpy_one(plan, {k: v[b] for k, v in env.items()}, check)
             for b in range(plan.batch)
         ]
         return {k: np.stack([o[k] for o in outs]) for k in env}
-    return _run_numpy_one(plan, env)
+    return _run_numpy_one(plan, env, check)
 
 
-def _run_numpy_one(plan: ExecutionPlan, env: Dict[str, np.ndarray]):
+def _run_numpy_one(plan: ExecutionPlan, env: Dict[str, np.ndarray], check=0):
+    from repro.engine import health as ehealth
+
     env = {k: np.asarray(v).copy() for k, v in env.items()}
     roll = lambda a, s, ax: np.roll(a, s, axis=ax)  # noqa: E731
+    step_idx, since, last_good, good_step = 0, 0, None, 0
+    if check > 0:
+        if not ehealth.probe(env):
+            _sentinel_fault(env, 0, None, 0)
+        last_good = {k: v.copy() for k, v in env.items()}
     for seg in plan.segments:
         for _ in range(seg.n_steps):
             for op in seg.ops:
                 env[op.field_name] = _apply_op(op, env, np, roll)
+            step_idx += 1
+            since += 1
+            if check > 0 and since >= check:
+                since = 0
+                if not ehealth.probe(env):
+                    _sentinel_fault(env, step_idx, last_good, good_step)
+                last_good = {k: v.copy() for k, v in env.items()}
+                good_step = step_idx
+    if check > 0 and since:
+        if not ehealth.probe(env):
+            _sentinel_fault(env, step_idx, last_good, good_step)
     return env
 
 
@@ -236,18 +254,243 @@ def _run_sharded(plan: ExecutionPlan, env):
     return {k: np.asarray(jax.device_get(v)) for k, v in out.items()}
 
 
-def execute(plan: ExecutionPlan, env: Dict[str, np.ndarray]):
+# ---------------------------------------------------------------------------
+# explicit-path sentinels: chunked guarded execution (RunOptions.check_finite)
+# ---------------------------------------------------------------------------
+
+
+def _sentinel_fault(env, step_idx, last_good, good_step, exit_fn=None):
+    """Raise the NumericalFault for a tripped explicit-path probe."""
+    from repro.engine import health as ehealth
+
+    stats.numerical_faults += 1
+    bad = ehealth.poisoned_fields(env)
+    if last_good is not None and exit_fn is not None:
+        last_good = exit_fn(last_good)
+    if last_good is not None:
+        last_good = {k: np.asarray(jax.device_get(v)) for k, v in last_good.items()}
+    raise ehealth.NumericalFault(
+        f"non-finite field state at step {step_idx} "
+        f"(fields: {', '.join(bad) or 'unknown'}; "
+        f"last finite probe at step {good_step})",
+        outcome="NAN_RESIDUAL",
+        step=step_idx,
+        last_good=last_good,
+    )
+
+
+def _guarded_wrap(plan: ExecutionPlan, fn, names):
+    """``jit(fn)`` for a single-device plan, ``jit(shard_map(fn))`` on a
+    mesh — the guarded analogue of :func:`single_runner` /
+    :func:`sharded_runner`, never donating (the previous chunk's env is the
+    sentinel's ``last_good`` state and must survive the next launch)."""
+    if plan.mesh is None:
+        return jax.jit(fn)
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.jaxcompat import shard_map
+
+    _, _, ax_x, ax_y = plan.mesh_ctx
+    spec = P(None, ax_x, ax_y, None) if plan.batch > 1 else P(ax_x, ax_y, None)
+    specs = {k: spec for k in names}
+    return jax.jit(
+        shard_map(fn, mesh=plan.mesh, in_specs=(specs,), out_specs=specs, check=False)
+    )
+
+
+def _guarded_loop_wrap(plan: ExecutionPlan, step_fn, per_chunk, names):
+    """One jitted guarded loop: up to ``nchunks`` iterations of
+    ``per_chunk`` launches each, with the ``isfinite`` probe fused into the
+    ``while_loop`` carry — a single dispatch per segment, stopping at the
+    first failed probe.
+
+    Returns a runner ``(env, nchunks) -> (env, chunks_run, ok)``.  The
+    carry holds only the current state: keeping a last-good snapshot alive
+    would block XLA from ping-ponging the chunk buffers in place and cost
+    an extra generation per probe, so the happy path pays one reduction per
+    chunk and nothing else.  ``nchunks`` is traced, which lets the caller
+    reuse the same compiled runner to replay the prefix and regenerate the
+    last probed-good state on the rare failure path.  On a mesh the
+    per-brick verdicts reduce with one ``pmin`` inside the loop, so the
+    stop condition is uniform across devices.
+    """
+    from repro.engine import health as ehealth
+
+    mesh = plan.mesh
+
+    def chunk(e):
+        return jax.lax.fori_loop(0, per_chunk, lambda i, ee: step_fn(ee), e)
+
+    if mesh is None:
+        probe = ehealth.probe_ok
+    else:
+        _, _, ax_x, ax_y = plan.mesh_ctx
+
+        def probe(out):
+            ok = ehealth.probe_ok(out)
+            return jax.lax.pmin(ok.astype(jnp.int32), (ax_x, ax_y)) > 0
+
+    def run(env, nchunks):
+        def body(c):
+            e, i, ok = c
+            new = chunk(e)
+            return (new, i + 1, probe(new))
+
+        def cond(c):
+            return c[2] & (c[1] < nchunks)
+
+        init = (env, jnp.int32(0), jnp.bool_(True))
+        return jax.lax.while_loop(cond, body, init)
+
+    if mesh is None:
+        return jax.jit(run)
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.jaxcompat import shard_map
+
+    _, _, ax_x, ax_y = plan.mesh_ctx
+    spec = P(None, ax_x, ax_y, None) if plan.batch > 1 else P(ax_x, ax_y, None)
+    specs = {k: spec for k in names}
+    return jax.jit(
+        shard_map(
+            run,
+            mesh=mesh,
+            in_specs=(specs, P()),
+            out_specs=(specs, P(), P()),
+            check=False,
+        )
+    )
+
+
+def _run_guarded(plan: ExecutionPlan, env, every: int):
+    """Chunked execution probing field finiteness every ~``every`` steps.
+
+    The plan's compiled launches are regrouped into chunks of
+    ``ceil(every / k)`` launches, and each segment runs as **one** jitted
+    ``while_loop`` whose carry holds the current env and the probe word
+    (:func:`_guarded_loop_wrap`) — the probe costs one fused reduction per
+    ``every`` steps, with a single dispatch per segment and no extra device
+    syncs.  A failed probe stops the loop; the host then replays the
+    prefix from the retained segment entry to regenerate the last
+    probed-good state (the rare path pays the recompute so the happy path
+    carries no snapshot) and raises
+    :class:`repro.engine.health.NumericalFault` with the step index and the
+    last-good state.  That amortization is the ≤2% overhead budget the
+    benchmark gates (``benchmarks/health_overhead.py``).
+    """
+    from repro.engine import health as ehealth
+
+    names = list(env)
+    if plan.mesh is None:
+        env = {k: fresh_buffer(v) for k, v in env.items()}
+    else:
+        from jax.sharding import PartitionSpec as P
+
+        _, _, ax_x, ax_y = plan.mesh_ctx
+        spec = P(None, ax_x, ax_y, None) if plan.batch > 1 else P(ax_x, ax_y, None)
+        sharding = jax.sharding.NamedSharding(plan.mesh, spec)
+        env = {k: jax.device_put(fresh_buffer(v), sharding) for k, v in env.items()}
+
+    layout = plan.layout
+    use_layout = (
+        layout is not None
+        and layout.pad > 0
+        and any(seg.kind == "fused" for seg in plan.segments)
+    )
+    events = list(_layout_schedule(plan)) if use_layout else list(plan.segments)
+    enter = _guarded_wrap(plan, layout.enter, names) if use_layout else None
+    exit_ = _guarded_wrap(plan, layout.exit, names) if use_layout else None
+
+    # probe the entry state too: a poisoned initial condition faults at
+    # step 0 with last_good=None rather than masquerading as "last good"
+    if not ehealth.probe(env):
+        _sentinel_fault(env, 0, None, 0)
+
+    state = {
+        "step": 0,  # logical steps completed
+        "padded": False,
+    }
+
+    def run_loop(step_fn, per_chunk, chunks, steps_per_chunk):
+        """One guarded while_loop over `chunks` chunks of `per_chunk`
+        launches; env at entry has passed the previous probe, so replaying
+        a prefix from it always lands on a probed-good state."""
+        nonlocal env
+        if chunks <= 0:
+            return
+        runner = _guarded_loop_wrap(plan, step_fn, per_chunk, names)
+        entry = env  # retained: the failure path replays the good prefix
+        new_env, i, ok = runner(entry, chunks)
+        i = int(jax.device_get(i))
+        stats.health_probes += i
+        done = state["step"] + i * steps_per_chunk
+        if not bool(jax.device_get(ok)):
+            # the loop stops on the first failed probe, so i >= 1 and the
+            # first i-1 chunks all probed finite — rerun just those to
+            # recover the last-good state (deterministic compiled body)
+            good = runner(entry, i - 1)[0] if i > 1 else entry
+            good_step = state["step"] + (i - 1) * steps_per_chunk
+            exit_fn = exit_ if state["padded"] else None
+            _sentinel_fault(new_env, done, good, good_step, exit_fn)
+        env = new_env
+        state["step"] = done
+
+    def chunked(step_fn, launches, steps_per_launch):
+        """Split `launches` calls of step_fn into probe-granule chunks."""
+        if launches <= 0:
+            return
+        per_chunk = max(1, -(-every // steps_per_launch))  # ceil
+        per_chunk = min(per_chunk, launches)
+        full, tail = divmod(launches, per_chunk)
+        run_loop(step_fn, per_chunk, full, per_chunk * steps_per_launch)
+        if tail:
+            run_loop(step_fn, tail, 1, tail * steps_per_launch)
+
+    for ev in events:
+        if ev == "enter":
+            env = enter(env)
+            state["padded"] = True
+            continue
+        if ev == "exit":
+            env = exit_(env)
+            state["padded"] = False
+            continue
+        seg = ev
+        if seg.loop is None:
+            run_loop(seg.step, 1, 1, 1)
+            continue
+        n, k = seg.loop.n, seg.time_tile
+        if k > 1:
+            chunked(seg.step, n // k, k)
+            chunked(seg.step_rem, n % k, 1)
+        else:
+            chunked(seg.step, n, 1)
+    if state["padded"]:
+        env = exit_(env)
+    return {k: np.asarray(jax.device_get(v)) for k, v in env.items()}
+
+
+def execute(plan: ExecutionPlan, env: Dict[str, np.ndarray], options=None):
     """Run the plan from ``env`` (name -> (X, Y, Z) array); returns the final
     env as host NumPy arrays.  Updates :data:`repro.engine.stats`.
 
     Fires the engine's step hook (:mod:`repro.engine.hooks`) before any
     state advances, so an installed fault injector interrupts the run where
     a dead device would — before this execution, after the previous one.
+
+    ``options=RunOptions(check_finite=N)`` routes through the guarded
+    chunked runners (:func:`_run_guarded`): an ``isfinite`` sentinel every
+    ~N steps, aborting with :class:`repro.engine.health.NumericalFault`
+    instead of returning poisoned state.  ``check_finite=0`` (default) is
+    the sentinel-free fast path — bitwise identical to previous behavior.
     """
+    check = int(getattr(options, "check_finite", 0) or 0)
     fire_step_hook(stats.steps_run, tag="execute")
     t0 = time.perf_counter()
     if plan.backend == "numpy":
-        out = _run_numpy(plan, env)
+        out = _run_numpy(plan, env, check)
+    elif check > 0:
+        out = _run_guarded(plan, env, check)
     elif plan.mesh is None:
         out = _run_single(plan, env)
     else:
@@ -275,7 +518,14 @@ def run_program(
     shims (``make``/``run_sharded``/``engine.plan``) already warned.
     ``options.batch=B`` expects every env buffer stacked to ``(B, X, Y, Z)``.
     ``resident=False`` forces the legacy repack-per-launch stepping (the
-    bitwise reference for the halo-resident layout)."""
+    bitwise reference for the halo-resident layout).
+
+    With ``options.recovery.detile_explicit`` (and sentinels armed via
+    ``check_finite``), a :class:`~repro.engine.health.NumericalFault` from
+    an aggressively scheduled plan (time-tiled or overlap-split) triggers
+    one de-escalated retry — ``time_tile=1``, ``overlap=False`` — before
+    the fault propagates: the conservative schedule changes rounding, the
+    cheapest recovery for a marginal explicit run."""
     from repro.engine.options import RunOptions
     from repro.engine.plan import plan as _plan
 
@@ -310,7 +560,29 @@ def run_program(
             )
             for k, v in env.items()
         }
-    return execute(p, env)
+    try:
+        return execute(p, env, options)
+    except Exception as fault:
+        from repro.engine import health as ehealth
+
+        if not isinstance(fault, ehealth.NumericalFault):
+            raise
+        rec = options.recovery
+        aggressive = any(
+            seg.time_tile > 1 or seg.split for seg in p.segments
+        )
+        if rec is None or not rec.detile_explicit or not aggressive:
+            raise
+        import logging
+
+        logging.getLogger("repro.engine").warning(
+            "explicit sentinel tripped at step %s; retrying with the "
+            "conservative schedule (time_tile=1, overlap off)",
+            fault.step,
+        )
+        stats.recovery_attempts += 1
+        opts2 = options.replace(time_tile=1, overlap=False)
+        return execute(_plan(program, opts2), env, opts2)
 
 
 # ---------------------------------------------------------------------------

@@ -63,6 +63,14 @@ class RunOptions:
     saved as VJP residuals, and callers keep their arrays), plans skip the
     halo-resident in-place layout, and ``wfa.solve`` routes through the
     implicit-function-theorem adjoint (:mod:`repro.solver.adjoint`).
+
+    ``recovery=RecoveryPolicy(...)`` (:mod:`repro.solver.health`) arms the
+    implicit path's escalation ladder — a failed solve restarts/escalates/
+    re-runs at fp64 per the policy and raises ``NumericalFault`` when
+    exhausted — and lets explicit plans de-escalate (``time_tile=1``,
+    ``overlap=False``) after a sentinel trip.  ``check_finite=N > 0`` arms
+    the explicit path's ``isfinite`` sentinel every N steps (amortized at
+    the chunk granule; 0 — the default — keeps benchmarks probe-free).
     """
 
     backend: Optional[str] = None
@@ -72,6 +80,8 @@ class RunOptions:
     batch: int = 1
     overlap: object = "auto"
     differentiable: bool = False
+    recovery: Optional[object] = None
+    check_finite: int = 0
 
     def __post_init__(self):
         if int(self.batch) < 1:
@@ -85,6 +95,19 @@ class RunOptions:
             raise ValueError(
                 f"differentiable must be a bool; got {self.differentiable!r}"
             )
+        if int(self.check_finite) < 0:
+            raise ValueError(
+                f"check_finite must be >= 0 (0 disables); got {self.check_finite}"
+            )
+        object.__setattr__(self, "check_finite", int(self.check_finite))
+        if self.recovery is not None:
+            from repro.solver.health import RecoveryPolicy
+
+            if not isinstance(self.recovery, RecoveryPolicy):
+                raise TypeError(
+                    "recovery must be a repro.solver.health.RecoveryPolicy; "
+                    f"got {type(self.recovery).__name__}"
+                )
 
     def replace(self, **changes) -> "RunOptions":
         """A copy with ``changes`` applied (``dataclasses.replace``)."""

@@ -72,6 +72,13 @@ class EngineStats:
     #: freezes when its residual converges (see repro.solver.krylov)
     member_iterations: Tuple[int, ...] = ()
 
+    # -- numerical health (guarded iterations + explicit sentinels) ----------
+    health_probes: int = 0  # explicit-path isfinite sentinel evaluations
+    numerical_faults: int = 0  # NumericalFaults raised (solver or sentinel)
+    recovery_attempts: int = 0  # escalation-ladder re-solves driven
+    #: distinct solver outcome words of the last wfa.solve call
+    solve_outcomes: Tuple[str, ...] = ()
+
     # -- serving tier (updated by repro.service under its stats lock) -------
     requests_admitted: int = 0  # requests accepted into the bounded queue
     requests_rejected: int = 0  # admission-control rejections (queue full)
@@ -130,6 +137,10 @@ def reset_stats() -> None:
     stats.ensemble_runs = 0
     stats.ensemble_members = 0
     stats.member_iterations = ()
+    stats.health_probes = 0
+    stats.numerical_faults = 0
+    stats.recovery_attempts = 0
+    stats.solve_outcomes = ()
     stats.requests_admitted = 0
     stats.requests_rejected = 0
     stats.requests_expired = 0
@@ -189,6 +200,11 @@ def service_stats() -> dict:
             "checkpoints": stats.service_checkpoints,
             "restores": stats.service_restores,
             "stragglers": stats.service_stragglers,
+        },
+        "health": {
+            "probes": stats.health_probes,
+            "numerical_faults": stats.numerical_faults,
+            "recovery_attempts": stats.recovery_attempts,
         },
         "steps_run": stats.steps_run,
         "repacks": stats.repacks,

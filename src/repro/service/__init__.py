@@ -16,6 +16,7 @@ Run the end-to-end smoke (mixed signatures, fault injection, degraded
 mode) with ``python -m repro.service --smoke``.
 """
 
+from repro.engine.health import NumericalFault
 from repro.engine.stats import service_stats
 from repro.service.requests import (
     DeadlineExceeded,
@@ -41,6 +42,7 @@ from repro.service.workloads import (
 __all__ = [
     "CompiledWorkload",
     "DeadlineExceeded",
+    "NumericalFault",
     "PlanSignature",
     "RequestFailed",
     "RequestStats",

@@ -10,7 +10,11 @@
 2. inject a step fault into one checkpointed request and gate on it
    completing *with* a restore (restore-and-continue, not restart);
 3. force a pallas compile failure for a fresh signature and gate on it
-   being served through the logged interpreter degraded mode.
+   being served through the logged interpreter degraded mode;
+4. submit a *poisoned* solve request (NaN initial state) and gate on it
+   failing **fast** with ``NumericalFault`` — zero retries, the health
+   taxonomy word and a populated recovery trace on the ticket — while the
+   injected infrastructure fault of phase 2 still retried.
 
 Exit status is 0 only if every gate holds, so CI can call this directly.
 """
@@ -180,6 +184,29 @@ def main(argv=None) -> int:
                 bool(t.stats.degraded_reason),
         }
         ok = _gate(phase3) and ok
+
+        # ---- phase 4: poisoned request -> fail-fast NumericalFault --------
+        print("== phase 4: poisoned solve -> fail-fast NumericalFault ==")
+        from repro.engine.health import NumericalFault
+
+        poison = np.full(solve_sig.shape, np.nan, solve_sig.dtype)
+        t = svc.submit(SolveRequest(solve_sig, maxiter=60, init=poison))
+        fault = None
+        try:
+            t.result(timeout=600)
+        except Exception as e:
+            fault = e
+        phase4 = {
+            "poisoned solve raised NumericalFault":
+                isinstance(fault, NumericalFault),
+            f"failed fast: zero retries ({t.stats.retries})":
+                t.stats.retries == 0,
+            f"taxonomy on ticket ({t.stats.outcome!r})":
+                t.stats.outcome == "NAN_RESIDUAL",
+            f"recovery trace populated ({len(t.stats.recovery)} attempts)":
+                len(t.stats.recovery) >= 1,
+        }
+        ok = _gate(phase4) and ok
 
     stats = svc.service_stats()
     svc.save_manifest(f"{ckpt_root}/manifest.json")

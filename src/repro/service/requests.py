@@ -115,6 +115,13 @@ class RequestStats:
     restore-and-continue path; ``degraded`` marks the interpreter fallback;
     ``batch`` > 1 marks a request served as one member of a coalesced
     ensemble launch (micro-batching).
+
+    ``outcome`` is the numerical-health taxonomy word of the request's
+    solve (``CONVERGED``/``NAN_RESIDUAL``/…, see :mod:`repro.solver.health`;
+    empty for step requests that tripped no sentinel) and ``recovery`` the
+    per-attempt summary of any escalation the worker ran — both populated
+    whether the request completed or failed with a ``NumericalFault``
+    (which the service never retries).
     """
 
     request_id: str = ""
@@ -139,6 +146,8 @@ class RequestStats:
     restores: int = 0
     degraded: bool = False
     degraded_reason: str = ""
+    outcome: str = ""  # health taxonomy word of the solve ("" = n/a)
+    recovery: Tuple[str, ...] = ()  # per-attempt escalation summary
 
     @property
     def latency_s(self) -> float:

@@ -25,6 +25,14 @@ bounded retries and exponential backoff; a :class:`HeartbeatMonitor` per
 worker flags straggling chunks; and a body whose pallas compile fails is
 served through the *logged* interpreter degraded mode — flagged on every
 ticket it serves, never silent.
+
+Numerical faults are the one failure class that is **never retried**: a
+:class:`~repro.engine.health.NumericalFault` (failed guarded solve, or a
+non-finite field state caught by the per-chunk sentinel) is deterministic
+— restore-and-continue would repoison — so the worker fails the ticket
+fast with the taxonomy word and :class:`~repro.engine.health.
+RecoveryTrace` on ``Ticket.stats``, keeping the retry budget for the
+infrastructure faults it can actually fix.
 """
 
 from __future__ import annotations
@@ -41,6 +49,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
+from repro.engine import health as ehealth
 from repro.engine.hooks import fire_step_hook
 from repro.engine.stats import service_stats as _engine_service_stats
 from repro.engine.stats import stats as estats
@@ -471,6 +480,17 @@ class SimulationService:
             except _PERMANENT as e:
                 self._finish_fail(ticket, e)
                 return
+            except ehealth.NumericalFault as e:
+                # deterministic numerical failure: a re-run would repoison,
+                # so fail FAST — no retry, no backoff (unlike the injected
+                # infrastructure faults below, which restore-and-continue)
+                st.outcome = e.outcome or "NAN_RESIDUAL"
+                if e.trace is not None:
+                    st.recovery = e.trace.summary()
+                with self._slock:
+                    estats.numerical_faults += 1
+                self._finish_fail(ticket, e)
+                return
             except Exception as e:  # transient: restore-and-continue
                 attempt += 1
                 st.retries += 1
@@ -585,6 +605,20 @@ class SimulationService:
             jax.block_until_ready(list(env.values()))
             monitor.end_step()
             step += m
+            # the explicit-path sentinel at the service's natural chunk
+            # granule: one isfinite reduction per field per chunk (the
+            # chunk runners donate, so the recovery state is the newest
+            # checkpoint, not a held env)
+            ok = bool(jax.device_get(ehealth.probe_ok_compiled(dict(env))))
+            with self._slock:
+                estats.health_probes += 1
+            if not ok:
+                raise ehealth.NumericalFault(
+                    f"request {req.request_id}: non-finite field state "
+                    f"at step {step}",
+                    outcome="NAN_RESIDUAL",
+                    step=step,
+                )
             st.chunks += 1
             st.steps += m
             launches, exchanges = cw.chunk_accounting(m)
@@ -620,8 +654,19 @@ class SimulationService:
     def _run_solve(
         self, cw: CompiledWorkload, req: SolveRequest, ticket: Ticket
     ) -> np.ndarray:
+        """One guarded Krylov solve, classified and (boundedly) recovered.
+
+        The solver's health word drives the service's in-queue ladder: a
+        failed cg/pipecg solve escalates once to BiCGSTAB (warm kernels,
+        no recompile — the service skips the fp64 rung the offline path
+        runs, keeping worker latency bounded); a still-failed solve raises
+        :class:`~repro.engine.health.NumericalFault` with the full
+        :class:`~repro.engine.health.RecoveryTrace`, which ``_serve``
+        fails fast and never retries.
+        """
+        from repro.solver import health as shealth
+
         fire_step_hook(0, tag=req.request_id)
-        solver = cw.solver(req.method, req.tol, req.maxiter)
         x0 = (
             np.asarray(req.init, dtype=req.signature.dtype)
             if req.init is not None
@@ -632,10 +677,48 @@ class SimulationService:
         B = req.signature.batch
         if B > 1 and x0.ndim == 3:
             x0 = np.broadcast_to(x0, (B,) + x0.shape).copy()
-        x, (iters, _res) = solver(x0)
-        jax.block_until_ready(x)
-        ticket.stats.iterations = int(np.sum(np.asarray(iters)))
+
+        trace = ehealth.RecoveryTrace()
+
+        def attempt(method, reason):
+            x, (iters, res, outcomes) = cw.solver(
+                method, req.tol, req.maxiter
+            )(x0)
+            jax.block_until_ready(x)
+            iters = int(np.sum(np.asarray(iters)))
+            outs = np.asarray(jax.device_get(outcomes))
+            trace.record(
+                method,
+                req.signature.dtype,
+                shealth.outcome_name(shealth.worst(outs)),
+                iters,
+                float(np.max(np.asarray(res))),
+                reason,
+            )
+            return x, iters, outs
+
+        x, iters, outs = attempt(req.method, "initial")
+        if shealth.any_failure(outs) and req.method in ("cg", "pipecg"):
+            worst = shealth.outcome_name(shealth.worst(outs))
+            log.warning(
+                "request %s: %s solve %s; escalating to bicgstab",
+                req.request_id, req.method, worst,
+            )
+            with self._slock:
+                estats.recovery_attempts += 1
+            x, iters, outs = attempt("bicgstab", f"escalate after {worst}")
+        ticket.stats.outcome = shealth.outcome_name(shealth.worst(outs))
+        ticket.stats.recovery = trace.summary()
+        ticket.stats.iterations = iters
         ticket.stats.steps = 1
+        if shealth.any_failure(outs):
+            raise ehealth.NumericalFault(
+                f"request {req.request_id}: solve failed "
+                f"({ticket.stats.outcome}) after {len(trace.attempts)} "
+                "attempt(s)",
+                outcome=ticket.stats.outcome,
+                trace=trace,
+            )
         return np.asarray(jax.device_get(x))
 
     # -- observability -------------------------------------------------------

@@ -363,7 +363,7 @@ class CompiledWorkload:
 
     # -- solve workloads -----------------------------------------------------
     def solver(self, method: str, tol: float, maxiter: int) -> Callable:
-        """Memoized jitted solver ``x0 -> (x, (iters, res))`` per request
+        """Memoized jitted solver ``x0 -> (x, (iters, res, outcomes))`` per request
         parameters (the operator kernel itself is shared via the global
         kernel cache, so new parameter combinations reuse it)."""
         key = (method, float(tol), int(maxiter))

@@ -25,8 +25,14 @@ same recorded-program → fused-Pallas pipeline as the explicit path:
    variable-coefficient diffusion, Dirichlet Poisson).
 """
 
-from repro.solver import krylov
+from repro.solver import health, krylov
 from repro.solver.adjoint import ADJOINT_METHODS, make_differentiable_solver
+from repro.solver.health import (
+    GuardConfig,
+    NumericalFault,
+    RecoveryPolicy,
+    RecoveryTrace,
+)
 from repro.solver.api import (
     SolveInfo,
     gershgorin_bounds,
@@ -48,15 +54,20 @@ from repro.solver.presets import (
 
 __all__ = [
     "ADJOINT_METHODS",
+    "GuardConfig",
     "MGOptions",
     "Multigrid",
+    "NumericalFault",
     "Operator",
+    "RecoveryPolicy",
+    "RecoveryTrace",
     "Rhs",
     "SolveInfo",
     "SolverMarker",
     "btcs_program",
     "build_multigrid",
     "gershgorin_bounds",
+    "health",
     "krylov",
     "make_differentiable_solver",
     "make_sharded_solver",

@@ -164,7 +164,8 @@ def make_differentiable_solver(
 ):
     """Build a traceable, reverse-differentiable solver for a recorded system.
 
-    Returns ``solve_fn(x0, coef_env=None) -> x`` (or ``(x, (iters, res))``
+    Returns ``solve_fn(x0, coef_env=None) -> x`` (or ``(x, (iters, res,
+    outcomes))``
     with ``return_info=True``): ``x0`` is the unknown's initial state (its
     Moat carries the boundary values) and ``coef_env`` maps coefficient
     field names to arrays overriding their init data — both may be traced,
@@ -290,8 +291,10 @@ def make_differentiable_solver(
     @jax.custom_vjp
     def solve_core(b, x0, *coef_args):
         envc = dict(zip(coef_names, coef_args))
-        x, it, res = _run_krylov(lambda v: _apply(op_step, v, envc), b, x0)
-        return x, it, res
+        x, it, res, outcome = _run_krylov(
+            lambda v: _apply(op_step, v, envc), b, x0
+        )
+        return x, it, res, outcome
 
     def solve_fwd(b, x0, *coef_args):
         out = solve_core(b, x0, *coef_args)
@@ -302,7 +305,7 @@ def make_differentiable_solver(
         ct = cts[0]  # iters/res cotangents are symbolic zeros
         envc = dict(zip(coef_names, coef_args))
         bt = jnp.where(m, ct, 0)
-        lam, _, _ = _run_krylov(lambda v: _apply(opT_step, v, envc), bt, bt)
+        lam, _, _, _ = _run_krylov(lambda v: _apply(opT_step, v, envc), bt, bt)
         lam = jnp.where(m, lam, 0)  # pin the interior support exactly
         # identity (Moat) rows of A⁻ᵀ: λ_Moat = x̄_Moat − (S̃ λᵢ)_Moat
         full = _apply_update_full(t_update, {**envc, name: lam})
@@ -335,8 +338,8 @@ def make_differentiable_solver(
 
         def one(x, _):
             b = _apply(rhs_step, x, envc) if rhs_step is not None else x
-            x2, it, res = solve_core(b, x, *coef_args)
-            return x2, (it, res)
+            x2, it, res, outcome = solve_core(b, x, *coef_args)
+            return x2, (it, res, outcome)
 
         return jax.lax.scan(one, x0, None, length=steps)
 

@@ -37,7 +37,7 @@ import numpy as np
 
 from repro.compiler import LoweringError, Tap, lower_group
 from repro.core.program import Program, _group_ops, release_program
-from repro.solver import krylov
+from repro.solver import health, krylov
 
 log = logging.getLogger("repro.solver")
 
@@ -55,15 +55,23 @@ PRECONDITIONABLE = ("cg", "bicgstab")
 class SolveInfo:
     """Per-call convergence record returned by ``solve(..., return_info=True)``.
 
-    On a batched solve (``options.batch = B > 1``) ``iterations`` and
-    ``residual`` carry a trailing member axis — shape ``(steps, B)`` — with
-    each member's own masked iteration count (see
-    :mod:`repro.solver.krylov`'s batched variants)."""
+    On a batched solve (``options.batch = B > 1``) ``iterations``,
+    ``residual`` and ``outcomes`` carry a trailing member axis — shape
+    ``(steps, B)`` — with each member's own masked iteration count (see
+    :mod:`repro.solver.krylov`'s batched variants).
+
+    ``outcomes`` holds the :mod:`repro.solver.health` taxonomy name per
+    time step (``CONVERGED`` / ``MAXITER`` / ``NAN_RESIDUAL`` /
+    ``BREAKDOWN`` / ``STAGNATED`` / ``DIVERGED``); ``recovery`` is the
+    :class:`~repro.solver.health.RecoveryTrace` when the solve went through
+    the escalation ladder (None when the first attempt stood)."""
 
     method: str
     backend: str
     iterations: np.ndarray  # (steps,) inner iterations per time step
     residual: np.ndarray  # (steps,) final ‖r‖ per time step
+    outcomes: Optional[np.ndarray] = None  # (steps,) taxonomy names
+    recovery: Optional["health.RecoveryTrace"] = None
 
 
 # ---------------------------------------------------------------------------
@@ -297,7 +305,7 @@ def _make_runner(
     M: Optional[Callable] = None,
     batch: int = 1,
 ):
-    """Shared solve driver: ``run(x0, *coefs) -> (x, (iters, res))``.
+    """Shared solve driver: ``run(x0, *coefs) -> (x, (iters, res, outcomes))``.
 
     Both builders delegate here so the method dispatch and the per-step
     ``Rhs() → Krylov`` loop cannot diverge between the single-device and
@@ -311,7 +319,8 @@ def _make_runner(
     ``batch=B`` routes the Krylov methods to their per-member-masked
     batched variants (``dot``/``dot2`` then reduce to (B,) vectors) and
     broadcasts the reduction-free methods' shared iteration count to (B,),
-    so ``(iters, res)`` are uniformly per-member.
+    so ``(iters, res, outcomes)`` are uniformly per-member.  ``outcomes``
+    is the per-step :mod:`repro.solver.health` taxonomy word.
     """
 
     def run_method(A, b, x0, envc):
@@ -344,12 +353,20 @@ def _make_runner(
             return krylov.bicgstab(A, dot, b, x0, tol=tol, maxiter=maxiter, M=M)
         if method == "chebyshev":
             return krylov.chebyshev(
-                A, b, x0, bounds[0], bounds[1], iters=maxiter, dot=dot
+                A, b, x0, bounds[0], bounds[1], iters=maxiter, dot=dot, tol=tol
             )
         D = _jacobi_diag(group, name, envc)
         mask = jacobi_mask()
         jstep = lambda x: jnp.where(mask, x + (b - A(x)) / D, b)
-        return krylov.jacobi(jstep, x0, iters=maxiter)
+        # one extra operator application per solve reports + classifies the
+        # true end-of-run residual (jacobi is otherwise reduction-free)
+        return krylov.jacobi(
+            jstep,
+            x0,
+            iters=maxiter,
+            rnorm2=lambda x: dot(b - A(x), b - A(x)),
+            tol=tol,
+        )
 
     def run(x0, *coef_args):
         envc = dict(zip(coef_names, coef_args))
@@ -366,13 +383,17 @@ def _make_runner(
                 b = rhs_step(env)[name]
             else:
                 b = x
-            x2, i, res = run_method(A, b, x, envc)
+            x2, i, res, outcome = run_method(A, b, x, envc)
             if batch > 1:
                 # fixed-count methods report one shared scalar; make every
-                # method's (iters, res) per-member so SolveInfo is uniform
+                # method's (iters, res, outcome) per-member so SolveInfo is
+                # uniform
                 i = jnp.broadcast_to(jnp.asarray(i, jnp.int32), (batch,))
                 res = jnp.broadcast_to(jnp.asarray(res, jnp.float32), (batch,))
-            return x2, (i, res)
+                outcome = jnp.broadcast_to(
+                    jnp.asarray(outcome, jnp.int32), (batch,)
+                )
+            return x2, (i, res, outcome)
 
         x2, aux = jax.lax.scan(one, x0, None, length=steps)
         return x2, aux
@@ -480,7 +501,8 @@ def make_solver(
     member_env=None,
     differentiable: bool = False,
 ) -> Callable:
-    """Build a reusable jitted solver ``step_fn(x0) -> (x, (iters, res))``.
+    """Build a reusable jitted solver ``step_fn(x0) -> (x, (iters, res,
+    outcomes))``.
 
     Each call advances ``steps`` implicit time steps: per step the ``Rhs()``
     body produces ``b`` from the state (identity if none was recorded) and
@@ -500,8 +522,9 @@ def make_solver(
 
     ``differentiable=True`` returns a solver that is reverse-mode
     differentiable via the implicit-function-theorem adjoint
-    (:mod:`repro.solver.adjoint`): same ``step_fn(x0) -> (x, (iters, res))``
-    contract, but traceable under ``jax.grad``/``jax.jit``, with nothing
+    (:mod:`repro.solver.adjoint`): same ``step_fn(x0) -> (x, (iters, res,
+    outcomes))`` contract, but traceable under ``jax.grad``/``jax.jit``,
+    with nothing
     donated and dots accumulated in the field dtype.  Requires ``batch=1``
     and a Krylov/mg method; non-affine operator bodies raise instead of
     falling back to the interpreter.
@@ -581,16 +604,19 @@ def make_solver(
     shape = program.fields[name].shape
     mask = jnp.asarray(_written_mask(group, shape)) if method == "jacobi" else None
 
+    # fp32 accumulation matches the wafer reductions; the fp64 safe-mode
+    # rung widens the operands, and its dots must widen with them or the
+    # re-solve inherits the very overflow it is escaping
     if batch > 1:
 
         def dot(a, b):
             # per-member reduction over the trailing (X, Y, Z) axes
-            return jnp.sum(a * b, axis=(1, 2, 3), dtype=jnp.float32)
+            return jnp.sum(a * b, axis=(1, 2, 3), dtype=jnp.promote_types(a.dtype, jnp.float32))
 
     else:
 
         def dot(a, b):
-            return jnp.sum(a * b, dtype=jnp.float32)
+            return jnp.sum(a * b, dtype=jnp.promote_types(a.dtype, jnp.float32))
 
     def dot2(a, b, c, d):
         from repro.kernels import ops as kops
@@ -656,7 +682,8 @@ def make_sharded_solver(
 ):
     """Brick-sharded solver over ``mesh``; returns ``(step_fn, sharding)``.
 
-    ``step_fn(x_global) -> (x, (iters, res))`` runs the whole Krylov loop
+    ``step_fn(x_global) -> (x, (iters, res, outcomes))`` runs the whole
+    Krylov loop
     inside one ``shard_map``: operator applications halo-pad the brick
     (ICI ppermute) and run the fused kernel (``backend="pallas"``) or the
     roll interpreter per brick; dot products are one local pass plus ONE
@@ -804,7 +831,7 @@ def make_sharded_solver(
             local,
             mesh=mesh,
             in_specs=(spec,) * (1 + len(coef_names)),
-            out_specs=(spec, (rspec, rspec)),
+            out_specs=(spec, (rspec, rspec, rspec)),
             check=False,
         ),
         donate_argnums=0,  # the state buffer seeds the Krylov carry in place
@@ -816,6 +843,143 @@ def make_sharded_solver(
         return mapped(jax.device_put(fresh_buffer(x_global), sharding), *coefs)
 
     return step_fn, sharding
+
+
+# ---------------------------------------------------------------------------
+# recovery ladder (bounded, logged escalation on failed solves)
+# ---------------------------------------------------------------------------
+
+
+def _cast_program(program: Program, dtype) -> Program:
+    """Shallow dtype-cast view of a recorded program (fp64 safe mode).
+
+    Ops reference fields by name, so sharing the op list with replica
+    ``Field`` objects (same names/shapes, cast dtype + init data) is enough
+    to rebuild every solver at the new precision.
+    """
+    import copy
+
+    clone = Program.__new__(Program)
+    clone.fields = {}
+    clone.ops = program.ops
+    clone._loop_stack = []
+    for n, f in program.fields.items():
+        f2 = copy.copy(f)
+        f2.init_data = np.asarray(f.init_data, dtype)
+        f2.dtype = f2.init_data.dtype
+        clone.fields[n] = f2
+    return clone
+
+
+def _fetch4(step_fn, x0):
+    """Run one solver attempt and land its 4 outputs on the host."""
+    x, (iters, res, outs) = step_fn(x0)
+    return (
+        np.asarray(jax.device_get(x)),
+        np.asarray(jax.device_get(iters)),
+        np.asarray(jax.device_get(res)),
+        np.asarray(jax.device_get(outs)),
+    )
+
+
+def _record_attempt(trace, method, dtype, outs, iters, res, reason):
+    trace.record(
+        method,
+        np.dtype(dtype).name,
+        health.outcome_name(health.worst(outs)),
+        int(np.sum(iters)),
+        float(np.asarray(res).ravel()[-1]),
+        reason,
+    )
+
+
+def _recover_solve(program, name, first, x0, policy, kwargs, member_env):
+    """Drive the escalation ladder after a failed first attempt.
+
+    Rungs (each at most once, every attempt logged): same-method restart
+    from the current iterate on BREAKDOWN (a fresh BiCGSTAB shadow residual
+    is the textbook cure), cg/pipecg → bicgstab escalation, one fp64
+    safe-mode re-solve.  Returns ``((x, iters, res, outs), trace)`` on
+    success; raises :class:`~repro.solver.health.NumericalFault` carrying
+    the populated trace when the ladder is exhausted.
+    """
+    from repro.engine.stats import stats as engine_stats
+
+    method = kwargs["method"]
+    dtype = program.fields[name].dtype
+    trace = health.RecoveryTrace()
+    x, iters, res, outs = first
+    _record_attempt(trace, method, dtype, outs, iters, res, "initial")
+
+    def failed(o):
+        return health.any_failure(o, on_maxiter=policy.on_maxiter)
+
+    def _attempt(kw, prog, start, reason, env=None, cast=None):
+        nonlocal x, iters, res, outs
+        engine_stats.recovery_attempts += 1
+        solver = make_solver(
+            prog, name, member_env=member_env if env is None else env, **kw
+        )
+        x, iters, res, outs = _fetch4(solver, start)
+        if cast is not None:
+            x = x.astype(cast)
+        _record_attempt(
+            trace, kw["method"], prog.fields[name].dtype, outs, iters, res, reason
+        )
+        log.warning("solve recovery: %s", trace.summary()[-1])
+        return not failed(outs)
+
+    # rung 1: restart from the current iterate (BREAKDOWN only)
+    restarts = 0
+    while (
+        failed(outs)
+        and health.worst(outs) == health.BREAKDOWN
+        and restarts < policy.max_restarts
+    ):
+        restarts += 1
+        if _attempt(kwargs, program, x, f"restart {restarts} after BREAKDOWN"):
+            return (x, iters, res, outs), trace
+
+    # rung 2: method escalation (symmetric methods → bicgstab)
+    if failed(outs) and policy.escalate and method in ("cg", "pipecg"):
+        why = health.outcome_name(health.worst(outs))
+        kw2 = dict(kwargs, method="bicgstab", precondition=None)
+        if _attempt(kw2, program, x0, f"escalate {method}->bicgstab after {why}"):
+            return (x, iters, res, outs), trace
+
+    # rung 3: one fp64 safe-mode re-solve of the original system (the
+    # x64 context covers both build and run — tracing happens at call time)
+    if failed(outs) and policy.safe_mode_fp64 and dtype != np.float64:
+        from jax.experimental import enable_x64
+
+        why = health.outcome_name(health.worst(outs))
+        p64 = _cast_program(program, np.float64)
+        env64 = {k: np.asarray(v, np.float64) for k, v in member_env.items()}
+        with enable_x64():
+            ok = _attempt(
+                kwargs,
+                p64,
+                np.asarray(x0, np.float64),
+                f"fp64 safe mode after {why}",
+                env=env64,
+                cast=dtype,
+            )
+        if ok:
+            return (x, iters, res, outs), trace
+
+    engine_stats.numerical_faults += 1
+    worst_name = health.outcome_name(health.worst(outs))
+    # the taxonomy lands on stats even when the ladder is exhausted — a
+    # fault must leave the same forensic trail a success does
+    engine_stats.solve_outcomes = tuple(
+        str(v) for v in np.unique(health.outcome_names(outs))
+    )
+    raise health.NumericalFault(
+        f"solve({method}) failed with {worst_name} after "
+        f"{len(trace.attempts)} attempt(s): {'; '.join(trace.summary())}",
+        outcome=worst_name,
+        trace=trace,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -929,12 +1093,41 @@ def solve(
         x0 = np.asarray(member_env.get(name, program.fields[name].init_data))
         if batch > 1 and x0.ndim == 3:
             x0 = np.broadcast_to(x0, (batch,) + x0.shape)
-    x, (iters, res) = step_fn(x0)
-    x = np.asarray(jax.device_get(x))
-    iters = np.asarray(jax.device_get(iters))
-    if batch > 1:
-        from repro.engine.stats import stats as engine_stats
+    x, iters, res, outs = _fetch4(step_fn, x0)
+    trace = None
+    recovery = options.recovery
+    if recovery is not None and health.any_failure(
+        outs, on_maxiter=recovery.on_maxiter
+    ):
+        if mesh is not None or batch > 1 or options.differentiable:
+            # no escalation ladder off the plain path — still fail loud
+            from repro.engine.stats import stats as engine_stats
 
+            engine_stats.numerical_faults += 1
+            trace = health.RecoveryTrace()
+            _record_attempt(
+                trace, method, program.fields[name].dtype, outs, iters, res,
+                "initial",
+            )
+            worst_name = health.outcome_name(health.worst(outs))
+            engine_stats.solve_outcomes = tuple(
+                str(v) for v in np.unique(health.outcome_names(outs))
+            )
+            raise health.NumericalFault(
+                f"solve({method}) failed with {worst_name} (no recovery "
+                "ladder for sharded/batched/differentiable solves)",
+                outcome=worst_name,
+                trace=trace,
+            )
+        (x, iters, res, outs), trace = _recover_solve(
+            program, name, (x, iters, res, outs), x0, recovery, kwargs, member_env
+        )
+    from repro.engine.stats import stats as engine_stats
+
+    engine_stats.solve_outcomes = tuple(
+        str(v) for v in np.unique(health.outcome_names(outs))
+    )
+    if batch > 1:
         engine_stats.ensemble_runs += 1
         engine_stats.ensemble_members += batch
         engine_stats.member_iterations = tuple(
@@ -945,7 +1138,9 @@ def solve(
             method=method,
             backend=backend,
             iterations=iters,
-            residual=np.asarray(jax.device_get(res)),
+            residual=res,
+            outcomes=health.outcome_names(outs),
+            recovery=trace,
         )
         return x, info
     return x

@@ -1,0 +1,302 @@
+"""Numerical-health taxonomy and guarded-iteration helpers.
+
+Every iterative method in :mod:`repro.solver.krylov` carries a small
+*health word* through its ``while_loop`` so failures are classified — and
+stopped — instead of silently mislabelled.  The historic bug this layer
+retires: a NaN residual makes ``rr > tol*tol`` evaluate False, so an
+unguarded loop exits on its *first* poisoned iteration and reports the
+garbage iterate as converged.  The guard costs **zero extra reductions**:
+it only inspects scalars the iteration already computed (``rr``, the
+BiCGSTAB recurrence coefficients).
+
+Outcome taxonomy (int32 words inside jit, names at the Python boundary):
+
+=============  =============================================================
+``CONVERGED``  residual is finite and ``‖r‖ ≤ tol`` — the only success word
+``MAXITER``    iteration budget exhausted with a finite residual
+``NAN_RESIDUAL``  the residual norm became NaN/Inf (poisoned state or rhs)
+``BREAKDOWN``  a Krylov recurrence denominator collapsed (BiCGSTAB ρ/ω)
+``STAGNATED``  no new best residual for ``stagnation_window`` iterations
+``DIVERGED``   residual grew ≥ ``divergence_factor`` × its best-so-far
+=============  =============================================================
+
+:class:`RecoveryPolicy` + :class:`RecoveryTrace` drive the bounded,
+logged escalation ladder (restart → method escalation → fp64 safe mode)
+run by :func:`repro.solver.api.solve`; :class:`NumericalFault` is the
+terminal signal — the service tier fails such requests fast and never
+retries them (a deterministic re-run would repoison).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+# -- outcome codes (int32 words carried through jitted loops) ---------------
+
+RUNNING = -1  # internal: loop still iterating (never escapes classify())
+CONVERGED = 0
+MAXITER = 1
+NAN_RESIDUAL = 2
+BREAKDOWN = 3
+STAGNATED = 4
+DIVERGED = 5
+
+OUTCOME_NAMES = (
+    "CONVERGED",
+    "MAXITER",
+    "NAN_RESIDUAL",
+    "BREAKDOWN",
+    "STAGNATED",
+    "DIVERGED",
+)
+
+#: hard numerical failures — anything here means the iterate is not to be
+#: trusted; MAXITER is "ran out of budget" and only escalates when the
+#: policy opts in (``RecoveryPolicy.on_maxiter``)
+FAILURES = (NAN_RESIDUAL, BREAKDOWN, STAGNATED, DIVERGED)
+
+#: below this magnitude a BiCGSTAB recurrence scalar (ρ, (r0, v)) counts as
+#: a serious breakdown: legit fp32 solves keep these ≥ ‖r‖²-scale (≫ 1e-25)
+#: right up to the tolerance exit
+BREAKDOWN_TINY = 1e-25
+
+
+def outcome_name(code) -> str:
+    """Python-side name for one outcome word."""
+    code = int(code)
+    if code == RUNNING:
+        return "RUNNING"
+    return OUTCOME_NAMES[code]
+
+
+def outcome_names(codes) -> np.ndarray:
+    """Vectorized :func:`outcome_name` — (steps,) or (steps, B) arrays."""
+    arr = np.asarray(codes)
+    return np.vectorize(outcome_name, otypes=["U12"])(arr)
+
+
+def is_failure(code, *, on_maxiter: bool = False) -> bool:
+    """True when this outcome word needs recovery (host-side, scalar)."""
+    code = int(code)
+    return code in FAILURES or (on_maxiter and code == MAXITER)
+
+
+def any_failure(codes, *, on_maxiter: bool = False) -> bool:
+    """True when any outcome in an array needs recovery (host-side)."""
+    return any(
+        is_failure(c, on_maxiter=on_maxiter) for c in np.asarray(codes).ravel()
+    )
+
+
+def worst(codes) -> int:
+    """Most severe outcome in an array (severity = taxonomy order)."""
+    severity = (MAXITER, STAGNATED, DIVERGED, BREAKDOWN, NAN_RESIDUAL)
+    flat = [int(c) for c in np.asarray(codes).ravel()]
+    for code in reversed(severity):
+        if code in flat:
+            return code
+    return CONVERGED
+
+
+# -- in-loop guard ----------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Thresholds for the in-loop divergence/stagnation windows.
+
+    Defaults are deliberately loose — a legitimate Krylov solve riding an
+    fp32 rounding floor must never trip them (BiCGSTAB residuals oscillate,
+    CG plateaus near tolerance); they exist to stop *hopeless* iterations
+    from burning the full ``maxiter`` budget.
+    """
+
+    divergence_factor: float = 1e4  # rr > factor × best-so-far ⇒ DIVERGED
+    stagnation_window: int = 200  # iterations without a new best ⇒ STAGNATED
+
+
+DEFAULT_GUARD = GuardConfig()
+
+
+def guard_init(rr):
+    """Initial guard carry for a loop observing residual scalar(s) ``rr``.
+
+    Works elementwise: a batched loop passes its (B,) per-member ``rr`` and
+    gets (B,) guard state.  Returns ``(status, best_rr, since_best)``.
+    """
+    shape = jnp.shape(rr)
+    status = jnp.full(shape, RUNNING, jnp.int32)
+    # a non-finite *entry* residual is classified at exit (the loop never
+    # runs); seed best with +inf so the comparisons below stay meaningful
+    best = jnp.where(jnp.isfinite(rr), rr, jnp.inf)
+    since = jnp.zeros(shape, jnp.int32)
+    return (status, best, since)
+
+
+def running(g):
+    """Loop-condition term: True while no lane has tripped."""
+    return jnp.all(g[0] == RUNNING)
+
+
+def guard_update(g, rr_new, *, breakdown=None, where=None, config=None):
+    """Advance the guard with this iteration's residual scalar(s).
+
+    Zero extra reductions: ``rr_new`` (and the optional ``breakdown``
+    predicate) are values the iteration already computed.  ``where`` masks
+    the update for batched loops — frozen members keep their word bitwise.
+    First failure wins: a tripped status never changes.
+    """
+    config = config or DEFAULT_GUARD
+    status, best, since = g
+    finite = jnp.isfinite(rr_new)
+    improved = finite & (rr_new < best)
+    since_new = jnp.where(improved, 0, since + 1).astype(jnp.int32)
+    diverged = finite & (rr_new > config.divergence_factor * best)
+    if config.stagnation_window > 0:
+        stagnated = since_new >= config.stagnation_window
+    else:
+        stagnated = jnp.zeros_like(finite)
+    # BREAKDOWN outranks the NaN it typically causes in the same iteration
+    # (the collapsed denominator is the diagnosis, the NaN the symptom)
+    cand = jnp.where(
+        breakdown if breakdown is not None else False,
+        BREAKDOWN,
+        jnp.where(
+            ~finite,
+            NAN_RESIDUAL,
+            jnp.where(diverged, DIVERGED, jnp.where(stagnated, STAGNATED, RUNNING)),
+        ),
+    ).astype(jnp.int32)
+    status_new = jnp.where(status == RUNNING, cand, status)
+    best_new = jnp.where(improved, rr_new, best)
+    if where is not None:
+        status_new = jnp.where(where, status_new, status)
+        best_new = jnp.where(where, best_new, best)
+        since_new = jnp.where(where, since_new, since)
+    return (status_new, best_new, since_new)
+
+
+def classify(g, rr, tol2):
+    """Final outcome word(s) at loop exit (elementwise over (B,) lanes).
+
+    Ordering is the safety contract: CONVERGED requires a *finite*
+    residual at or below tolerance — no path can label a non-finite answer
+    CONVERGED — then a tripped in-loop status (its diagnosis outranks the
+    generic NaN label it may have caused), then NAN_RESIDUAL for an
+    unclassified non-finite exit (e.g. poisoned entry state, where the
+    loop never ran), then MAXITER.
+    """
+    status = g[0]
+    finite = jnp.isfinite(rr)
+    converged = finite & (rr <= tol2)
+    return jnp.where(
+        converged,
+        CONVERGED,
+        jnp.where(
+            status != RUNNING,
+            status,
+            jnp.where(~finite, NAN_RESIDUAL, MAXITER),
+        ),
+    ).astype(jnp.int32)
+
+
+def classify_fixed(rr, tol2):
+    """Outcome word for a fixed-iteration method's end-of-run residual."""
+    finite = jnp.isfinite(rr)
+    return jnp.where(
+        ~finite, NAN_RESIDUAL, jnp.where(rr <= tol2, CONVERGED, MAXITER)
+    ).astype(jnp.int32)
+
+
+# -- recovery policies ------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """Bounded escalation ladder for failed solves.
+
+    Rungs run in order, each at most once (``max_restarts`` bounds the
+    same-method restart), every attempt logged in a :class:`RecoveryTrace`;
+    an exhausted ladder raises :class:`NumericalFault`.
+    """
+
+    max_restarts: int = 1  # same-method restart from the last iterate
+    escalate: bool = True  # cg/pipecg → bicgstab (handles asymmetry)
+    safe_mode_fp64: bool = True  # one fp64 re-solve as the last rung
+    detile_explicit: bool = True  # explicit plans: retry k=1, overlap off
+    on_maxiter: bool = False  # also escalate plain MAXITER exits
+
+
+@dataclasses.dataclass
+class RecoveryAttempt:
+    """One rung of the ladder: what ran and how it ended."""
+
+    method: str
+    dtype: str
+    outcome: str
+    iterations: int
+    residual: float
+    reason: str  # why this attempt ran ("initial", "restart after …", …)
+
+
+@dataclasses.dataclass
+class RecoveryTrace:
+    """Ordered log of every attempt a recovering solve made."""
+
+    attempts: List[RecoveryAttempt] = dataclasses.field(default_factory=list)
+
+    def record(self, method, dtype, outcome, iterations, residual, reason):
+        self.attempts.append(
+            RecoveryAttempt(
+                method=str(method),
+                dtype=str(dtype),
+                outcome=str(outcome),
+                iterations=int(iterations),
+                residual=float(residual),
+                reason=str(reason),
+            )
+        )
+
+    @property
+    def succeeded(self) -> bool:
+        return bool(self.attempts) and self.attempts[-1].outcome == "CONVERGED"
+
+    def summary(self) -> tuple:
+        """Compact per-attempt strings for stats/ticket surfaces."""
+        return tuple(
+            f"{a.reason}: {a.method}/{a.dtype} -> {a.outcome} "
+            f"({a.iterations} it, r={a.residual:.3e})"
+            for a in self.attempts
+        )
+
+
+class NumericalFault(RuntimeError):
+    """A solve or explicit run produced numerically untrustworthy state.
+
+    Raised when the recovery ladder is exhausted (implicit path) or an
+    ``isfinite`` sentinel trips (explicit path).  Deterministic re-execution
+    would repoison, so the service tier fails these fast and never retries.
+
+    Attributes: ``outcome`` (taxonomy name), ``step`` (time-step index for
+    explicit sentinels, else None), ``trace`` (:class:`RecoveryTrace` or
+    None), ``last_good`` (the last finite state, explicit path only).
+    """
+
+    def __init__(
+        self,
+        message: str,
+        *,
+        outcome: Optional[str] = None,
+        step: Optional[int] = None,
+        trace: Optional[RecoveryTrace] = None,
+        last_good=None,
+    ):
+        super().__init__(message)
+        self.outcome = outcome
+        self.step = step
+        self.trace = trace
+        self.last_good = last_good

@@ -26,6 +26,17 @@ callable approximating ``A⁻¹`` — ``wfa.solve(precondition="mg")`` passes a
 multigrid cycle from a zero guess); CG needs ``M`` symmetric positive
 definite, BiCGSTAB is preconditioned from the right so any fixed linear
 ``M`` works.
+
+Every method returns ``(x, iterations, ‖r‖, outcome)`` — the outcome is an
+int32 word from the :mod:`repro.solver.health` taxonomy (``CONVERGED`` /
+``MAXITER`` / ``NAN_RESIDUAL`` / ``BREAKDOWN`` / ``STAGNATED`` /
+``DIVERGED``), per member (shape ``(B,)``) for the batched variants.  The
+guard lives *inside* the ``while_loop`` carry at zero extra reductions: a
+NaN residual used to make ``rr > tol*tol`` False, silently exiting the
+loop and reporting the poisoned iterate as converged — now every exit is
+classified, and hopeless iterations (divergence, stagnation, BiCGSTAB
+breakdown) stop early instead of burning the ``maxiter`` budget.  Pass
+``guard=GuardConfig(...)`` to tune the windows.
 """
 
 from __future__ import annotations
@@ -34,6 +45,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.solver import health
 
 _TINY = 1e-30
 
@@ -53,6 +66,7 @@ def cg(
     maxiter: int = 500,
     M: Callable = None,
     dot2: Callable = None,
+    guard: health.GuardConfig = None,
 ):
     """Classic CG.  Two reductions per iteration: (p, Ap) and (r, r) — the
     paper's benchmarked bottleneck.
@@ -68,17 +82,19 @@ def cg(
     callers donate their entry buffers (``jax.jit(...,
     donate_argnums=...)``) so the whole iteration is allocation-free.
     """
+    guard = guard or health.DEFAULT_GUARD
     if M is None:
         r = b - A(x0)
         p = r
         rr = dot(r, r)
+        g0 = health.guard_init(rr)
 
         def cond(s):
-            x, r, p, rr, i = s
-            return (rr > tol * tol) & (i < maxiter)
+            x, r, p, rr, i, g = s
+            return health.running(g) & (rr > tol * tol) & (i < maxiter)
 
         def body(s):
-            x, r, p, rr, i = s
+            x, r, p, rr, i, g = s
             Ap = A(p)
             pAp = dot(p, Ap)  # reduction 1
             alpha = rr / pAp
@@ -87,10 +103,11 @@ def cg(
             rr_new = dot(r, r)  # reduction 2 (overlaps x-update)
             beta = rr_new / rr
             p = r + beta * p
-            return (x, r, p, rr_new, i + 1)
+            g = health.guard_update(g, rr_new, config=guard)
+            return (x, r, p, rr_new, i + 1, g)
 
-        x, r, p, rr, i = jax.lax.while_loop(cond, body, (x0, r, p, rr, 0))
-        return x, i, jnp.sqrt(rr)
+        x, r, p, rr, i, g = jax.lax.while_loop(cond, body, (x0, r, p, rr, 0, g0))
+        return x, i, jnp.sqrt(rr), health.classify(g, rr, tol * tol)
 
     if dot2 is None:
         dot2 = lambda a, b_, c, d: (dot(a, b_), dot(c, d))  # noqa: E731
@@ -98,13 +115,14 @@ def cg(
     z = M(r)
     p = z
     rz, rr = dot2(r, z, r, r)
+    g0 = health.guard_init(rr)
 
     def pcond(s):
-        x, r, p, rz, rr, i = s
-        return (rr > tol * tol) & (i < maxiter)
+        x, r, p, rz, rr, i, g = s
+        return health.running(g) & (rr > tol * tol) & (i < maxiter)
 
     def pbody(s):
-        x, r, p, rz, rr, i = s
+        x, r, p, rz, rr, i, g = s
         Ap = A(p)
         alpha = rz / _nonzero(dot(p, Ap))
         x = x + alpha * p
@@ -113,14 +131,24 @@ def cg(
         rz_new, rr_new = dot2(r, z, r, r)  # ONE fused reduction
         beta = rz_new / _nonzero(rz)
         p = z + beta * p
-        return (x, r, p, rz_new, rr_new, i + 1)
+        g = health.guard_update(g, rr_new, config=guard)
+        return (x, r, p, rz_new, rr_new, i + 1, g)
 
-    x, r, p, rz, rr, i = jax.lax.while_loop(pcond, pbody, (x0, r, p, rz, rr, 0))
-    return x, i, jnp.sqrt(rr)
+    x, r, p, rz, rr, i, g = jax.lax.while_loop(
+        pcond, pbody, (x0, r, p, rz, rr, 0, g0)
+    )
+    return x, i, jnp.sqrt(rr), health.classify(g, rr, tol * tol)
 
 
 def pipecg(
-    A: Callable, dot2: Callable, b, x0, *, tol: float = 1e-6, maxiter: int = 500
+    A: Callable,
+    dot2: Callable,
+    b,
+    x0,
+    *,
+    tol: float = 1e-6,
+    maxiter: int = 500,
+    guard: health.GuardConfig = None,
 ):
     """Ghysels–Vanroose pipelined CG: ONE fused reduction per iteration,
     overlapped with the next SpMV.
@@ -129,6 +157,7 @@ def pipecg(
     backends implement it as one ``psum`` of a length-2 vector, halving the
     Eq. 16 latency term; XLA then schedules ``n = A w`` while it completes.
     """
+    guard = guard or health.DEFAULT_GUARD
     r = b - A(x0)
     w_ = A(r)
     zero = jnp.zeros_like(b)
@@ -136,7 +165,7 @@ def pipecg(
     replace_every = 25  # periodic residual replacement (fp32 drift)
 
     def body2(s):
-        x, r, w_, z, p, sv, gamma_prev, alpha_prev, i, fresh = s
+        x, r, w_, z, p, sv, gamma_prev, alpha_prev, i, fresh, g = s
         gamma, delta = dot2(r, r, w_, r)  # fused reduction
         n = A(w_)  # overlapped SpMV
         beta = jnp.where(fresh, 0.0, gamma / gamma_prev)
@@ -163,12 +192,13 @@ def pipecg(
             r,
             w_,
         )
-        return (x, r, w_, z, p, sv, gamma, alpha, i + 1, do)
+        g = health.guard_update(g, gamma, config=guard)
+        return (x, r, w_, z, p, sv, gamma, alpha, i + 1, do, g)
 
     def cond2(s):
-        gamma_prev, i = s[6], s[8]
+        gamma_prev, i, g = s[6], s[8], s[10]
         # gamma_prev is ‖r‖² of the previous iterate (true rr0 at entry)
-        return (gamma_prev > tol * tol) & (i < maxiter)
+        return health.running(g) & (gamma_prev > tol * tol) & (i < maxiter)
 
     s0 = (
         x0,
@@ -181,11 +211,14 @@ def pipecg(
         jnp.asarray(1.0, rr0.dtype),  # alpha carries the dot's dtype
         jnp.asarray(0, jnp.int32),
         jnp.asarray(True),
+        health.guard_init(rr0),
     )
     out = jax.lax.while_loop(cond2, body2, s0)
-    x, i = out[0], out[8]
+    x, i, g = out[0], out[8], out[10]
+    # one extra reduction per *solve* (not per iteration): the recurred
+    # residual drifts, so classify on the recomputed true norm
     rr = dot2(out[1], out[1], out[1], out[1])[0]
-    return x, i, jnp.sqrt(rr)
+    return x, i, jnp.sqrt(rr), health.classify(g, rr, tol * tol)
 
 
 def bicgstab(
@@ -197,6 +230,7 @@ def bicgstab(
     tol: float = 1e-6,
     maxiter: int = 500,
     M: Callable = None,
+    guard: health.GuardConfig = None,
 ):
     """van der Vorst BiCGSTAB — matrix-free, no transpose applications.
 
@@ -208,7 +242,14 @@ def bicgstab(
     recurrence sees ``A∘M`` while the residual — and the stopping test —
     stay those of the original system; with ``M = None`` the applications
     reduce to the textbook method exactly.
+
+    Breakdown detection rides the scalars the recurrence already computes:
+    ``|ρ| ≤ tiny`` or ``|(r0, v)| ≤ tiny`` (the Lanczos/pivot breakdowns)
+    or a zero ω with an unconverged residual (the stabilizer stall) trips
+    ``BREAKDOWN`` — the standard cure is a restart from the current
+    iterate, which the recovery ladder applies.
     """
+    guard = guard or health.DEFAULT_GUARD
     if M is None:
         M = lambda v: v
     r = b - A(x0)
@@ -220,17 +261,18 @@ def bicgstab(
     one = jnp.asarray(1.0, rr.dtype)
 
     def cond(s):
-        rr, i = s[7], s[8]
-        return (rr > tol * tol) & (i < maxiter)
+        rr, i, g = s[7], s[8], s[9]
+        return health.running(g) & (rr > tol * tol) & (i < maxiter)
 
     def body(s):
-        x, r, p, v, rho, alpha, omega, rr, i = s
+        x, r, p, v, rho, alpha, omega, rr, i, g = s
         rho_new = dot(r0, r)
         beta = (rho_new / _nonzero(rho)) * (alpha / _nonzero(omega))
         p = r + beta * (p - omega * v)
         ph = M(p)
         v = A(ph)
-        alpha = rho_new / _nonzero(dot(r0, v))
+        r0v = dot(r0, v)
+        alpha = rho_new / _nonzero(r0v)
         sv = r - alpha * v
         sh = M(sv)
         t = A(sh)
@@ -240,12 +282,19 @@ def bicgstab(
         omega = jnp.where(tt > 0.0, dot(t, sv) / _nonzero(tt), 0.0)
         x = x + alpha * ph + omega * sh
         r = sv - omega * t
-        return (x, r, p, v, rho_new, alpha, omega, dot(r, r), i + 1)
+        rr_new = dot(r, r)
+        breakdown = (
+            (jnp.abs(rho_new) <= health.BREAKDOWN_TINY)
+            | (jnp.abs(r0v) <= health.BREAKDOWN_TINY)
+            | ((omega == 0.0) & (rr_new > tol * tol))
+        )
+        g = health.guard_update(g, rr_new, breakdown=breakdown, config=guard)
+        return (x, r, p, v, rho_new, alpha, omega, rr_new, i + 1, g)
 
-    s0 = (x0, r, zero_v, zero_v, one, one, one, rr, 0)
+    s0 = (x0, r, zero_v, zero_v, one, one, one, rr, 0, health.guard_init(rr))
     out = jax.lax.while_loop(cond, body, s0)
-    x, rr, i = out[0], out[7], out[8]
-    return x, i, jnp.sqrt(rr)
+    x, rr, i, g = out[0], out[7], out[8], out[9]
+    return x, i, jnp.sqrt(rr), health.classify(g, rr, tol * tol)
 
 
 def stationary(
@@ -256,13 +305,15 @@ def stationary(
     tol: float = 1e-6,
     maxiter: int = 100,
     ref2=None,
+    guard: health.GuardConfig = None,
 ):
     """Fixed-point iteration ``x ← step(x)`` with a residual-norm stop.
 
     The outer driver for ``method="mg"``: ``step`` is one V/W-cycle and
     ``rnorm2(x)`` the squared fine-level residual norm (whose ``dot`` owns
-    the all-reduce when sharded).  Returns ``(x, iterations, ‖r‖)`` like
-    the Krylov methods, so ``SolveInfo`` reporting is uniform.
+    the all-reduce when sharded).  Returns ``(x, iterations, ‖r‖,
+    outcome)`` like the Krylov methods, so ``SolveInfo`` reporting is
+    uniform.
 
     The stop is *relative* — ``‖r‖ ≤ tol·√ref2`` with ``ref2`` the squared
     norm of the right-hand side (falling back to the entry residual) —
@@ -273,6 +324,7 @@ def stationary(
     zero reference (all-zero RHS) also falls back to the entry residual so
     the loop cannot spin to ``maxiter`` on a solved system.
     """
+    guard = guard or health.DEFAULT_GUARD
     rr0 = rnorm2(x0)
     if ref2 is None:
         ref2 = rr0
@@ -280,16 +332,20 @@ def stationary(
         ref2 = jnp.where(ref2 > 0.0, ref2, rr0)
 
     def cond(s):
-        x, rr, i = s
-        return (rr > tol * tol * ref2) & (i < maxiter)
+        x, rr, i, g = s
+        return health.running(g) & (rr > tol * tol * ref2) & (i < maxiter)
 
     def body(s):
-        x, rr, i = s
+        x, rr, i, g = s
         x = step(x)
-        return (x, rnorm2(x), i + 1)
+        rr = rnorm2(x)
+        g = health.guard_update(g, rr, config=guard)
+        return (x, rr, i + 1, g)
 
-    x, rr, i = jax.lax.while_loop(cond, body, (x0, rr0, 0))
-    return x, i, jnp.sqrt(rr)
+    x, rr, i, g = jax.lax.while_loop(
+        cond, body, (x0, rr0, 0, health.guard_init(rr0))
+    )
+    return x, i, jnp.sqrt(rr), health.classify(g, rr, tol * tol * ref2)
 
 
 def chebyshev(
@@ -301,6 +357,7 @@ def chebyshev(
     *,
     iters: int = 500,
     dot: Callable = None,
+    tol: float = 0.0,
 ):
     """Reduction-free Chebyshev iteration — zero collectives per iteration.
 
@@ -309,6 +366,9 @@ def chebyshev(
     optional ``dot`` is used ONLY for the final residual report (one
     reduction per solve, not per iteration) — sharded callers pass their
     ``psum``-owning dot so the reported norm is global, not one brick's.
+    That same end-of-run residual classifies the outcome against ``tol``
+    (with the default ``tol=0.0`` a finite completion reports MAXITER —
+    "ran the budget" — which is the honest word for a fixed-count method).
     """
     theta = 0.5 * (lmax + lmin)
     delta = 0.5 * (lmax - lmin)
@@ -329,7 +389,7 @@ def chebyshev(
 
     x, r, d, rho = jax.lax.fori_loop(0, iters, body, (x, r, d, rho))
     rr = jnp.sum(r * r, dtype=jnp.float32) if dot is None else dot(r, r)
-    return x, iters, jnp.sqrt(rr)
+    return x, iters, jnp.sqrt(rr), health.classify_fixed(rr, tol * tol)
 
 
 # ---------------------------------------------------------------------------
@@ -353,24 +413,33 @@ def _bc(s, like):
     return s[(...,) + (None,) * (like.ndim - 1)]
 
 
-def cg_batched(A, dot, b, x0, *, tol: float = 1e-6, maxiter: int = 500):
+def cg_batched(
+    A, dot, b, x0, *, tol: float = 1e-6, maxiter: int = 500,
+    guard: health.GuardConfig = None,
+):
     """Classic CG over a (B, ...) stack; ``dot`` must reduce to (B,).
 
-    Returns ``(x, iterations, ‖r‖)`` with per-member (B,) iteration counts
-    and residual norms.  No preconditioner: the only M the frontend builds
-    (multigrid) is not batch-aware.
+    Returns ``(x, iterations, ‖r‖, outcomes)`` with per-member (B,)
+    iteration counts, residual norms and outcome words.  A poisoned member
+    (NaN residual) freezes immediately and reports ``NAN_RESIDUAL`` — it
+    can no longer masquerade as converged — while healthy members run on
+    bitwise-unperturbed (members never mix: dots reduce per member and the
+    operator does not couple the batch axis).  No preconditioner: the only
+    M the frontend builds (multigrid) is not batch-aware.
     """
+    guard = guard or health.DEFAULT_GUARD
     r = b - A(x0)
     p = r
     rr = dot(r, r)
     it0 = jnp.zeros(rr.shape, jnp.int32)
 
     def cond(s):
-        return jnp.any(s[3] > tol * tol) & (s[5] < maxiter)
+        rr, i, g = s[3], s[5], s[6]
+        return jnp.any((rr > tol * tol) & (g[0] == health.RUNNING)) & (i < maxiter)
 
     def body(s):
-        x, r, p, rr, it, i = s
-        active = rr > tol * tol
+        x, r, p, rr, it, i, g = s
+        active = (rr > tol * tol) & (g[0] == health.RUNNING)
         a4 = _bc(active, x)
         Ap = A(p)
         alpha = rr / _nonzero(dot(p, Ap))
@@ -380,22 +449,28 @@ def cg_batched(A, dot, b, x0, *, tol: float = 1e-6, maxiter: int = 500):
         beta = rr_new / _nonzero(rr)
         p = jnp.where(a4, r_new + _bc(beta, p) * p, p)
         r = jnp.where(a4, r_new, r)
+        g = health.guard_update(g, rr_new, where=active, config=guard)
         rr = jnp.where(active, rr_new, rr)
-        return (x, r, p, rr, it + active.astype(jnp.int32), i + 1)
+        return (x, r, p, rr, it + active.astype(jnp.int32), i + 1, g)
 
-    s0 = (x0, r, p, rr, it0, jnp.asarray(0, jnp.int32))
-    x, r, p, rr, it, _ = jax.lax.while_loop(cond, body, s0)
-    return x, it, jnp.sqrt(rr)
+    s0 = (x0, r, p, rr, it0, jnp.asarray(0, jnp.int32), health.guard_init(rr))
+    x, r, p, rr, it, _, g = jax.lax.while_loop(cond, body, s0)
+    return x, it, jnp.sqrt(rr), health.classify(g, rr, tol * tol)
 
 
-def pipecg_batched(A, dot2, b, x0, *, tol: float = 1e-6, maxiter: int = 500):
+def pipecg_batched(
+    A, dot2, b, x0, *, tol: float = 1e-6, maxiter: int = 500,
+    guard: health.GuardConfig = None,
+):
     """Pipelined CG over a (B, ...) stack; ``dot2`` reduces to two (B,)s.
 
     Same Ghysels–Vanroose recurrences as :func:`pipecg` run elementwise
     over the batch, including the periodic residual replacement (applied on
     the shared iteration clock, then masked so frozen members keep their
-    converged state bitwise).
+    converged state bitwise).  Per-member outcome words as in
+    :func:`cg_batched`.
     """
+    guard = guard or health.DEFAULT_GUARD
     r = b - A(x0)
     w_ = A(r)
     zero = jnp.zeros_like(b)
@@ -403,8 +478,8 @@ def pipecg_batched(A, dot2, b, x0, *, tol: float = 1e-6, maxiter: int = 500):
     replace_every = 25
 
     def body(s):
-        x, r, w_, z, p, sv, rr, alpha_prev, it, i, fresh = s
-        active = rr > tol * tol
+        x, r, w_, z, p, sv, rr, alpha_prev, it, i, fresh, g = s
+        active = (rr > tol * tol) & (g[0] == health.RUNNING)
         a4 = _bc(active, x)
         gamma, delta = dot2(r, r, w_, r)
         n = A(w_)  # overlapped SpMV
@@ -433,13 +508,15 @@ def pipecg_batched(A, dot2, b, x0, *, tol: float = 1e-6, maxiter: int = 500):
         sv = jnp.where(a4, sv_new, sv)
         # gamma is ‖r‖² *before* this update — the same one-iteration lag the
         # unbatched cond() has — so a member freezes one step after crossing
+        g = health.guard_update(g, gamma, where=active, config=guard)
         rr = jnp.where(active, gamma, rr)
         alpha_prev = jnp.where(active, alpha, alpha_prev)
         return (x, r, w_, z, p, sv, rr, alpha_prev,
-                it + active.astype(jnp.int32), i + 1, do)
+                it + active.astype(jnp.int32), i + 1, do, g)
 
     def cond(s):
-        return jnp.any(s[6] > tol * tol) & (s[9] < maxiter)
+        rr, i, g = s[6], s[9], s[11]
+        return jnp.any((rr > tol * tol) & (g[0] == health.RUNNING)) & (i < maxiter)
 
     s0 = (
         x0,
@@ -453,20 +530,26 @@ def pipecg_batched(A, dot2, b, x0, *, tol: float = 1e-6, maxiter: int = 500):
         jnp.zeros(rr0.shape, jnp.int32),
         jnp.asarray(0, jnp.int32),
         jnp.asarray(True),
+        health.guard_init(rr0),
     )
     out = jax.lax.while_loop(cond, body, s0)
-    x, it = out[0], out[8]
+    x, it, g = out[0], out[8], out[11]
     rr = dot2(out[1], out[1], out[1], out[1])[0]
-    return x, it, jnp.sqrt(rr)
+    return x, it, jnp.sqrt(rr), health.classify(g, rr, tol * tol)
 
 
-def bicgstab_batched(A, dot, b, x0, *, tol: float = 1e-6, maxiter: int = 500):
+def bicgstab_batched(
+    A, dot, b, x0, *, tol: float = 1e-6, maxiter: int = 500,
+    guard: health.GuardConfig = None,
+):
     """BiCGSTAB over a (B, ...) stack; ``dot`` must reduce to (B,).
 
     The ensemble workhorse: members may carry *different coefficients* (the
     operator reads per-member coefficient stacks), so each lane converges at
-    its own rate and freezes independently.
+    its own rate and freezes independently.  Per-member outcome words as in
+    :func:`cg_batched`, including per-member ρ/ω breakdown flags.
     """
+    guard = guard or health.DEFAULT_GUARD
     r = b - A(x0)
     r0 = r
     rr = dot(r, r)
@@ -474,17 +557,19 @@ def bicgstab_batched(A, dot, b, x0, *, tol: float = 1e-6, maxiter: int = 500):
     zero_v = jnp.zeros_like(b)
 
     def cond(s):
-        return jnp.any(s[7] > tol * tol) & (s[9] < maxiter)
+        rr, i, g = s[7], s[9], s[10]
+        return jnp.any((rr > tol * tol) & (g[0] == health.RUNNING)) & (i < maxiter)
 
     def body(s):
-        x, r, p, v, rho, alpha, omega, rr, it, i = s
-        active = rr > tol * tol
+        x, r, p, v, rho, alpha, omega, rr, it, i, g = s
+        active = (rr > tol * tol) & (g[0] == health.RUNNING)
         a4 = _bc(active, x)
         rho_new = dot(r0, r)
         beta = (rho_new / _nonzero(rho)) * (alpha / _nonzero(omega))
         p_new = r + _bc(beta, p) * (p - _bc(omega, v) * v)
         v_new = A(p_new)
-        alpha_new = rho_new / _nonzero(dot(r0, v_new))
+        r0v = dot(r0, v_new)
+        alpha_new = rho_new / _nonzero(r0v)
         sv = r - _bc(alpha_new, r) * v_new
         t = A(sv)
         tt = dot(t, t)
@@ -493,23 +578,41 @@ def bicgstab_batched(A, dot, b, x0, *, tol: float = 1e-6, maxiter: int = 500):
             a4, x + _bc(alpha_new, x) * p_new + _bc(omega_new, x) * sv, x
         )
         r_new = sv - _bc(omega_new, sv) * t
+        rr_new = dot(r_new, r_new)
+        breakdown = (
+            (jnp.abs(rho_new) <= health.BREAKDOWN_TINY)
+            | (jnp.abs(r0v) <= health.BREAKDOWN_TINY)
+            | ((omega_new == 0.0) & (rr_new > tol * tol))
+        )
         r = jnp.where(a4, r_new, r)
         p = jnp.where(a4, p_new, p)
         v = jnp.where(a4, v_new, v)
         rho = jnp.where(active, rho_new, rho)
         alpha = jnp.where(active, alpha_new, alpha)
         omega = jnp.where(active, omega_new, omega)
-        rr = jnp.where(active, dot(r_new, r_new), rr)
+        g = health.guard_update(
+            g, rr_new, breakdown=breakdown, where=active, config=guard
+        )
+        rr = jnp.where(active, rr_new, rr)
         return (x, r, p, v, rho, alpha, omega, rr,
-                it + active.astype(jnp.int32), i + 1)
+                it + active.astype(jnp.int32), i + 1, g)
 
     s0 = (x0, r, zero_v, zero_v, ones, ones, ones, rr,
-          jnp.zeros(rr.shape, jnp.int32), jnp.asarray(0, jnp.int32))
+          jnp.zeros(rr.shape, jnp.int32), jnp.asarray(0, jnp.int32),
+          health.guard_init(rr))
     out = jax.lax.while_loop(cond, body, s0)
-    return out[0], out[8], jnp.sqrt(out[7])
+    g = out[10]
+    return out[0], out[8], jnp.sqrt(out[7]), health.classify(g, out[7], tol * tol)
 
 
-def jacobi(step: Callable, x0, *, iters: int = 500):
+def jacobi(
+    step: Callable,
+    x0,
+    *,
+    iters: int = 500,
+    rnorm2: Callable = None,
+    tol: float = 0.0,
+):
     """Reduction-free Jacobi relaxation: ``x ← step(x)`` for ``iters`` steps.
 
     ``step`` is the damped update ``x + D⁻¹(b − A x)`` (with the Moat pinned
@@ -517,6 +620,20 @@ def jacobi(step: Callable, x0, *, iters: int = 500):
     converges — zero collectives per iteration and only one neighbour
     exchange, the cheapest member of the paper's "reduction-free implicit
     methods" family (Chebyshev converges faster per iteration).
+
+    With ``rnorm2`` (squared true-residual norm, e.g. ``‖b − A x‖²`` with a
+    ``psum``-owning dot when sharded) the end-of-run residual is reported
+    and classified — one extra operator application per *solve*, not per
+    iteration.  Without it the legacy contract holds (residual 0) and the
+    outcome falls back to a finiteness check on the iterate itself, so a
+    poisoned run still cannot masquerade as CONVERGED.
     """
     x = jax.lax.fori_loop(0, iters, lambda k, x: step(x), x0)
-    return x, iters, jnp.zeros(())
+    if rnorm2 is not None:
+        rr = rnorm2(x)
+        return x, iters, jnp.sqrt(rr), health.classify_fixed(rr, tol * tol)
+    finite = jnp.all(jnp.isfinite(x))
+    outcome = jnp.where(
+        finite, health.MAXITER, health.NAN_RESIDUAL
+    ).astype(jnp.int32)
+    return x, iters, jnp.zeros(()), outcome

@@ -51,6 +51,7 @@ def test_docs_tree_exists():
         "service.md",
         "ensembles.md",
         "adjoint.md",
+        "robustness.md",
     }
     assert required <= names, f"missing docs pages: {required - names}"
 

@@ -233,3 +233,44 @@ def test_shrink_plan_preserves_global_batch_semantics():
     # option B: smaller global batch with the LR rescale factor
     assert plan["keep_microbatches"]["global_batch"] == 32
     assert plan["keep_microbatches"]["lr_scale"] == pytest.approx(0.5)
+
+
+# -- numerical faults vs infrastructure faults --------------------------------
+
+
+def test_numerical_fault_fails_fast_never_retried():
+    """A poisoned solve fails deterministically: re-running it would only
+    repoison, so the worker fails the ticket on the first
+    ``NumericalFault`` with zero retries — while a transient injected
+    fault on the very same service still restores and completes."""
+    from repro.engine.health import NumericalFault
+    from repro.service import (
+        PlanSignature,
+        SimulationService,
+        SolveRequest,
+        StepRequest,
+    )
+
+    solve_sig = PlanSignature("btcs_heat", (8, 8, 6))
+    step_sig = PlanSignature("heat3d", (8, 8, 6))
+    svc = SimulationService(
+        workers=1, capacity=64, manifest=[solve_sig, step_sig],
+        default_chunk=2,
+    )
+    svc.start()
+    try:
+        poison = np.full(solve_sig.shape, np.nan, solve_sig.dtype)
+        t = svc.submit(SolveRequest(solve_sig, maxiter=40, init=poison))
+        with pytest.raises(NumericalFault) as exc:
+            t.result(timeout=300)
+        assert exc.value.outcome == "NAN_RESIDUAL"
+        assert t.stats.retries == 0  # fail fast: no retry budget burned
+        assert t.stats.outcome == "NAN_RESIDUAL"
+
+        req = StepRequest(step_sig, steps=4)
+        with FaultInjector(fail_at=[2], match_tag=req.request_id):
+            t2 = svc.submit(req)
+            t2.result(timeout=300)
+        assert t2.stats.retries == 1  # infrastructure faults still retry
+    finally:
+        svc.stop()

@@ -1,0 +1,404 @@
+"""Numerical health & recovery: guarded iterations, taxonomy, safe modes.
+
+The acceptance surface of the robustness PR:
+
+* no solver path — any method, any precision, sharded or batched — returns
+  a non-finite answer labeled ``CONVERGED``: seeded NaN/Inf injection lands
+  on ``NAN_RESIDUAL`` with the iteration index of first detection;
+* the in-loop guard word is pay-for-what-you-get: a healthy guarded run is
+  bitwise identical to the unguarded baseline (the guard adds **zero**
+  extra reductions), and the explicit-path sentinel amortizes its probes at
+  the checkpoint-chunk granule;
+* deterministic constructions trip every failure class: BiCGSTAB rho
+  breakdown (90° rotation), stagnation (identity fixed point), divergence
+  (doubling fixed point);
+* the recovery ladder is bounded and honest: each rung is logged in
+  ``RecoveryTrace``, the fp64 safe-mode rung genuinely widens (dots
+  included — the overflow construction converges at fp64 after fp32 fails),
+  and an exhausted ladder raises ``NumericalFault`` carrying the trace;
+* batched solves isolate poison per member: the sick member reports
+  ``NAN_RESIDUAL``, the healthy members converge bitwise-unperturbed;
+* the committed overhead benchmark stays inside the ≤2 % sentinel budget
+  with zero interpreter fallbacks.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro as wfa
+from repro.engine import reset_stats, stats
+from repro.solver import GuardConfig, NumericalFault, RecoveryPolicy
+from repro.solver import health, krylov
+from repro.solver.api import solve
+from repro.solver.presets import record_btcs
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+METHODS = ("cg", "pipecg", "bicgstab", "chebyshev", "jacobi")
+
+
+def run_py(code: str, devices: int = 1, x64: bool = False, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    if x64:
+        env["JAX_ENABLE_X64"] = "1"
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def poisoned_T0(shape=(8, 8, 6)):
+    T0 = np.full(shape, 500.0, np.float32)
+    T0[1:-1, 1:-1, 0] = 300.0
+    T0[shape[0] // 2, shape[1] // 2, shape[2] // 2] = np.nan
+    return T0
+
+
+def growth_program(n, init):
+    """n steps of T <- 4·T: finite inits stay finite, 1e38 overflows at
+    step 1 — a deterministic mid-run poisoning for the explicit sentinel."""
+    wse = wfa.WFAInterface()
+    T = wfa.Field("T", init_data=init)
+    with wfa.ForLoop("t", n):
+        T[:, 0, 0] = 4.0 * T[:, 0, 0]
+    return wse, T
+
+
+# -- taxonomy vocabulary ------------------------------------------------------
+
+
+def test_outcome_vocabulary():
+    assert health.outcome_name(health.CONVERGED) == "CONVERGED"
+    assert [health.outcome_name(c) for c in health.FAILURES] == [
+        "NAN_RESIDUAL", "BREAKDOWN", "STAGNATED", "DIVERGED"]
+    assert not health.is_failure(health.CONVERGED)
+    assert not health.is_failure(health.MAXITER)
+    assert health.any_failure(np.array([health.MAXITER]), on_maxiter=True)
+    # severity: a NaN outranks everything, MAXITER is the mildest word
+    codes = [health.MAXITER, health.STAGNATED, health.DIVERGED,
+             health.BREAKDOWN, health.NAN_RESIDUAL]
+    assert health.worst(np.array(codes)) == health.NAN_RESIDUAL
+    assert health.worst(np.array(codes[:2])) == health.STAGNATED
+    assert list(health.outcome_names(np.array([0, 2]))) == [
+        "CONVERGED", "NAN_RESIDUAL"]
+
+
+# -- deterministic failure constructions at the krylov level ------------------
+
+
+def _dot(a, b):
+    return jnp.sum(a * b, dtype=jnp.float32)
+
+
+def test_bicgstab_rho_breakdown():
+    """A 90° rotation with b ⟂ A·b: (r0, v) = 0 at the first step — the
+    textbook Lanczos breakdown, flagged as BREAKDOWN (not the NaN it would
+    cascade into)."""
+    A = jnp.asarray(np.array([[0.0, -1.0], [1.0, 0.0]], np.float32))
+    b = jnp.asarray(np.array([1.0, 0.0], np.float32))
+    x, it, rr, st = krylov.bicgstab(lambda v: A @ v, _dot, b,
+                                    jnp.zeros(2, jnp.float32),
+                                    tol=1e-10, maxiter=50)
+    assert health.outcome_name(int(st)) == "BREAKDOWN"
+    assert int(it) <= 2
+
+
+def test_stationary_stagnation_and_divergence():
+    rhs = jnp.asarray(np.array([1.0, 0.0], np.float32))
+    rnorm2 = lambda x: _dot(rhs - x, rhs - x)
+    # identity step: the residual never moves -> STAGNATED at the window
+    x, it, rr, st = krylov.stationary(lambda x: x, rnorm2,
+                                      jnp.zeros(2, jnp.float32),
+                                      tol=1e-12, maxiter=1000)
+    assert health.outcome_name(int(st)) == "STAGNATED"
+    assert int(it) == health.DEFAULT_GUARD.stagnation_window
+    # doubling step: the residual explodes -> DIVERGED long before maxiter
+    x, it, rr, st = krylov.stationary(
+        lambda x: 2.0 * x - rhs, rnorm2,
+        jnp.asarray(np.array([0.5, 0.0], np.float32)),
+        tol=1e-12, maxiter=1000)
+    assert health.outcome_name(int(st)) == "DIVERGED"
+    assert int(it) < 1000
+
+
+def test_cg_nan_rhs_detected_at_entry():
+    A = jnp.asarray(np.array([[2.0, 0.0], [0.0, 2.0]], np.float32))
+    bn = jnp.asarray(np.array([np.nan, 0.0], np.float32))
+    x, it, rr, st = krylov.cg(lambda v: A @ v, _dot, bn,
+                              jnp.zeros(2, jnp.float32), tol=1e-10, maxiter=50)
+    assert health.outcome_name(int(st)) == "NAN_RESIDUAL"
+    assert int(it) == 0
+
+
+def test_guard_config_knobs():
+    g = GuardConfig(divergence_factor=2.0, stagnation_window=3)
+    rhs = jnp.asarray(np.array([1.0, 0.0], np.float32))
+    rnorm2 = lambda x: _dot(rhs - x, rhs - x)
+    x, it, rr, st = krylov.stationary(lambda x: x, rnorm2,
+                                      jnp.zeros(2, jnp.float32),
+                                      tol=1e-12, maxiter=1000, guard=g)
+    assert health.outcome_name(int(st)) == "STAGNATED" and int(it) == 3
+
+
+# -- no path returns non-finite CONVERGED (every method) ----------------------
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_poisoned_solve_is_labeled(method):
+    wse, T = record_btcs(poisoned_T0(), 0.1)
+    x, info = solve(wse.program, T, method=method, tol=1e-6, maxiter=60,
+                    return_info=True, options=wfa.RunOptions(backend="jit"))
+    assert info.outcomes == ["NAN_RESIDUAL"]
+    assert not np.all(np.isfinite(x))  # honest: the answer really is sick
+    assert "CONVERGED" not in info.outcomes
+
+
+def test_healthy_solve_unaffected_by_guard():
+    """The guard rides the scalars the iteration already computes: healthy
+    solves still converge with the same residual story."""
+    wse, T = record_btcs(np.full((8, 8, 6), 400.0, np.float32), 0.1)
+    x, info = solve(wse.program, T, method="cg", tol=1e-6, maxiter=200,
+                    return_info=True, options=wfa.RunOptions(backend="jit"))
+    assert info.outcomes == ["CONVERGED"]
+    assert np.all(np.isfinite(x))
+
+
+def test_poisoned_solve_fp64_subprocess():
+    out = run_py("""
+import numpy as np
+import repro as wfa
+from repro.solver import record_btcs
+from repro.solver.api import solve
+T0 = np.full((8, 8, 6), 500.0, np.float64); T0[1:-1, 1:-1, 0] = 300.0
+T0[4, 4, 3] = np.inf
+wse, T = record_btcs(T0, 0.1)
+x, info = solve(wse.program, T, method="cg", tol=1e-10, maxiter=60,
+                return_info=True, options=wfa.RunOptions(backend="jit"))
+print(info.outcomes[0], np.all(np.isfinite(x)))
+""", x64=True)
+    assert out.split() == ["NAN_RESIDUAL", "False"]
+
+
+def test_poisoned_solve_sharded_subprocess():
+    """2x2 mesh: the in-loop guard word travels through the fused psum
+    reductions; recovery declines sharded solves with a single-attempt
+    trace instead of silently re-running."""
+    out = run_py("""
+import numpy as np
+import repro as wfa
+from repro.core.jaxcompat import make_mesh
+from repro.solver import record_btcs, NumericalFault, RecoveryPolicy
+from repro.solver.api import solve
+mesh = make_mesh((2, 2), ("x", "y"))
+T0 = np.full((8, 8, 6), 500.0, np.float32); T0[1:-1, 1:-1, 0] = 300.0
+T0[4, 4, 3] = np.nan
+wse, T = record_btcs(T0, 0.1)
+x, info = solve(wse.program, T, method="cg", tol=1e-6, maxiter=60,
+                return_info=True,
+                options=wfa.RunOptions(backend="jit", mesh=mesh))
+print(info.outcomes[0], np.all(np.isfinite(x)))
+wse2, T2 = record_btcs(T0, 0.1)
+try:
+    solve(wse2.program, T2, method="cg", tol=1e-6, maxiter=60,
+          options=wfa.RunOptions(backend="jit", mesh=mesh,
+                                 recovery=RecoveryPolicy()))
+    print("NO-RAISE")
+except NumericalFault as e:
+    print("FAULT", e.outcome, len(e.trace.attempts))
+""", devices=4)
+    lines = out.splitlines()
+    assert lines[0].split() == ["NAN_RESIDUAL", "False"]
+    assert lines[1].split() == ["FAULT", "NAN_RESIDUAL", "1"]
+
+
+def test_batched_poison_isolated_per_member():
+    """B=4 with one sick member: the poison is labeled on that member only
+    and the healthy members' answers are bitwise identical to an
+    all-healthy batch (masked freeze, no cross-member contamination)."""
+    T0 = np.full((8, 8, 6), 500.0, np.float32)
+    T0[1:-1, 1:-1, 0] = 300.0
+    stack = np.broadcast_to(T0, (4,) + T0.shape).copy()
+    stack[2, 4, 4, 3] = np.nan
+
+    wse, T = record_btcs(T0, 0.1)
+    xb, infob = solve(wse.program, T, method="cg", tol=1e-6, maxiter=300,
+                      return_info=True, member_env={"T": stack},
+                      options=wfa.RunOptions(backend="jit", batch=4))
+    wse2, T2 = record_btcs(T0, 0.1)
+    xr, infor = solve(wse2.program, T2, method="cg", tol=1e-6, maxiter=300,
+                      return_info=True,
+                      options=wfa.RunOptions(backend="jit", batch=4))
+
+    outs = np.asarray(infob.outcomes).ravel().tolist()
+    assert outs == ["CONVERGED", "CONVERGED", "NAN_RESIDUAL", "CONVERGED"]
+    assert not np.all(np.isfinite(xb[2]))
+    for i in (0, 1, 3):
+        assert np.array_equal(xb[i], xr[i])
+    # the sick member froze at detection, it did not spin to maxiter
+    assert int(np.asarray(infob.iterations).ravel()[2]) == 0
+
+
+# -- the recovery ladder ------------------------------------------------------
+
+
+def overflow_T0(shape=(10, 10, 6)):
+    """Amplitudes whose dots overflow fp32 (|b|^2 ~ 1e41·N > 3.4e38) but
+    sit comfortably inside fp64 — the fp32 attempt NaNs, fp64 converges."""
+    T0 = np.full(shape, 5.0e20, np.float32)
+    T0[1:-1, 1:-1, 0] = 3.0e20
+    return T0
+
+
+def test_recovery_ladder_reaches_fp64():
+    wse, T = record_btcs(overflow_T0(), 0.1)
+    reset_stats()
+    x, info = solve(wse.program, T, method="cg", tol=1e-6, maxiter=200,
+                    return_info=True,
+                    options=wfa.RunOptions(backend="jit",
+                                           recovery=RecoveryPolicy()))
+    trace = info.recovery
+    assert trace is not None and trace.succeeded
+    assert info.outcomes == ["CONVERGED"]
+    assert x.dtype == np.float32 and np.all(np.isfinite(x))
+    # the ladder is logged: fp32 cg -> fp32 bicgstab -> fp64 cg
+    assert [a.method for a in trace.attempts] == ["cg", "bicgstab", "cg"]
+    assert [a.dtype for a in trace.attempts] == [
+        "float32", "float32", "float64"]
+    assert [a.outcome for a in trace.attempts] == [
+        "NAN_RESIDUAL", "NAN_RESIDUAL", "CONVERGED"]
+    assert stats.recovery_attempts == 2
+    assert stats.numerical_faults == 0
+
+
+def test_recovery_exhausted_raises_with_trace():
+    """NaN in the state survives every rung (restart, escalation, fp64):
+    the ladder is bounded and terminates in a NumericalFault that carries
+    the full attempt log."""
+    wse, T = record_btcs(poisoned_T0(), 0.1)
+    reset_stats()
+    with pytest.raises(NumericalFault) as exc:
+        solve(wse.program, T, method="cg", tol=1e-6, maxiter=60,
+              options=wfa.RunOptions(backend="jit", recovery=RecoveryPolicy()))
+    e = exc.value
+    assert e.outcome == "NAN_RESIDUAL"
+    assert len(e.trace.attempts) == 3  # initial + escalate + fp64
+    assert not e.trace.succeeded
+    assert stats.numerical_faults == 1
+    assert "NAN_RESIDUAL" in stats.solve_outcomes
+
+
+def test_recovery_policy_off_rungs():
+    """Disarmed rungs stay disarmed: with everything off the first failure
+    is terminal after exactly one attempt."""
+    wse, T = record_btcs(poisoned_T0(), 0.1)
+    pol = RecoveryPolicy(max_restarts=0, escalate=False, safe_mode_fp64=False)
+    with pytest.raises(NumericalFault) as exc:
+        solve(wse.program, T, method="cg", tol=1e-6, maxiter=60,
+              options=wfa.RunOptions(backend="jit", recovery=pol))
+    assert len(exc.value.trace.attempts) == 1
+
+
+# -- explicit-path sentinels --------------------------------------------------
+
+
+def test_guarded_run_bitwise_parity_and_amortized_probes():
+    init = np.full((8, 8, 4), 1.0e-3, np.float32)
+    w1, T1 = growth_program(32, init)
+    ref = wfa.make(w1, T1, options=wfa.RunOptions(backend="jit"))
+    reset_stats()
+    w2, T2 = growth_program(32, init)
+    out = wfa.make(w2, T2,
+                   options=wfa.RunOptions(backend="jit", check_finite=8))
+    assert np.array_equal(ref, out)  # the sentinel never touches the math
+    # probes amortize at the chunk granule: entry + ~steps/every + final
+    assert stats.health_probes <= 32 // 8 + 2
+    assert stats.numerical_faults == 0
+
+
+def test_guarded_run_trips_with_last_good_state():
+    w, T = growth_program(32, np.full((8, 8, 4), 1.0e38, np.float32))
+    reset_stats()
+    with pytest.raises(NumericalFault) as exc:
+        wfa.make(w, T, options=wfa.RunOptions(backend="jit", check_finite=4))
+    e = exc.value
+    assert e.step == 4  # first probe after the step-1 overflow
+    assert e.last_good is not None
+    assert np.all(np.isfinite(e.last_good["T"]))  # rollback point is clean
+    assert stats.numerical_faults == 1
+
+
+def test_guarded_run_poisoned_entry_faults_at_step_zero():
+    bad = np.full((8, 8, 4), 1.0, np.float32)
+    bad[2, 2, 2] = np.nan
+    w, T = growth_program(8, bad)
+    with pytest.raises(NumericalFault) as exc:
+        wfa.make(w, T, options=wfa.RunOptions(backend="jit", check_finite=2))
+    assert exc.value.step == 0
+    assert exc.value.last_good is None  # nothing upstream was ever finite
+
+
+def test_numpy_backend_sentinel():
+    w, T = growth_program(32, np.full((8, 8, 4), 1.0e38, np.float32))
+    with np.errstate(over="ignore"):
+        with pytest.raises(NumericalFault) as exc:
+            wfa.make(w, T, options=wfa.RunOptions(backend="numpy",
+                                                  check_finite=4))
+    assert exc.value.step == 4
+
+
+def test_explicit_deescalation_retries_conservative_schedule():
+    """An aggressive plan (time-tiled) that trips the sentinel is retried
+    once at time_tile=1/overlap-off; a genuinely sick program still faults
+    after the single bounded retry."""
+    w, T = growth_program(32, np.full((8, 8, 4), 1.0e38, np.float32))
+    reset_stats()
+    with pytest.raises(NumericalFault):
+        wfa.make(w, T, options=wfa.RunOptions(backend="pallas",
+                                              check_finite=4, time_tile=4,
+                                              recovery=RecoveryPolicy()))
+    assert stats.recovery_attempts == 1
+    # both the tiled attempt and the conservative retry probed and faulted
+    assert stats.numerical_faults == 2
+
+
+def test_guarded_pallas_tiled_parity():
+    init = np.full((8, 8, 4), 1.0e-3, np.float32)
+    w1, T1 = growth_program(16, init)
+    ref = wfa.make(w1, T1, options=wfa.RunOptions(backend="pallas",
+                                                  time_tile=4))
+    w2, T2 = growth_program(16, init)
+    out = wfa.make(w2, T2, options=wfa.RunOptions(backend="pallas",
+                                                  time_tile=4,
+                                                  check_finite=8))
+    assert np.array_equal(ref, out)
+
+
+# -- the committed overhead budget -------------------------------------------
+
+
+def test_bench_health_budget():
+    """The committed benchmark run stays inside the sentinel budget: ≤2 %
+    per-step overhead at the default granule, zero interpreter fallbacks.
+    (The live gate re-runs this on CI via ``run.py --check-health``.)"""
+    import re
+
+    path = os.path.join(ROOT, "BENCH_health.json")
+    with open(path) as f:
+        data = json.load(f)
+    guarded = [r for r in data["rows"] if str(r["name"]).startswith("health_guard_on")]
+    assert guarded, data["rows"]
+    for row in data["rows"]:
+        m = re.search(r"fallbacks=(\d+)", str(row["derived"]))
+        assert m and int(m.group(1)) == 0, row
+    for row in guarded:
+        m = re.search(r"overhead_pct=(-?[\d.]+)", str(row["derived"]))
+        assert m, row
+        assert float(m.group(1)) <= 2.0, row
